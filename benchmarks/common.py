@@ -1,0 +1,54 @@
+"""Shared benchmark utilities. Every figure-module exposes run(scale) ->
+list[dict] rows; benchmarks.run prints them as `name,us_per_call,derived` CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_us(fn: Callable, *args, iters: int = 10, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter_ns() - t0)
+    return float(np.median(ts)) / 1e3
+
+
+def geomean(xs):
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
+
+
+def bench_suite(scale: str):
+    """Matrix suite used across figure benchmarks."""
+    from repro.core import matrices as M
+    if scale == "quick":
+        return [
+            ("banded_b3_1k", M.banded(1024, 3, 0)),
+            ("banded_b9_1k", M.banded(1024, 9, 0)),
+            ("tridiag_2k", M.tridiag(2048, 0)),
+            ("fdm27_8", M.fdm27(8, 8, 8)),
+            ("random_d02_1k", M.random_uniform(1024, 0.02, 0)),
+            ("powerlaw_1k", M.powerlaw(1024, 8, seed=0)),
+            ("block32_1k", M.block_random(1024, 32, 0.05, 0)),
+            ("diagnoise_2k", M.diag_plus_noise(2048, 128, 0)),
+        ]
+    return [
+        ("banded_b3_4k", M.banded(4096, 3, 0)),
+        ("banded_b9_4k", M.banded(4096, 9, 0)),
+        ("tridiag_8k", M.tridiag(8192, 0)),
+        ("fdm27_16", M.fdm27(16, 16, 16)),
+        ("fdm27_24", M.fdm27(24, 24, 24)),
+        ("random_d01_4k", M.random_uniform(4096, 0.01, 0)),
+        ("random_d05_2k", M.random_uniform(2048, 0.05, 0)),
+        ("powerlaw_4k", M.powerlaw(4096, 8, seed=0)),
+        ("block32_4k", M.block_random(4096, 32, 0.02, 0)),
+        ("diagnoise_8k", M.diag_plus_noise(8192, 256, 0)),
+    ]

@@ -1,0 +1,36 @@
+"""Fig. 3/7 analogue: distribution of the optimal format per implementation
+version over the matrix suite.
+
+Versions map: Plain -> jnp transliterations; Vendor(ArmPL analogue) -> XLA
+dense path; SVE analogue -> Pallas kernels. The paper's takeaway to
+reproduce: the optimal-format distribution SHIFTS with the implementation
+version (DIA becomes optimal for ~10% of matrices only under SVE).
+"""
+from collections import Counter
+
+from repro.core import autotune_spmv
+from .common import bench_suite
+
+VERSIONS = {
+    "plain": [("coo", "plain"), ("csr", "plain"), ("dia", "plain"),
+              ("ell", "plain"), ("sell", "plain")],
+    "vendor": [("coo", "dense"), ("csr", "dense"), ("dia", "dense"),
+               ("dense", "dense")],
+    "pallas": [("coo", "pallas"), ("csr", "plain"), ("dia", "pallas"),
+               ("ell", "pallas"), ("sell", "pallas")],
+}
+
+
+def run(scale="quick"):
+    suite = bench_suite(scale)
+    rows = []
+    for version, cands in VERSIONS.items():
+        wins = Counter()
+        for name, mat in suite:
+            res = autotune_spmv(mat, candidates=cands, iters=5, warmup=2)
+            wins[res.format] += 1
+        for fmt, count in sorted(wins.items()):
+            rows.append({"name": f"fig3/{version}/{fmt}",
+                         "us_per_call": 0.0,
+                         "derived": f"optimal_for={count}/{len(suite)}"})
+    return rows

@@ -1,0 +1,31 @@
+"""Fig. 4 analogue: per-format speedup of the optimised (Pallas, SVE
+analogue) SpMV over the Plain version, same format. Paper: avg 3.6x COO,
+~1x CSR, ~5x DIA on A64FX."""
+import jax
+
+from repro.core import from_dense, spmv
+from .common import bench_suite, geomean, time_us
+
+
+def run(scale="quick"):
+    suite = bench_suite(scale)
+    rows = []
+    for fmt in ["coo", "dia", "ell", "sell"]:
+        speedups, best = [], 0.0
+        for name, mat in suite:
+            try:
+                A = from_dense(mat, fmt)
+            except Exception:
+                continue
+            x = jax.numpy.ones((mat.shape[1],), jax.numpy.float32)
+            f_plain = jax.jit(lambda A, x: spmv(A, x, "plain"))
+            f_opt = jax.jit(lambda A, x: spmv(A, x, "pallas"))
+            t_p = time_us(f_plain, A, x)
+            t_k = time_us(f_opt, A, x)
+            speedups.append(t_p / t_k)
+            best = max(best, t_p / t_k)
+            rows.append({"name": f"fig4/{fmt}/{name}", "us_per_call": t_k,
+                         "derived": f"speedup_vs_plain={t_p/t_k:.2f}"})
+        rows.append({"name": f"fig4/{fmt}/GEOMEAN", "us_per_call": 0.0,
+                     "derived": f"geomean={geomean(speedups):.2f} max={best:.2f}"})
+    return rows

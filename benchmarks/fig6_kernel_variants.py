@@ -1,0 +1,41 @@
+"""Fig. 6c analogue: COO kernel variants, mirroring the FPGA study
+(naive vs HBM-optimised vs REDUCE-optimised):
+
+  scatter  : plain segment scatter-add (the 'naive' port)
+  onehot   : full-window one-hot MXU tiles (HBM/global-accumulate analogue)
+  scoo     : sliced COO + per-slice accumulation (the REDUCE/partial-
+             accumulator optimisation - same idea as LATENCY=8 unroll)
+
+Paper's finding to reproduce: the 'optimised' reduction is NOT uniformly
+better - it wins on some matrices and loses on others, motivating runtime
+switching."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import from_dense
+from repro.core.spmv import spmv
+from repro.kernels.coo_spmv import build_scoo, coo_spmv, scoo_spmv
+from .common import bench_suite, time_us
+
+
+def run(scale="quick"):
+    suite = bench_suite(scale)
+    rows = []
+    for name, mat in suite:
+        A = from_dense(mat, "coo")
+        n = mat.shape[0]
+        x = jnp.ones((mat.shape[1],), jnp.float32)
+        t_scatter = time_us(jax.jit(lambda A, x: spmv(A, x, "plain")), A, x)
+        ts = {"scatter": t_scatter}
+        if n <= 8192:
+            f_one = jax.jit(lambda r, c, v, x: coo_spmv(r, c, v, x, nrows=n))
+            ts["onehot"] = time_us(f_one, A.row, A.col, A.val, x)
+        rr, cc, vv, sid = build_scoo(A.row, A.col, A.val, n, slice_rows=512)
+        f_scoo = jax.jit(lambda r, c, v, s, x: scoo_spmv(r, c, v, s, x, nrows=n,
+                                                         slice_rows=512))
+        ts["scoo"] = time_us(f_scoo, jnp.asarray(rr), jnp.asarray(cc),
+                             jnp.asarray(vv), jnp.asarray(sid), x)
+        for variant, t in ts.items():
+            rows.append({"name": f"fig6/coo-{variant}/{name}", "us_per_call": t,
+                         "derived": f"speedup_vs_scatter={t_scatter/t:.2f}"})
+    return rows

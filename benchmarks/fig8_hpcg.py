@@ -1,0 +1,18 @@
+"""Fig. 8a analogue: Morpheus-enabled HPCG vs reference over problem sizes.
+(8b/8c distributed scaling runs under tests/test_distributed.py with 4 fake
+devices; here we keep the serial sweep that produced the paper's 5x DIA
+result.)"""
+from repro.apps.hpcg import run_hpcg
+
+
+def run(scale="quick"):
+    grids = [(8, 8, 8), (12, 12, 12)] if scale == "quick" else \
+            [(8, 8, 8), (16, 16, 16), (24, 24, 24), (32, 32, 32)]
+    rows = []
+    for g in grids:
+        res = run_hpcg(*g, iters=30, reps=2, verbose=False)
+        rows.append({"name": f"fig8/hpcg_{g[0]}x{g[1]}x{g[2]}",
+                     "us_per_call": res.opt_time_s * 1e6,
+                     "derived": (f"speedup={res.speedup:.2f} chosen={res.chosen} "
+                                 f"valid={res.valid}")})
+    return rows

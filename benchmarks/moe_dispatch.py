@@ -1,0 +1,30 @@
+"""Beyond-paper: MoE token dispatch as runtime-switchable SpMM (the Morpheus
+idea inside the LM). Compares the three dispatch implementations."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoECfg
+from repro.models import moe as moe_mod
+from .common import time_us
+
+
+def run(scale="quick"):
+    T, D = (512, 256) if scale == "quick" else (4096, 512)
+    cfg = ModelConfig(name="bench", family="moe", n_layers=1, d_model=D,
+                      n_heads=4, n_kv_heads=4, d_ff=4 * D, vocab=64,
+                      moe=MoECfg(n_experts=16, top_k=2, d_expert_ff=2 * D),
+                      remat="none")
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg, cfg.moe)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D), jnp.float32)
+    rows = []
+    base = None
+    for impl in ["sort", "onehot", "coo"]:
+        mcfg = dataclasses.replace(cfg.moe, dispatch_impl=impl)
+        f = jax.jit(lambda p, x, mcfg=mcfg: moe_mod.moe_ffn(p, x, cfg, mcfg)[0])
+        t = time_us(f, p, x, iters=5, warmup=2)
+        base = base or t
+        rows.append({"name": f"moe_dispatch/{impl}/T{T}xD{D}", "us_per_call": t,
+                     "derived": f"vs_sort={base/t:.2f}"})
+    return rows

@@ -1,0 +1,24 @@
+"""Dry-run roofline summary (one row per (arch x shape x mesh) JSON)."""
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(scale="quick"):
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "OK":
+            rows.append({"name": f"roofline/{f.stem}", "us_per_call": 0.0,
+                         "derived": d.get("status", "?")})
+            continue
+        r = d["roofline"]
+        rows.append({
+            "name": f"roofline/{f.stem}",
+            "us_per_call": r["t_bound_s"] * 1e6,
+            "derived": (f"bottleneck={r['bottleneck']} "
+                        f"tc={r['t_compute_s']:.4g} tm={r['t_memory_s']:.4g} "
+                        f"tx={r['t_collective_s']:.4g}"),
+        })
+    return rows

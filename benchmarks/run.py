@@ -1,0 +1,44 @@
+"""Run every paper-table/figure benchmark. Prints name,us_per_call,derived CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale quick|bench] [--only fig4]
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "fig3_format_distribution",
+    "fig4_optimized_vs_plain",
+    "fig5_formats_vs_csr",
+    "fig6_kernel_variants",
+    "fig8_hpcg",
+    "moe_dispatch",
+    "roofline_table",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="quick", choices=["quick", "bench"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    mods = [m for m in MODULES if args.only is None or args.only in m]
+    print("name,us_per_call,derived")
+    failed = 0
+    for m in mods:
+        try:
+            mod = importlib.import_module(f"benchmarks.{m}")
+            for row in mod.run(args.scale):
+                print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        except Exception:
+            failed += 1
+            print(f"{m},0.00,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: Morpheus-unleashed (cross-platform SpMV + dynamic formats) in JAX,
+embedded in a multi-pod training/serving framework. See DESIGN.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,143 @@
+"""Checkpointing: atomic, resumable, *elastic* (mesh-shape-agnostic restore).
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json   (tmp-dir + atomic rename)
+
+- save() snapshots to host (device_get) then writes; async=True moves the
+  write to a background thread (training continues during I/O).
+- restore() returns host arrays; restore_sharded() device_puts each leaf with
+  the sharding derived for the *current* mesh — a checkpoint written on mesh
+  A restores onto mesh B (elastic scaling) because the on-disk format is
+  always the full logical array.
+- keep_last trims old steps; manifest carries step/data-state/config-hash so
+  a resumed run can verify it is continuing the same experiment.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_k(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _k(p):
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(_k(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        want = tuple(leaf.shape)
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != {want}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def config_hash(cfg) -> str:
+    return hashlib.sha1(repr(cfg).encode()).hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep_last: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- save ----
+
+    def save(self, step: int, tree, meta: Optional[dict] = None, async_: bool = False):
+        flat = _flatten(tree)   # host snapshot taken synchronously (consistent)
+        meta = dict(meta or {}, step=int(step), time=time.time())
+        if async_:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, flat, meta)
+
+    def _write(self, step: int, flat, meta):
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **flat)
+        (tmp / "manifest.json").write_text(json.dumps(meta, indent=1))
+        final = self.dir / f"step_{step:09d}"
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)       # atomic publish
+        self._trim()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _trim(self):
+        steps = self.steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self.dir / f"step_{s:09d}", ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def manifest(self, step: Optional[int] = None) -> dict:
+        step = step if step is not None else self.latest_step()
+        return json.loads((self.dir / f"step_{step:09d}" / "manifest.json").read_text())
+
+    def restore(self, template, step: Optional[int] = None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        with np.load(self.dir / f"step_{step:09d}" / "arrays.npz") as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten_into(template, flat)
+
+    def restore_sharded(self, template, shardings, step: Optional[int] = None):
+        """Elastic restore: host arrays -> device_put with CURRENT-mesh
+        shardings (template/shardings may come from a different mesh shape
+        than the one that wrote the checkpoint)."""
+        host = self.restore(template, step)
+        return jax.tree_util.tree_map(
+            lambda a, s: jax.device_put(a, s) if s is not None else jax.device_put(a),
+            host, shardings)

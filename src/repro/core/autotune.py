@@ -1,0 +1,121 @@
+"""Run-first auto-tuner (paper §VII-D: "run-first auto-tuner ... finds the
+optimal format to use on every process").
+
+Given a matrix, convert it to each candidate (format, impl), time the jitted
+SpMV, and return the winner + the full timing table. This is deliberately
+measurement-based (not a learned oracle — that is the Morpheus-Oracle
+follow-up paper [35]); conversion cost is excluded, matching the paper's
+methodology of timing 100 SpMV iterations after setup.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .convert import from_dense as _from_dense
+from .spmv import available_impls, spmv
+
+DEFAULT_CANDIDATES: Tuple[Tuple[str, str], ...] = (
+    ("coo", "plain"), ("coo", "pallas"),
+    ("csr", "plain"),
+    ("dia", "plain"), ("dia", "pallas"),
+    ("ell", "plain"), ("ell", "pallas"),
+    ("sell", "plain"), ("sell", "pallas"),
+    ("dense", "dense"),
+)
+
+
+@dataclass
+class TuneResult:
+    format: str
+    impl: str
+    time_us: float
+    matrix: object
+    table: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    skipped: List[Tuple[str, str, str]] = field(default_factory=list)
+
+    def __repr__(self):
+        return f"TuneResult(format={self.format!r}, impl={self.impl!r}, {self.time_us:.1f}us)"
+
+
+def _time_call(fn, *args, iters: int = 10, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter_ns() - t0)
+    return float(np.median(ts)) / 1e3  # us
+
+
+def autotune_spmv(
+    a_dense,
+    candidates: Optional[Sequence[Tuple[str, str]]] = None,
+    iters: int = 10,
+    warmup: int = 3,
+    dia_max_diags: int = 512,
+    ell_max_width_factor: float = 4.0,
+    dtype=None,
+) -> TuneResult:
+    """Pick the fastest (format, impl) for ``a_dense`` on this backend.
+
+    Structural guards mirror Morpheus's practical limits: DIA is not built
+    when the matrix has too many distinct diagonals (memory blow-up — the
+    paper's FPGA section calls out exactly this), ELL when max row width
+    far exceeds the mean (power-law matrices).
+    """
+    import scipy.sparse as sp
+
+    s = a_dense if isinstance(a_dense, sp.spmatrix) else sp.csr_matrix(np.asarray(a_dense))
+    s = s.tocsr()
+    n = s.shape[1]
+    x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
+    x = jax.device_put(x)
+
+    counts = np.diff(s.indptr)
+    mean_w = max(1.0, counts.mean() if len(counts) else 1.0)
+    coo = s.tocoo()
+    ndiags = len(np.unique(coo.col.astype(np.int64) - coo.row.astype(np.int64)))
+
+    table: Dict[Tuple[str, str], float] = {}
+    skipped: List[Tuple[str, str, str]] = []
+    mats = {}
+    cand = tuple(candidates if candidates is not None else DEFAULT_CANDIDATES)
+    for fmt, impl in cand:
+        if fmt == "dia" and ndiags > dia_max_diags:
+            skipped.append((fmt, impl, f"ndiags={ndiags}>{dia_max_diags}"))
+            continue
+        if fmt == "ell" and len(counts) and counts.max() > ell_max_width_factor * mean_w + 8:
+            skipped.append((fmt, impl, f"max_row={counts.max()} >> mean={mean_w:.1f}"))
+            continue
+        if impl not in available_impls(fmt):
+            skipped.append((fmt, impl, "impl not registered"))
+            continue
+        if fmt not in mats:
+            kw = {"dtype": dtype} if dtype is not None else {}
+            mats[fmt] = _from_dense(s, fmt, **kw)
+        A = mats[fmt]
+        fn = jax.jit(lambda A, x, impl=impl: spmv(A, x, impl))
+        try:
+            table[(fmt, impl)] = _time_call(fn, A, x, iters=iters, warmup=warmup)
+        except Exception as e:  # pragma: no cover - impl-specific lowering gaps
+            skipped.append((fmt, impl, f"error: {type(e).__name__}"))
+
+    if not table:
+        raise RuntimeError("auto-tuner: no candidate succeeded")
+    (fmt, impl), t = min(table.items(), key=lambda kv: kv[1])
+    return TuneResult(fmt, impl, t, mats[fmt], table, skipped)
+
+
+def optimal_format_distribution(suite, candidates=None, **kw) -> Dict[str, str]:
+    """Fig. 3 / Fig. 7 analogue: winning format per matrix over a suite."""
+    out = {}
+    for name, mat in suite:
+        res = autotune_spmv(mat, candidates=candidates, **kw)
+        out[name] = f"{res.format}/{res.impl}"
+    return out

@@ -1,0 +1,154 @@
+"""Format conversions (Morpheus's ``convert`` / copy-constructor machinery).
+
+Conversions are host-side (numpy/scipy) — they play the role of
+``armpl_spmat_create_* + armpl_spmv_optimize``: a one-time setup cost that the
+registry caches behind a handle (see ``registry.py``), after which the
+device-side SpMV runs on the converted container.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense
+
+
+def _as_scipy(a) -> sp.csr_matrix:
+    if isinstance(a, sp.spmatrix):
+        return a.tocsr()
+    a = np.asarray(a)
+    return sp.csr_matrix(a)
+
+
+def from_dense(a, fmt: str, dtype=jnp.float32, **kw):
+    """Build a sparse container of format ``fmt`` from a dense/scipy matrix."""
+    builders = {
+        "coo": to_coo, "csr": to_csr, "dia": to_dia, "ell": to_ell,
+        "sell": to_sell, "bsr": to_bsr, "dense": to_densefmt,
+    }
+    return builders[fmt](a, dtype=dtype, **kw)
+
+
+def convert(A, fmt: str, **kw):
+    """Convert between any two containers (via dense on host; exactness only)."""
+    if A.format == fmt:
+        return A
+    return from_dense(np.asarray(A.to_dense()), fmt, dtype=A.dtype, **kw)
+
+
+def to_densefmt(a, dtype=jnp.float32):
+    a = np.asarray(a if not isinstance(a, sp.spmatrix) else a.toarray())
+    return Dense(jnp.asarray(a, dtype), tuple(a.shape))
+
+
+def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None):
+    s = _as_scipy(a).tocoo()
+    order = np.lexsort((s.col, s.row))  # row-major sort (Morpheus sorts too)
+    row, col, val = s.row[order], s.col[order], s.data[order]
+    if len(row) == 0:  # degenerate: keep one zero sentinel entry
+        row = np.array([s.shape[0]], np.int32)
+        col = np.array([0], np.int32)
+        val = np.array([0.0], np.float64)
+    if pad_to is not None:
+        pad = -len(row) % pad_to
+        row = np.concatenate([row, np.full(pad, s.shape[0], np.int32)])
+        col = np.concatenate([col, np.zeros(pad, np.int32)])
+        val = np.concatenate([val, np.zeros(pad, val.dtype)])
+    return COO(jnp.asarray(row, jnp.int32), jnp.asarray(col, jnp.int32),
+               jnp.asarray(val, dtype), tuple(s.shape))
+
+
+def to_csr(a, dtype=jnp.float32):
+    s = _as_scipy(a)
+    s.sort_indices()
+    indices, data = s.indices, s.data
+    if len(data) == 0:  # degenerate: one pad entry past indptr[-1] (sentinel row)
+        indices = np.array([0], np.int32)
+        data = np.array([0.0], np.float64)
+    return CSR(jnp.asarray(s.indptr, jnp.int32), jnp.asarray(indices, jnp.int32),
+               jnp.asarray(data, dtype), tuple(s.shape))
+
+
+def to_dia(a, dtype=jnp.float32):
+    s = _as_scipy(a).tocoo()
+    nrows, ncols = s.shape
+    offs = np.unique(s.col.astype(np.int64) - s.row.astype(np.int64))
+    if len(offs) == 0:
+        offs = np.array([0], np.int64)
+    data = np.zeros((len(offs), nrows), np.float64)
+    dmap = {int(o): i for i, o in enumerate(offs)}
+    for r, c, v in zip(s.row, s.col, s.data):
+        data[dmap[int(c) - int(r)], r] += v
+    return DIA(jnp.asarray(offs, jnp.int32), jnp.asarray(data, dtype), (nrows, ncols))
+
+
+def to_ell(a, dtype=jnp.float32, width: Optional[int] = None):
+    s = _as_scipy(a)
+    nrows, ncols = s.shape
+    counts = np.diff(s.indptr)
+    w = int(width if width is not None else (counts.max() if nrows else 0))
+    w = max(w, 1)
+    idx = np.full((nrows, w), -1, np.int32)
+    dat = np.zeros((nrows, w), np.float64)
+    for r in range(nrows):
+        lo, hi = s.indptr[r], min(s.indptr[r + 1], s.indptr[r] + w)
+        idx[r, : hi - lo] = s.indices[lo:hi]
+        dat[r, : hi - lo] = s.data[lo:hi]
+    return ELL(jnp.asarray(idx), jnp.asarray(dat, dtype), (nrows, ncols))
+
+
+def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64):
+    s = _as_scipy(a)
+    nrows, ncols = s.shape
+    counts = np.diff(s.indptr)
+    nrows_pad = -(-max(nrows, 1) // C) * C
+    perm = np.full(nrows_pad, nrows, np.int32)  # padding rows point past the end
+    rows = np.arange(nrows)
+    for w0 in range(0, nrows, sigma):  # sigma-window sort by descending nnz
+        win = rows[w0 : w0 + sigma]
+        perm[w0 : w0 + len(win)] = win[np.argsort(-counts[win], kind="stable")]
+    nslices = nrows_pad // C
+    widths = np.zeros(nslices, np.int64)
+    for sl in range(nslices):
+        rs = perm[sl * C : (sl + 1) * C]
+        widths[sl] = max(1, max((counts[r] for r in rs if r < nrows), default=1))
+    sptr = np.zeros(nslices + 1, np.int64)
+    np.cumsum(widths, out=sptr[1:])
+    total = int(sptr[-1]) * C
+    idx = np.full(total, -1, np.int32)
+    dat = np.zeros(total, np.float64)
+    for sl in range(nslices):
+        base = int(sptr[sl]) * C
+        for lane in range(C):
+            r = perm[sl * C + lane]
+            if r >= nrows:
+                continue
+            lo, hi = s.indptr[r], s.indptr[r + 1]
+            for j in range(hi - lo):
+                idx[base + j * C + lane] = s.indices[lo + j]
+                dat[base + j * C + lane] = s.data[lo + j]
+    return SELL(jnp.asarray(sptr, jnp.int32), jnp.asarray(idx), jnp.asarray(dat, dtype),
+                jnp.asarray(perm, jnp.int32), (nrows, ncols), C)
+
+
+def to_bsr(a, dtype=jnp.float32, bs: int = 32, bwidth: Optional[int] = None):
+    s = _as_scipy(a)
+    nrows, ncols = s.shape
+    nbrows, nbcols = -(-nrows // bs), -(-ncols // bs)
+    b = sp.bsr_matrix(s, blocksize=(bs, bs)) if nrows % bs == 0 and ncols % bs == 0 else None
+    if b is None:  # pad then re-block
+        pad = sp.csr_matrix((nbrows * bs, nbcols * bs), dtype=s.dtype)
+        pad[:nrows, :ncols] = s
+        b = sp.bsr_matrix(pad, blocksize=(bs, bs))
+    counts = np.diff(b.indptr)
+    w = int(bwidth if bwidth is not None else max(1, counts.max() if len(counts) else 1))
+    bcols = np.full((nbrows, w), -1, np.int32)
+    blocks = np.zeros((nbrows, w, bs, bs), np.float64)
+    for br in range(nbrows):
+        lo, hi = b.indptr[br], min(b.indptr[br + 1], b.indptr[br] + w)
+        bcols[br, : hi - lo] = b.indices[lo:hi]
+        blocks[br, : hi - lo] = b.data[lo:hi]
+    return BSR(jnp.asarray(bcols), jnp.asarray(blocks, dtype), (nrows, ncols))

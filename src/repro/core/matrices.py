@@ -1,0 +1,119 @@
+"""Synthetic matrix suite — offline proxy for the SuiteSparse collection.
+
+The paper evaluates >2100 SuiteSparse matrices. Offline we generate a labeled
+suite spanning the sparsity-pattern axes that drive format choice in the
+paper: bandedness (DIA country), row-regularity (ELL/CSR country), and
+unstructured scatter (COO country). Generators are deterministic in ``seed``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+import scipy.sparse as sp
+
+
+def banded(n: int, band: int = 3, seed: int = 0) -> sp.csr_matrix:
+    """Banded matrix with ``2*band+1`` dense diagonals (FDM-like)."""
+    rng = np.random.default_rng(seed)
+    diags = [rng.standard_normal(n) for _ in range(2 * band + 1)]
+    offsets = list(range(-band, band + 1))
+    return sp.diags(diags, offsets, shape=(n, n), format="csr")
+
+
+def tridiag(n: int, seed: int = 0) -> sp.csr_matrix:
+    return banded(n, 1, seed)
+
+
+def fdm27(nx: int, ny: int, nz: int) -> sp.csr_matrix:
+    """HPCG's 27-point stencil on an nx*ny*nz grid: 26 on the diagonal,
+    -1 for each of the up-to-26 neighbours (Dirichlet-style truncation)."""
+    n = nx * ny * nz
+    rows, cols, vals = [], [], []
+    def idx(i, j, k):
+        return i + nx * (j + ny * k)
+    for k in range(nz):
+        for j in range(ny):
+            for i in range(nx):
+                r = idx(i, j, k)
+                for dk in (-1, 0, 1):
+                    for dj in (-1, 0, 1):
+                        for di in (-1, 0, 1):
+                            ii, jj, kk = i + di, j + dj, k + dk
+                            if 0 <= ii < nx and 0 <= jj < ny and 0 <= kk < nz:
+                                c = idx(ii, jj, kk)
+                                rows.append(r)
+                                cols.append(c)
+                                vals.append(26.0 if c == r else -1.0)
+    return sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+
+
+def random_uniform(n: int, density: float = 0.01, seed: int = 0) -> sp.csr_matrix:
+    rng = np.random.default_rng(seed)
+    m = sp.random(n, n, density=density, random_state=rng, format="csr")
+    m.data = rng.standard_normal(len(m.data))
+    return m
+
+
+def powerlaw(n: int, avg_nnz: int = 8, alpha: float = 1.8, seed: int = 0) -> sp.csr_matrix:
+    """Power-law row lengths (graph-like; hostile to ELL, fine for CSR/COO)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(alpha, size=n).astype(np.float64)
+    lens = np.minimum((raw / raw.mean() * avg_nnz).astype(int) + 1, n)
+    rows = np.repeat(np.arange(n), lens)
+    cols = rng.integers(0, n, size=lens.sum())
+    vals = rng.standard_normal(lens.sum())
+    m = sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+    m.sum_duplicates()
+    return m
+
+
+def block_random(n: int, bs: int = 32, block_density: float = 0.05, seed: int = 0) -> sp.csr_matrix:
+    """Block-sparse (BSR country — MoE-dispatch-shaped)."""
+    rng = np.random.default_rng(seed)
+    nb = -(-n // bs)
+    mask = rng.random((nb, nb)) < block_density
+    mask[np.arange(nb), np.arange(nb)] = True
+    rows, cols, vals = [], [], []
+    for br, bc in zip(*np.nonzero(mask)):
+        blk = rng.standard_normal((bs, bs))
+        r0, c0 = br * bs, bc * bs
+        for i in range(min(bs, n - r0)):
+            for j in range(min(bs, n - c0)):
+                rows.append(r0 + i), cols.append(c0 + j), vals.append(blk[i, j])
+    return sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+
+
+def diag_plus_noise(n: int, noise_nnz: int = 64, seed: int = 0) -> sp.csr_matrix:
+    """Mostly-diagonal with a few scattered entries (DIA wins, barely)."""
+    rng = np.random.default_rng(seed)
+    m = sp.diags([rng.standard_normal(n)], [0], shape=(n, n)).tolil()
+    for _ in range(noise_nnz):
+        m[rng.integers(n), rng.integers(n)] = rng.standard_normal()
+    return m.tocsr()
+
+
+def suite(scale: str = "small") -> Iterator[Tuple[str, sp.csr_matrix]]:
+    """Labeled matrix collection. ``small`` for tests, ``bench`` for figures."""
+    if scale == "small":
+        sizes, grids = [64, 200], [(4, 4, 4)]
+        reps = 1
+    else:
+        sizes, grids = [512, 2048, 8192], [(16, 16, 16), (24, 24, 24)]
+        reps = 3
+    for s in sizes:
+        for r in range(reps):
+            yield f"banded_b3_n{s}_s{r}", banded(s, 3, seed=r)
+            yield f"banded_b9_n{s}_s{r}", banded(s, 9, seed=r)
+            yield f"tridiag_n{s}_s{r}", tridiag(s, seed=r)
+            yield f"random_d01_n{s}_s{r}", random_uniform(s, 0.01, seed=r)
+            yield f"random_d05_n{s}_s{r}", random_uniform(s, 0.05, seed=r)
+            yield f"powerlaw_n{s}_s{r}", powerlaw(s, seed=r)
+            yield f"block32_n{s}_s{r}", block_random(s, 32, seed=r)
+            yield f"diagnoise_n{s}_s{r}", diag_plus_noise(s, seed=r)
+    for g in grids:
+        yield f"fdm27_{g[0]}x{g[1]}x{g[2]}", fdm27(*g)
+
+
+def suite_dict(scale: str = "small") -> Dict[str, sp.csr_matrix]:
+    return dict(suite(scale))

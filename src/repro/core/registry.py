@@ -1,0 +1,79 @@
+"""Handle/workspace cache — the ArmPL integration pattern from paper §VI-A.
+
+ArmPL requires ``armpl_spmat_create -> hint -> optimize -> exec*N -> destroy``;
+Morpheus hides that behind a per-format Singleton workspace that re-uses the
+handle across SpMV calls on the same matrix. Our analogue caches the
+*converted container* and the *jitted executable* keyed by a cheap structural
+fingerprint, so repeated ``spmv_cached`` calls on the same logical matrix pay
+conversion + compilation once.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .convert import from_dense as _from_dense
+from .spmv import spmv
+
+
+class SpmvWorkspace:
+    """Singleton-per-process workspace (paper Table I machinery)."""
+
+    def __init__(self, max_entries: int = 64):
+        self._mats: Dict[str, object] = {}
+        self._fns: Dict[Tuple[str, str, str], object] = {}
+        self._max = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def fingerprint(a) -> str:
+        import scipy.sparse as sp
+
+        if isinstance(a, sp.spmatrix):
+            s = a.tocsr()
+            h = hashlib.sha1()
+            h.update(np.int64(s.shape[0]).tobytes() + np.int64(s.shape[1]).tobytes())
+            h.update(np.asarray(s.indptr[:: max(1, len(s.indptr) // 64)]).tobytes())
+            h.update(np.asarray(s.data[:: max(1, len(s.data) // 64)]).tobytes())
+            return h.hexdigest()
+        a = np.asarray(a)
+        return hashlib.sha1(a.tobytes()).hexdigest()
+
+    def get_matrix(self, a, fmt: str, **kw):
+        key = f"{self.fingerprint(a)}:{fmt}:{sorted(kw.items())}"
+        if key not in self._mats:
+            self.misses += 1
+            if len(self._mats) >= self._max:
+                self._mats.pop(next(iter(self._mats)))
+            self._mats[key] = _from_dense(a, fmt, **kw)
+        else:
+            self.hits += 1
+        return self._mats[key]
+
+    def get_fn(self, fmt: str, impl: str):
+        key = (fmt, impl, "spmv")
+        if key not in self._fns:
+            self._fns[key] = jax.jit(lambda A, x: spmv(A, x, impl))
+        return self._fns[key]
+
+    def spmv(self, a, x, fmt: str = "csr", impl: str = "plain", **kw):
+        A = self.get_matrix(a, fmt, **kw)
+        return self.get_fn(fmt, impl)(A, x)
+
+
+_WORKSPACE: Optional[SpmvWorkspace] = None
+
+
+def workspace() -> SpmvWorkspace:
+    global _WORKSPACE
+    if _WORKSPACE is None:
+        _WORKSPACE = SpmvWorkspace()
+    return _WORKSPACE
+
+
+def spmv_cached(a, x, fmt: str = "csr", impl: str = "plain", **kw):
+    return workspace().spmv(a, x, fmt, impl, **kw)

@@ -1,0 +1,164 @@
+"""SpMV dispatch + the 'Plain' (pure-jnp transliteration) implementations.
+
+Morpheus dispatches one implementation per (algorithm, backend) at compile
+time; here the registry key is ``(format, impl)`` and the jit cache plays the
+role of the compile-time dispatch. ``impl`` names mirror the paper's versions:
+
+  - ``plain``  : straightforward jnp transliterations of Algorithms 1-3
+                 (what the compiler gives you)
+  - ``dense``  : densify + XLA matmul (the vendor-library / ArmPL analogue)
+  - ``pallas`` : hand-tiled TPU kernels (the SVE-intrinsics analogue),
+                 registered lazily by ``repro.kernels.ops``
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_spmv(fmt: str, impl: str):
+    def deco(fn):
+        _REGISTRY[(fmt, impl)] = fn
+        return fn
+    return deco
+
+
+def available_impls(fmt: str):
+    _ensure_pallas()
+    return tuple(sorted(i for (f, i) in _REGISTRY if f == fmt))
+
+
+_PALLAS_LOADED = False
+
+
+def _ensure_pallas():
+    global _PALLAS_LOADED
+    if not _PALLAS_LOADED:
+        from repro.kernels import ops  # noqa: F401  registers (fmt, "pallas")
+        _PALLAS_LOADED = True
+
+
+def spmv(A, x: jnp.ndarray, impl: str = "plain") -> jnp.ndarray:
+    """y = A @ x with the chosen implementation. Shape: (ncols,) -> (nrows,)."""
+    if impl == "pallas":
+        _ensure_pallas()
+    key = (A.format, impl)
+    if key not in _REGISTRY:
+        raise KeyError(f"no SpMV registered for {key}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[key](A, x)
+
+
+# ---------------------------------------------------------------- plain ----
+
+@register_spmv("coo", "plain")
+def coo_spmv_plain(A: COO, x):
+    """Algorithm 1: y[ai[i]] += av[i] * x[aj[i]] (segment scatter-add)."""
+    nrows = A.shape[0]
+    prod = A.val * x[A.col]
+    y = jnp.zeros((nrows + 1,), prod.dtype)  # +1 bucket absorbs pad sentinels
+    return y.at[A.row].add(prod)[:nrows]
+
+
+@register_spmv("csr", "plain")
+def csr_spmv_plain(A: CSR, x):
+    """Algorithm 2 via indptr expansion (rowptr walk, vectorised)."""
+    nrows = A.shape[0]
+    prod = A.data * x[A.indices]
+    y = jnp.zeros((nrows + 1,), prod.dtype)
+    return y.at[A.row_ids()].add(prod)[:nrows]
+
+
+@register_spmv("dia", "plain")
+def dia_spmv_plain(A: DIA, x):
+    """Algorithm 3: inner loop over diagonals, rows vectorised (the paper's
+    outer-loop vectorisation — contiguous loads of av along i, shifted dense
+    loads of x, no horizontal reduction)."""
+    nrows, ncols = A.shape
+    i = jnp.arange(nrows, dtype=jnp.int32)
+
+    def body(d, y):
+        k = i + A.offsets[d]
+        valid = (k >= 0) & (k < ncols)
+        xk = x[jnp.clip(k, 0, ncols - 1)]
+        return y + jnp.where(valid, A.data[d] * xk, 0)
+
+    return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), A.dtype))
+
+
+@register_spmv("ell", "plain")
+def ell_spmv_plain(A: ELL, x):
+    valid = A.indices >= 0
+    xk = x[jnp.where(valid, A.indices, 0)]
+    return jnp.sum(jnp.where(valid, A.data * xk, 0), axis=1)
+
+
+@register_spmv("sell", "plain")
+def sell_spmv_plain(A: SELL, x):
+    nrows = A.shape[0]
+    rows = A.entry_rows()
+    valid = A.indices >= 0
+    prod = jnp.where(valid, A.data * x[jnp.where(valid, A.indices, 0)], 0)
+    y = jnp.zeros((nrows + 1,), prod.dtype)
+    return y.at[jnp.minimum(rows, nrows)].add(prod)[:nrows]
+
+
+@register_spmv("bsr", "plain")
+def bsr_spmv_plain(A: BSR, x):
+    nrows, ncols = A.shape
+    bs = A.bs
+    nbcols = -(-ncols // bs)
+    xp = jnp.zeros((nbcols * bs,), x.dtype).at[:ncols].set(x)
+    xb = xp.reshape(nbcols, bs)
+    valid = (A.bcols >= 0)[..., None]
+    xg = jnp.where(valid, xb[jnp.where(A.bcols >= 0, A.bcols, 0)], 0)  # (nbr, w, bs)
+    y = jnp.einsum("rwij,rwj->ri", A.blocks, xg).reshape(-1)
+    return y[:nrows]
+
+
+@register_spmv("dense", "plain")
+@register_spmv("dense", "dense")
+def dense_spmv(A: Dense, x):
+    return A.data @ x
+
+
+# ------------------------------------------------------- dense fallback ----
+
+def _via_dense(A, x):
+    return A.to_dense() @ x
+
+
+for _fmt in ("coo", "csr", "dia", "ell", "sell", "bsr"):
+    _REGISTRY[(_fmt, "dense")] = _via_dense
+
+
+# ------------------------------------------------------------------ SpMM ----
+
+def spmm(A, X: jnp.ndarray, impl: str = "plain") -> jnp.ndarray:
+    """Sparse @ dense-matrix — vmapped SpMV except where a native impl exists
+    (BSR has a true MXU SpMM kernel; that is the point of the format)."""
+    if impl == "pallas":
+        _ensure_pallas()
+        key = (A.format, "pallas_spmm")
+        if key in _REGISTRY:
+            return _REGISTRY[key](A, X)
+    if A.format == "bsr" and impl in ("plain", "dense"):
+        return _bsr_spmm_plain(A, X)
+    return jax.vmap(lambda col: spmv(A, col, impl), in_axes=1, out_axes=1)(X)
+
+
+def _bsr_spmm_plain(A: BSR, X):
+    nrows, ncols = A.shape
+    bs, nf = A.bs, X.shape[1]
+    nbcols = -(-ncols // bs)
+    Xp = jnp.zeros((nbcols * bs, nf), X.dtype).at[:ncols].set(X)
+    Xb = Xp.reshape(nbcols, bs, nf)
+    valid = (A.bcols >= 0)[..., None, None]
+    Xg = jnp.where(valid, Xb[jnp.where(A.bcols >= 0, A.bcols, 0)], 0)  # (nbr,w,bs,nf)
+    Y = jnp.einsum("rwij,rwjf->rif", A.blocks, Xg).reshape(-1, nf)
+    return Y[:nrows]

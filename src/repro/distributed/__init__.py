@@ -1,0 +1,3 @@
+from .sharding import (DEFAULT_RULES, axes_for_path, logical_constraint,
+                       named_sharding, params_pspecs, params_shardings,
+                       sharding_context, spec_for)

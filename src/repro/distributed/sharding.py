@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Megatron-style mapping onto the production mesh (pod, data, model):
+
+  logical axis     mesh axes      used by
+  ------------     ----------     ---------------------------------
+  batch            (pod, data)    activations, token inputs
+  vocab            model          embedding table, lm head, logits
+  heads_out        model          fused q/k/v out dim (column parallel)
+  attn_in          model          o-projection in dim (row parallel)
+  ffn_hidden       model          mlp gate/up out, down in
+  experts          model          MoE expert dim (EP merged into TP axis)
+  expert_cap       data           MoE capacity dim (token parallel)
+  seq_kv           data           KV-cache / sequence dim when batch < data
+  stack            None           scan-over-layers leading dim
+
+**Divisibility fallback** (paper-relevant: qwen1.5's 20 heads vs model=16):
+``spec_for`` drops any mesh axis that does not divide the corresponding dim
+(replicating that dim instead) — the sharding never fails to apply, it only
+degrades, and the dry-run records what was actually sharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axis names (tried in order, all that divide)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "heads_out": ("model",),
+    "attn_in": ("model",),
+    "ffn_hidden": ("model",),
+    "experts": ("model",),
+    "expert_cap": ("data",),
+    "seq_kv": ("data",),
+    "seq_act": ("model",),   # Megatron-SP residual sequence sharding
+    "embed": (),
+    "stack": (),
+    None: (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules=None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Optional[Mesh] = None, rules=None) -> P:
+    """PartitionSpec for an array of ``shape`` with logical ``axes``.
+
+    Drops mesh axes that are absent from the mesh or do not divide the dim.
+    """
+    mesh = mesh or _CTX.mesh
+    rules = {**_CTX.rules, **(rules or {})}
+    if mesh is None:
+        return P()
+    out = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        cands = rules.get(ax, ()) if ax else ()
+        picked = []
+        prod = 1
+        for m in cands:
+            if m in mesh.shape and m not in used and dim % (prod * mesh.shape[m]) == 0:
+                picked.append(m)
+                prod *= mesh.shape[m]
+        for m in picked:
+            used.add(m)
+        out.append(tuple(picked) if len(picked) > 1 else (picked[0] if picked else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def named_sharding(shape, axes, mesh=None, rules=None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))
+
+
+def logical_constraint(x, axes, mesh=None, rules=None):
+    """with_sharding_constraint via logical axes; no-op outside a mesh ctx."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# --------------------------------------------------- param path -> axes ----
+# Rules matched in order against 'a/b/c' param paths (first match wins).
+
+PARAM_AXES_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # scanned stacks get a leading 'stack' axis — handled dynamically by rank.
+    (r".*embed$", ("vocab", "embed")),
+    (r".*lm_head$", ("embed", "vocab")),
+    (r".*router$", ("embed", None)),
+    (r".*experts/w_gate$", ("experts", "embed", "ffn_hidden")),
+    (r".*experts/w_up$", ("experts", "embed", "ffn_hidden")),
+    (r".*experts/w_down$", ("experts", "ffn_hidden", "embed")),
+    (r".*(wq|wk|wv)$", ("embed", "heads_out")),
+    (r".*(bq|bk|bv)$", ("heads_out",)),
+    (r".*wo$", ("attn_in", "embed")),
+    (r".*w_gate$", ("embed", "ffn_hidden")),
+    (r".*w_up$", ("embed", "ffn_hidden")),
+    (r".*w_down$", ("ffn_hidden", "embed")),
+    (r".*b_up$", ("ffn_hidden",)),
+    (r".*(in_proj|x_proj|out_proj|dt_proj)$", ("embed", "ffn_hidden")),  # mamba
+    (r".*(tm_[rkvgw]|cm_[rkv])$", ("embed", "ffn_hidden")),              # rwkv
+    (r".*(wq_a|wkv_a)$", ("embed", None)),                               # mla lora down
+    (r".*(wq_b|wkv_b)$", (None, "heads_out")),                           # mla lora up
+    (r".*", ()),  # default: replicate
+)
+
+
+def axes_for_path(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    for pat, axes in PARAM_AXES_RULES:
+        if re.fullmatch(pat, path):
+            axes = tuple(axes)
+            if len(axes) < ndim:  # scanned stacks: pad leading dims with None
+                axes = (None,) * (ndim - len(axes)) + axes
+            elif len(axes) > ndim:
+                axes = axes[-ndim:] if ndim else ()
+            return axes
+    return (None,) * ndim
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def params_pspecs(params_shapes, mesh: Mesh, rules=None):
+    """PartitionSpec pytree for a params pytree (arrays or ShapeDtypeStructs)."""
+    def one(path, leaf):
+        axes = axes_for_path(_path_str(path), len(leaf.shape))
+        return spec_for(leaf.shape, axes, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def params_shardings(params_shapes, mesh: Mesh, rules=None):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        params_pspecs(params_shapes, mesh, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the SpMV hot-spots (validated interpret=True on CPU).
+
+Importing ``repro.kernels.ops`` registers the 'pallas' implementation of each
+format into the repro.core dispatch registry.
+"""

@@ -1,0 +1,162 @@
+"""COO SpMV Pallas kernel — the paper's same-row accumulation on the MXU.
+
+Paper (§IV): the SVE COO kernel masks lanes whose ``ai`` equals ``ai(i)``
+(``svcmpeq``), tree-reduces their products (``svaddv``) and issues a single
+accumulation into ``y`` — i.e. *combine same-row products before writing*.
+
+TPU has no scatter; the systolic-array translation is: for a tile of T
+(row-sorted) entries, form the products p = av * x[aj] and contract them with
+a one-hot row matrix in one matvec:
+
+    y_window += onehot(rows - w0).T @ p        # (RW x T) @ (T,) on the MXU
+
+The one-hot contraction *is* the ``svcmpeq`` mask — for every window row at
+once — and the matvec is the tree reduction. The window w0 is the tile's
+first row (rows are sorted, Morpheus guarantees sortedness before SpMV);
+cross-tile carries are safe because the TPU grid is sequential per core, so
+the read-modify-write on the resident y block never races.
+
+Two windowing modes (ops.py picks):
+  - full  : RW = nrows_pad (jit-friendly: no value-dependent shapes) — for
+            matrices up to a few thousand rows the whole y fits VMEM.
+  - sliced: entries pre-bucketed per row-slice (SCOO layout) so RW is the
+            static slice height; used by the workspace/handle path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_full(x_ref, row_ref, col_ref, val_ref, y_ref, *, tile: int, rw: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    rows = row_ref[...]
+    cols = col_ref[...]
+    vals = val_ref[...].astype(jnp.float32)
+    x = x_ref[...]
+    prod = vals * jnp.take(x, cols, axis=0).astype(jnp.float32)   # (T,)
+    # svcmpeq for all window rows at once: one-hot (T, RW) then MXU contract.
+    onehot = (rows[:, None] == jax.lax.broadcasted_iota(jnp.int32, (tile, rw), 1))
+    contrib = jnp.einsum("tr,t->r", onehot.astype(jnp.float32), prod)
+    y_ref[...] += contrib.astype(y_ref.dtype)
+
+
+def _kernel_sliced(slice_ids_ref, x_ref, row_ref, col_ref, val_ref, y_ref,
+                   *, tile: int, rw: int):
+    rows = row_ref[...]
+    cols = col_ref[...]
+    vals = val_ref[...].astype(jnp.float32)
+    t = pl.program_id(0)
+    w0 = slice_ids_ref[t] * rw
+    x = x_ref[...]
+    prod = vals * jnp.take(x, cols, axis=0).astype(jnp.float32)
+    local = rows - w0
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (tile, rw), 1))
+    contrib = jnp.einsum("tr,t->r", onehot.astype(jnp.float32), prod)
+
+    prev = slice_ids_ref[jnp.maximum(t - 1, 0)]
+    fresh = (t == 0) | (prev != slice_ids_ref[t])
+
+    @pl.when(fresh)
+    def _init():
+        y_ref[...] = contrib.astype(y_ref.dtype)
+
+    @pl.when(jnp.logical_not(fresh))
+    def _acc():
+        y_ref[...] += contrib.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nrows", "tile", "interpret"))
+def coo_spmv(row: jnp.ndarray, col: jnp.ndarray, val: jnp.ndarray, x: jnp.ndarray,
+             nrows: int, tile: int = 512, interpret: bool | None = None) -> jnp.ndarray:
+    """Full-window mode. row must be sorted; pad tail rows == nrows are folded
+    into a sentinel bucket and dropped."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nnz = row.shape[0]
+    tile = min(tile, max(8, nnz))
+    nnz_pad = -(-nnz // tile) * tile
+    grid = nnz_pad // tile
+    rw = -(-(nrows + 1) // 8) * 8  # window = all rows + sentinel bucket
+
+    rpad = jnp.full((nnz_pad,), nrows, jnp.int32).at[:nnz].set(row)
+    cpad = jnp.zeros((nnz_pad,), jnp.int32).at[:nnz].set(col)
+    vpad = jnp.zeros((nnz_pad,), val.dtype).at[:nnz].set(val)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel_full, tile=tile, rw=rw),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((x.shape[0],), lambda t: (0,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+            pl.BlockSpec((tile,), lambda t: (t,)),
+        ],
+        out_specs=pl.BlockSpec((rw,), lambda t: (0,)),   # resident, accumulated
+        out_shape=jax.ShapeDtypeStruct((rw,), jnp.float32),
+        interpret=interpret,
+    )(x, rpad, cpad, vpad)
+    return y[:nrows].astype(val.dtype)
+
+
+def build_scoo(row, col, val, nrows: int, slice_rows: int = 512, tile: int = 512):
+    """Host-side SCOO (sliced COO) layout: bucket entries by row-slice and pad
+    each slice to a tile multiple, so each kernel tile touches one slice.
+    This is the handle/'optimize' step of the workspace path."""
+    import numpy as np
+
+    row = np.asarray(row); col = np.asarray(col); val = np.asarray(val)
+    keep = row < nrows
+    row, col, val = row[keep], col[keep], val[keep]
+    nsl = -(-nrows // slice_rows)
+    rs, cs, vs, sids = [], [], [], []
+    for s in range(nsl):
+        m = (row >= s * slice_rows) & (row < (s + 1) * slice_rows)
+        r, c, v = row[m], col[m], val[m]
+        pad = -len(r) % tile if len(r) else tile
+        rs.append(np.concatenate([r, np.full(pad, s * slice_rows, row.dtype)]))
+        cs.append(np.concatenate([c, np.zeros(pad, col.dtype)]))
+        vs.append(np.concatenate([v, np.zeros(pad, val.dtype)]))
+        sids.extend([s] * ((len(r) + pad) // tile))
+    return (np.concatenate(rs).astype(np.int32), np.concatenate(cs).astype(np.int32),
+            np.concatenate(vs), np.asarray(sids, np.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("nrows", "slice_rows", "tile", "interpret"))
+def scoo_spmv(row, col, val, slice_ids, x, nrows: int, slice_rows: int = 512,
+              tile: int = 512, interpret: bool | None = None) -> jnp.ndarray:
+    """Sliced mode: shapes are static given the SCOO layout from build_scoo.
+    The onehot contribution of padding entries lands on the slice's first row
+    with val=0, so it is harmless."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = slice_ids.shape[0]
+    rw = slice_rows
+    nrows_pad = -(-nrows // rw) * rw
+
+    y = pl.pallas_call(
+        functools.partial(_kernel_sliced, tile=tile, rw=rw),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((x.shape[0],), lambda t, sid: (0,)),
+                pl.BlockSpec((tile,), lambda t, sid: (t,)),
+                pl.BlockSpec((tile,), lambda t, sid: (t,)),
+                pl.BlockSpec((tile,), lambda t, sid: (t,)),
+            ],
+            out_specs=pl.BlockSpec((rw,), lambda t, sid: (sid[t],)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
+        interpret=interpret,
+    )(slice_ids, x, row, col, val)
+    return y[:nrows].astype(val.dtype)

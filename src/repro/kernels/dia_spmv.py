@@ -1,0 +1,81 @@
+"""DIA SpMV Pallas kernel — the paper's SVE outer-loop vectorisation on TPU.
+
+Paper (§IV): vectorise the *row* loop (lanes = consecutive rows), iterate
+diagonals sequentially, because (i) ``av`` is contiguous along rows for a
+fixed diagonal and (ii) no horizontal reduction is needed. That maps 1:1 to
+the TPU VPU: a grid over row-blocks, each block holding ``block_rows`` lanes;
+the diagonal loop is a ``fori_loop`` whose ``x`` access is a *dense shifted
+load* ``x_pad[row0 + off + pre : ... + block_rows]`` — the gather the SVE
+version needed (``svld1_gather_index``) disappears entirely because x is
+pre-padded so every shift is in-bounds (per-lane predication becomes "pad
+with zeros"; the zero data entries contribute nothing).
+
+VMEM budget (defaults): data block ndiags x block_rows f32 = 512x512x4 = 1 MiB,
+x_pad resident = (ncols + 2*pad) x 4 — callers cap ncols (ops.py falls back
+to the windowed plain path for huge n); y block 2 KiB.
+
+Scalar prefetch: ``offsets`` live in SMEM (PrefetchScalarGridSpec) because
+they steer the dynamic-slice *addresses* — the Mosaic-native way to index
+from data (same mechanism megablox uses for expert ids).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(offs_ref, x_ref, data_ref, y_ref, *, block_rows: int, ndiags: int, pre: int):
+    i = pl.program_id(0)
+    row0 = i * block_rows
+
+    def body(d, acc):
+        off = offs_ref[d]
+        xw = pl.load(x_ref, (pl.ds(row0 + off + pre, block_rows),))
+        return acc + data_ref[d, :] * xw
+
+    acc = jax.lax.fori_loop(0, ndiags, body, jnp.zeros((block_rows,), jnp.float32))
+    y_ref[:] = acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def dia_spmv(offsets: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray,
+             block_rows: int = 512, interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x for DIA arrays. data: (ndiags, nrows), x: (ncols,).
+
+    Returns (nrows,). Assumes ``data`` is 0 where the diagonal exits the
+    matrix (guaranteed by ``repro.core.convert.to_dia``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ndiags, nrows = data.shape
+    ncols = x.shape[0]
+    br = min(block_rows, max(8, nrows))
+    nrows_pad = -(-nrows // br) * br
+    grid = nrows_pad // br
+
+    # pre/post padding so every shifted window row0+off+pre .. +br is in-bounds:
+    # off in [-(nrows-1), ncols-1], row0 in [0, nrows_pad-br]
+    pre = nrows_pad
+    post = nrows_pad + br
+    x_pad = jnp.zeros((pre + ncols + post,), x.dtype).at[pre : pre + ncols].set(x)
+    data_pad = jnp.zeros((ndiags, nrows_pad), data.dtype).at[:, :nrows].set(data)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, block_rows=br, ndiags=ndiags, pre=pre),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((x_pad.shape[0],), lambda i, offs: (0,)),      # x resident
+                pl.BlockSpec((ndiags, br), lambda i, offs: (0, i)),          # diag panel
+            ],
+            out_specs=pl.BlockSpec((br,), lambda i, offs: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
+        interpret=interpret,
+    )(offsets, x_pad, data_pad)
+    return y[:nrows].astype(data.dtype)

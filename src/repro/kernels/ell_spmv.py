@@ -1,0 +1,57 @@
+"""ELL SpMV Pallas kernel — regularised CSR for 8x128 lanes.
+
+CSR's indptr walk (Algorithm 2) cannot fill TPU lanes; the Morpheus answer on
+TPU is to *convert* (CSR -> ELL / SELL) and run a rectangular kernel, the
+same move ArmPL's ``optimize`` step makes when it rewrites the matrix into
+its internal layout. Each grid step owns a (block_rows x width) tile of
+(indices, data); the x gather happens from a VMEM-resident x copy via
+``jnp.take`` — Mosaic lowers VMEM-local takes to dynamic-gather ops; padding
+lanes carry index -1 and are predicated off with a mask (SVE ``pg``
+analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, idx_ref, dat_ref, y_ref):
+    idx = idx_ref[...]
+    dat = dat_ref[...]
+    valid = idx >= 0
+    x = x_ref[...]
+    gathered = jnp.take(x, jnp.where(valid, idx, 0).astype(jnp.int32), axis=0)
+    prod = jnp.where(valid, dat.astype(jnp.float32) * gathered.astype(jnp.float32), 0.0)
+    y_ref[...] = jnp.sum(prod, axis=1).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def ell_spmv(indices: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray,
+             block_rows: int = 256, interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x for ELL arrays. indices/data: (nrows, width), x: (ncols,)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nrows, width = indices.shape
+    br = min(block_rows, max(8, nrows))
+    nrows_pad = -(-nrows // br) * br
+    grid = nrows_pad // br
+
+    idx_pad = jnp.full((nrows_pad, width), -1, jnp.int32).at[:nrows].set(indices)
+    dat_pad = jnp.zeros((nrows_pad, width), data.dtype).at[:nrows].set(data)
+
+    y = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((x.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((br, width), lambda i: (i, 0)),
+            pl.BlockSpec((br, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
+        interpret=interpret,
+    )(x, idx_pad, dat_pad)
+    return y[:nrows].astype(data.dtype)

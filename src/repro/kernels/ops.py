@@ -1,0 +1,78 @@
+"""jit'd wrappers over the Pallas kernels + registration into the Morpheus
+dispatch registry as the ``pallas`` implementation of each format.
+
+Guards mirror the 'fits-the-device' checks Morpheus's FPGA backend applies
+(buffer-size limits, §V of the paper): when the matrix is too large for the
+resident-x kernel strategy, the wrapper falls back to the plain path rather
+than claiming a VMEM budget it cannot hold.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BSR, COO, DIA, ELL, SELL
+from repro.core.spmv import register_spmv, _REGISTRY
+
+from .bsr_spmm import bsr_spmm
+from .coo_spmv import coo_spmv, scoo_spmv, build_scoo
+from .dia_spmv import dia_spmv
+from .ell_spmv import ell_spmv
+
+# VMEM guard: resident-x strategies keep x (f32) + a couple of tiles in VMEM.
+MAX_RESIDENT_COLS = 1 << 20
+
+
+@register_spmv("dia", "pallas")
+def dia_spmv_pallas(A: DIA, x):
+    if A.shape[1] + 2 * A.shape[0] > 4 * MAX_RESIDENT_COLS:
+        return _REGISTRY[("dia", "plain")](A, x)
+    return dia_spmv(A.offsets, A.data, x)
+
+
+@register_spmv("ell", "pallas")
+def ell_spmv_pallas(A: ELL, x):
+    if A.shape[1] > MAX_RESIDENT_COLS:
+        return _REGISTRY[("ell", "plain")](A, x)
+    return ell_spmv(A.indices, A.data, x)
+
+
+@register_spmv("coo", "pallas")
+def coo_spmv_pallas(A: COO, x):
+    # full-window mode: one-hot window = all rows; jit-friendly but VMEM-bound.
+    if A.shape[0] > 8192 or A.shape[1] > MAX_RESIDENT_COLS:
+        return _REGISTRY[("coo", "plain")](A, x)
+    return coo_spmv(A.row, A.col, A.val, x, nrows=A.shape[0])
+
+
+@register_spmv("sell", "pallas")
+def sell_spmv_pallas(A: SELL, x):
+    """SELL runs through the sliced-COO kernel: same slice-major layout idea
+    (C-row slices), expressed as SCOO tiles. Requires concrete arrays (the
+    handle path); under tracing fall back to plain."""
+    import numpy as np
+
+    if isinstance(A.data, jax.core.Tracer):
+        return _REGISTRY[("sell", "plain")](A, x)
+    rows = np.asarray(A.entry_rows())
+    valid = np.asarray(A.indices) >= 0
+    r, c, v = rows[valid], np.asarray(A.indices)[valid], np.asarray(A.data)[valid]
+    sr = 512
+    rr, cc, vv, sid = build_scoo(r, c, v, A.shape[0], slice_rows=sr)
+    return scoo_spmv(jnp.asarray(rr), jnp.asarray(cc), jnp.asarray(vv),
+                     jnp.asarray(sid), x, nrows=A.shape[0], slice_rows=sr)
+
+
+def bsr_spmm_pallas(A: BSR, X):
+    nbcols = -(-A.shape[1] // A.bs)
+    Xp = jnp.zeros((nbcols * A.bs, X.shape[1]), X.dtype).at[: X.shape[0]].set(X)
+    Y = bsr_spmm(A.bcols, A.blocks, Xp)
+    return Y[: A.shape[0]].astype(X.dtype)
+
+
+_REGISTRY[("bsr", "pallas_spmm")] = bsr_spmm_pallas
+
+
+@register_spmv("bsr", "pallas")
+def bsr_spmv_pallas(A: BSR, x):
+    return bsr_spmm_pallas(A, x[:, None])[:, 0]

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (densify + XLA matmul).
+
+Deliberately *independent* of the tuned implementations in ``repro.core.spmv``
+(which are format-wise transliterations): the oracle here goes through
+``to_dense`` so a bug shared between the plain and Pallas paths of a format
+cannot hide.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmv_ref(A, x: jnp.ndarray) -> jnp.ndarray:
+    return A.to_dense() @ x
+
+
+def spmm_ref(A, X: jnp.ndarray) -> jnp.ndarray:
+    return A.to_dense() @ X
+
+
+def dia_spmv_ref(offsets, data, x, shape):
+    """Direct Algorithm-3 oracle on raw arrays (used by shape sweeps)."""
+    nrows, ncols = shape
+    i = jnp.arange(nrows, dtype=jnp.int32)
+    y = jnp.zeros((nrows,), data.dtype)
+    for d in range(offsets.shape[0]):
+        k = i + offsets[d]
+        valid = (k >= 0) & (k < ncols)
+        y = y + jnp.where(valid, data[d] * x[jnp.clip(k, 0, ncols - 1)], 0)
+    return y
+
+
+def ell_spmv_ref(indices, data, x):
+    valid = indices >= 0
+    return jnp.sum(jnp.where(valid, data * x[jnp.where(valid, indices, 0)], 0), axis=1)
+
+
+def coo_spmv_ref(row, col, val, x, nrows):
+    y = jnp.zeros((nrows + 1,), val.dtype)
+    return y.at[jnp.minimum(row, nrows)].add(val * x[col])[:nrows]
+
+
+def bsr_spmm_ref(bcols, blocks, X):
+    """(nbr,w,bs,bs) blocks x (nbcols*bs, nf) dense -> (nbr*bs, nf)."""
+    nbr, w, bs, _ = blocks.shape
+    nf = X.shape[1]
+    Xb = X.reshape(-1, bs, nf)
+    valid = (bcols >= 0)[..., None, None]
+    Xg = jnp.where(valid, Xb[jnp.where(bcols >= 0, bcols, 0)], 0)
+    return jnp.einsum("rwij,rwjf->rif", blocks, Xg).reshape(nbr * bs, nf)

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes with ShapeDtypeStruct inputs (no allocation), record memory/cost
+analysis + collective schedule + roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, cell_applicable, get_config, list_archs,
+                           shape_by_name)
+from repro.distributed.sharding import params_shardings, sharding_context, spec_for
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models import build_model
+from repro.optim import adamw
+from repro.roofline import analysis as roofline
+from repro.roofline import analytic
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ------------------------------------------------------------ input specs ----
+
+def input_specs(cfg, shape):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    extra = {}
+    if cfg.frontend == "vision":
+        extra["patches"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+    if cfg.frontend == "audio":
+        extra["frames"] = sds((B, cfg.frontend_tokens, cfg.d_model), f32)
+    if shape.kind == "train":
+        return dict({"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}, **extra)
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), i32), "extra": extra or None}
+    # decode: one new token against a seq_len cache
+    return {"token": sds((B, 1), i32), "pos": sds((), i32), "extra": extra or None}
+
+
+def batch_shardings(specs, mesh):
+    out = {}
+    for k, v in specs.items():
+        if v is None:
+            out[k] = None
+        elif isinstance(v, dict):
+            out[k] = batch_shardings(v, mesh)
+        elif v.ndim == 0:
+            out[k] = NamedSharding(mesh, P())
+        else:
+            axes = ("batch",) + (None,) * (v.ndim - 1)
+            out[k] = NamedSharding(mesh, spec_for(v.shape, axes, mesh))
+    return out
+
+
+def cache_shardings(caches_shapes, mesh, seq_len):
+    """Heuristic per-leaf cache specs: (L, B, ...) with a seq dim -> seq_kv,
+    otherwise the largest state dim shards over the model axis."""
+    def one(leaf):
+        shp = leaf.shape
+        axes = [None] * len(shp)
+        if len(shp) >= 2:
+            axes[1] = "batch"
+        seq_dim = None
+        for i in range(2, len(shp)):
+            if shp[i] == seq_len or shp[i] >= 1024:
+                seq_dim = i
+                break
+        if seq_dim is not None:
+            axes[seq_dim] = "seq_kv"
+            # shard kv heads too if another dim divides (e.g. (L,B,S,kv,hd))
+        elif len(shp) > 2:
+            big = int(np.argmax(shp[2:])) + 2
+            axes[big] = "heads_out"
+        return NamedSharding(mesh, spec_for(shp, axes, mesh))
+
+    return jax.tree_util.tree_map(one, caches_shapes)
+
+
+RULES = {"seq_kv": ("model", "data")}
+
+
+# ---------------------------------------------------------------- lowering ----
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, cfg=None):
+    cfg = cfg if cfg is not None else get_config(arch)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"status": "SKIP", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    t0 = time.time()
+
+    rules = dict(RULES)
+    if cfg.fsdp:
+        rules["embed"] = ("data",)   # ZeRO-3/FSDP: weights' embed dim over DP
+    opt_rules = dict(RULES, embed=("data",)) if (cfg.fsdp or cfg.zero) else rules
+
+    with sharding_context(mesh, rules):
+        params_shapes = jax.eval_shape(model.init, key)
+        if cfg.zero:  # bf16 compute params
+            params_shapes = jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(
+                    s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+                params_shapes)
+        pshard = params_shardings(params_shapes, mesh, rules)
+        specs = input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            ocfg = adamw.AdamWConfig(keep_master=cfg.zero)
+            opt_shapes = jax.eval_shape(
+                lambda p: adamw.init(p, keep_master=cfg.zero), params_shapes)
+            fsdp_shard = params_shardings(params_shapes, mesh, opt_rules)
+            oshard = adamw.AdamWState(
+                NamedSharding(mesh, P()), fsdp_shard, fsdp_shard,
+                fsdp_shard if cfg.zero else None)
+            mb = cfg.microbatch or 1
+            import jax.numpy as _jnp
+            step = make_train_step(
+                model, ocfg, microbatches=mb,
+                grad_shardings=fsdp_shard if cfg.zero else None,
+                accum_dtype=_jnp.bfloat16 if cfg.zero else None)
+            bshard = batch_shardings(specs, mesh)
+            fn = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_shapes, opt_shapes, specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            tshard = NamedSharding(mesh, spec_for(specs["tokens"].shape, ("batch", None), mesh))
+            eshard = batch_shardings(specs["extra"], mesh) if specs["extra"] else None
+            fn = jax.jit(step, in_shardings=(pshard, tshard, eshard))
+            lowered = fn.lower(params_shapes, specs["tokens"], specs["extra"])
+        else:  # decode
+            step = make_decode_step(model)
+            caches_shapes = jax.eval_shape(
+                lambda: model.init_caches(shape.global_batch, shape.seq_len))
+            cshard = cache_shardings(caches_shapes, mesh, shape.seq_len)
+            tshard = NamedSharding(mesh, spec_for((shape.global_batch, 1), ("batch", None), mesh))
+            fn = jax.jit(step,
+                         in_shardings=(pshard, tshard, cshard, NamedSharding(mesh, P())),
+                         out_shardings=(None, cshard),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_shapes, specs["token"], caches_shapes, specs["pos"])
+
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    # ---------------- analyses ----------------
+    hlo = compiled.as_text()
+    dump = os.environ.get("REPRO_DUMP_HLO")
+    if dump:
+        pathlib.Path(dump).write_text(hlo)
+    mb = cfg.microbatch or 1
+    if cfg.is_encdec:
+        loop_mult = max(cfg.n_layers, cfg.encoder_layers) * (mb if shape.kind == "train" else 1)
+    else:
+        loop_mult = max(g.n for g in model.groups) * (mb if shape.kind == "train" else 1)
+    acost = analytic.cost(cfg, shape, chips, microbatches=mb)
+    rl = roofline.analyze(compiled, hlo, loop_multiplier=loop_mult, analytic=acost)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, f):
+                mem[f] = int(getattr(ma, f))
+    except Exception as e:
+        mem["error"] = repr(e)
+
+    n_params = cfg.param_count()
+    n_active = cfg.active_param_count()
+    mf = roofline.model_flops(cfg, shape, chips)
+    out = {
+        "status": "OK",
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "params": n_params, "active_params": n_active,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "roofline": rl.to_dict(),
+        "analytic_detail": {k: float(v) for k, v in acost.detail.items()},
+        "model_flops_per_device": mf,
+        "useful_flops_frac": (mf / rl.flops) if rl.flops else None,
+    }
+    return out
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, verbose=True):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    path = RESULTS / f"{tag}.json"
+    if path.exists() and not force:
+        if verbose:
+            print(f"[cached] {tag}")
+        return json.loads(path.read_text())
+    try:
+        out = build_cell(arch, shape_name, multi_pod)
+    except Exception:
+        out = {"status": "FAIL", "arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "error": traceback.format_exc()}
+    path.write_text(json.dumps(out, indent=1))
+    if verbose:
+        s = out["status"]
+        extra = ""
+        if s == "OK":
+            r = out["roofline"]
+            extra = (f" compile={out['compile_s']}s bottleneck={r['bottleneck']}"
+                     f" t=({r['t_compute_s']:.4f},{r['t_memory_s']:.4f},{r['t_collective_s']:.4f})s")
+        elif s == "FAIL":
+            extra = " " + out["error"].strip().splitlines()[-1]
+        print(f"[{s}] {tag}{extra}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or not args.shape else [args.shape]
+
+    fails = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                out = run_cell(a, s, mp, force=args.force)
+                fails += out["status"] == "FAIL"
+    if fails:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

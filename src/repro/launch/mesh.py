@@ -1,0 +1,26 @@
+"""Production meshes. Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips; multi-pod adds pod=2."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axes=("data",)):
+    """All locally visible devices on one axis (tests, examples, HPCG)."""
+    devs = np.array(jax.devices())
+    shape = [len(devs)] + [1] * (len(axes) - 1)
+    return Mesh(devs.reshape(shape), axes)
+
+
+def mesh_chips(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,75 @@
+"""Serving launcher: batched prefill + decode loop with KV caches.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    B, S, G = args.batch, args.prompt_len, args.gen
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32)
+    extra = None
+    if cfg.frontend == "vision":
+        extra = {"patches": jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)}
+    if cfg.frontend == "audio":
+        extra = {"frames": jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)}
+
+    prefix = cfg.frontend_tokens if cfg.frontend == "vision" else 0
+    smax = prefix + S + G
+
+    # prefill via decode loop over the prompt (prefill() also available; the
+    # decode loop keeps cache layouts identical between phases)
+    caches = model.init_caches(B, smax)
+    decode = jax.jit(model.decode_step, donate_argnums=(2,))
+    t0 = time.time()
+    logits = None
+    for t in range(S):
+        logits, caches = decode(params, tokens[:, t:t+1], caches, prefix + t)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    out = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    t0 = time.time()
+    for g in range(G):
+        logits, caches = decode(params, tok, caches, prefix + S + g)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(tok[:, 0]))
+    jax.block_until_ready(logits)
+    t_gen = time.time() - t0
+
+    toks_s = B * G / t_gen
+    print(f"arch={cfg.name} B={B} prompt={S} gen={G}")
+    print(f"prompt phase: {t_prefill*1e3:.0f}ms; decode: {t_gen*1e3:.0f}ms "
+          f"({toks_s:.1f} tok/s, {1e3*t_gen/G:.1f} ms/token)")
+    print("sample continuation (batch 0):", [int(o[0]) for o in out[:16]])
+
+
+if __name__ == "__main__":
+    main()

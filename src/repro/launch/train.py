@@ -1,0 +1,59 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+--smoke uses the reduced config (CPU-runnable); omit it on real hardware to
+train the full config on the production mesh (--mesh prod/multi).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default="none", choices=["none", "local", "prod", "multi"])
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = None
+    if args.mesh == "local":
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(("data", "model"))
+    elif args.mesh in ("prod", "multi"):
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    tcfg = TrainerConfig(n_steps=args.steps, global_batch=args.batch,
+                         seq_len=args.seq, microbatches=args.microbatches,
+                         ckpt_dir=args.ckpt_dir, checkpoint_every=args.ckpt_every)
+    ocfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps)
+    tr = Trainer(cfg, tcfg, ocfg, mesh=mesh)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(tr.state[0]))
+    print(f"arch={cfg.name} params={n_params:,} steps={args.steps} "
+          f"batch={args.batch}x{args.seq} mesh={args.mesh}")
+    hist = tr.train(resume=args.resume)
+    print(f"final loss: {hist[-1]['loss']:.4f} "
+          f"(first {hist[0]['loss']:.4f}); median step "
+          f"{1e3*sorted(h['time_s'] for h in hist)[len(hist)//2]:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo covering the 10 assigned architectures."""
+from .model import LM, EncDecLM, build_model, count_params_struct

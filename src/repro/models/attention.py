@@ -1,0 +1,210 @@
+"""GQA attention: chunked (flash-style online-softmax) training/prefill path,
+cache-based decode path. Pure jnp — on TPU the chunked loop is what a Pallas
+flash kernel would do; expressing it as lax.scan keeps the dry-run's
+cost_analysis exact while bounding live memory to one (q_chunk x kv_chunk)
+score tile per step.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype=dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype=dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype=dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"].astype(x.dtype), cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"].astype(x.dtype), cfg.norm_eps)
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      causal_skip: bool = False) -> jnp.ndarray:
+    """Online-softmax attention. q: (B,Sq,Hq,hd); k,v: (B,Skv,Hkv,hd).
+    Hq % Hkv == 0 (GQA); kv heads are never materialised repeated."""
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad both sequence dims to chunk multiples; padded kv is masked off below
+    Sq_p = -(-Sq // q_chunk) * q_chunk
+    Skv_p = -(-Skv // kv_chunk) * kv_chunk
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Skv_p != Skv:
+        k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    nq, nk = Sq_p // q_chunk, Skv_p // kv_chunk
+
+    qg = q.reshape(B, Sq_p, Hkv, G, hd)
+    qs = qg.reshape(B, nq, q_chunk, Hkv, G, hd).transpose(1, 0, 3, 2, 4, 5)
+    # qs: (nq, B, Hkv, q_chunk, G, hd) — scanned (mapped) over nq
+    ks = k.reshape(B, nk, kv_chunk, Hkv, hd).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, hdv).transpose(1, 0, 3, 2, 4)
+
+    def per_q_chunk(carry, inp):
+        qi, qc = inp                   # qc: (B, Hkv, q_chunk, G, hd)
+        m0 = jnp.full((B, Hkv, q_chunk, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, q_chunk, G), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, q_chunk, G, hdv), jnp.float32)
+
+        def compute_chunk(c, ki, kc, vc):
+            m, l, acc = c
+            s = jnp.einsum("bhqgd,bhkd->bhqgk", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            kpos = ki * kv_chunk + jax.lax.broadcasted_iota(
+                jnp.int32, (q_chunk, kv_chunk), 1)
+            if causal:
+                qpos = q_offset + qi * q_chunk + jax.lax.broadcasted_iota(
+                    jnp.int32, (q_chunk, kv_chunk), 0)
+                s = jnp.where((qpos >= kpos)[None, None, :, None, :], s, NEG_INF)
+            else:  # still mask kv padding
+                s = jnp.where((kpos < Skv)[None, None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqgk,bhkd->bhqgd", p, vc.astype(jnp.float32))
+            return m_new, l_new, acc_new
+
+        def per_kv_chunk(c, kin):
+            ki, kc, vc = kin           # kc/vc: (B, Hkv, kv_chunk, hd[v])
+            if causal and causal_skip:
+                # §Perf: skip chunks that are entirely above the causal
+                # diagonal — halves attention FLOPs for long-seq training
+                needed = ki * kv_chunk <= q_offset + (qi + 1) * q_chunk - 1
+                c = jax.lax.cond(needed,
+                                 lambda c: compute_chunk(c, ki, kc, vc),
+                                 lambda c: c, c)
+                return c, None
+            return compute_chunk(c, ki, kc, vc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            per_kv_chunk, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out.astype(q.dtype)   # (B, Hkv, q_chunk, G, hd)
+
+    _, outs = jax.lax.scan(per_q_chunk, None, (jnp.arange(nq), qs))
+    # outs: (nq, B, Hkv, q_chunk, G, hdv) -> (B, Sq, Hq, hdv)
+    out = outs.transpose(1, 0, 3, 2, 4, 5).reshape(B, Sq_p, Hq, hdv)
+    return out[:, :Sq]
+
+
+def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
+    """q: (B,1,Hq,hd); caches: (B,Smax,Hkv,hd); pos: scalar current index.
+    Attends to cache[0..pos] inclusive (cache already contains this step)."""
+    B, _, Hq, hd = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(Smax) <= pos
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, Smax, Hkv, hd)
+    v: jnp.ndarray
+
+
+def attention_train(p, x, cfg, positions, causal=True, q_offset=0):
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                          causal_skip=getattr(cfg, "causal_skip", False))
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def attention_prefill(p, x, cfg, positions) -> Tuple[jnp.ndarray, KVCache]:
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = chunked_attention(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype), KVCache(k, v)
+
+
+def attention_decode(p, x, cfg, cache: KVCache, pos) -> Tuple[jnp.ndarray, KVCache]:
+    """x: (B,1,D); cache pre-allocated to Smax; pos: scalar write index."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_cache = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos)
+    return o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype), KVCache(k_cache, v_cache)
+
+
+# ------------------------------------------------------- cross-attention ----
+
+def init_cross_attention(key, cfg, dtype=jnp.float32):
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention(p, x, kv_src, cfg):
+    """Full (non-causal) attention of x over kv_src (encoder states)."""
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"].astype(x.dtype)).reshape(B, -1, cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"].astype(x.dtype)).reshape(B, -1, cfg.n_kv_heads, hd)
+    o = chunked_attention(q, k, v, causal=False)
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention_cached(p, x, kv_cache: KVCache, cfg):
+    """Decode-side cross attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, hd)
+    o = decode_attention(q, kv_cache.k, kv_cache.v, kv_cache.k.shape[1] - 1)
+    return o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)

@@ -1,0 +1,76 @@
+"""Primitive layers (pure JAX, params = plain dicts of arrays).
+
+Conventions:
+  - params are created by ``init_*`` helpers taking a PRNG key
+  - compute runs in cfg.activation_dtype (bf16) with f32 accumulation where
+    it matters (norms, softmax, losses) — MXU-native mixed precision
+  - weight names are stable: sharding rules in repro.distributed.sharding
+    match on path regexes
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, in_dim: int, out_dim: int, scale: Optional[float] = None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), dtype) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim), dtype) * 0.02).astype(dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd), positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (..., S, 1, hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    return jax.nn.gelu(x @ w_up + b_up, approximate=True) @ w_down + b_down
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def apply_mlp(p, x):
+    return swiglu(x, p["w_gate"].astype(x.dtype), p["w_up"].astype(x.dtype),
+                  p["w_down"].astype(x.dtype))

@@ -1,0 +1,116 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill materialise per-head K/V from the compressed latent (direct
+form); decode uses the *absorbed* form and caches only (c_kv, k_pe) —
+(kv_lora + rope_hd) = 576 floats/token instead of 2*H*hd = 32768: the 57x
+KV-cache compression that is the point of MLA.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention, NEG_INF
+from .layers import apply_rope, dense_init, rmsnorm
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray  # (B, Smax, kv_lora)
+    k_pe: jnp.ndarray  # (B, Smax, rope_hd)
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    m = cfg.mla
+    H = cfg.n_heads
+    qh = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype=dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, H * qh, dtype=dtype),
+        "wkv_a": dense_init(ks[2], cfg.d_model, m.kv_lora_rank + m.rope_head_dim, dtype=dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank, H * (m.nope_head_dim + m.v_head_dim), dtype=dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, cfg.d_model, dtype=dtype),
+    }
+
+
+def _project_q(p, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm(x @ p["wq_a"].astype(x.dtype), p["q_norm"].astype(x.dtype), cfg.norm_eps)
+    q = (cq @ p["wq_b"].astype(x.dtype)).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_pe = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _project_kv_latent(p, x, cfg, positions):
+    m = cfg.mla
+    ckv_pe = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_pe = jnp.split(ckv_pe, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, p["kv_norm"].astype(x.dtype), cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_train(p, x, cfg, positions) -> jnp.ndarray:
+    """Direct form: expand latent to per-head K/V, run chunked attention."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_pe = _project_q(p, x, cfg, positions)
+    c_kv, k_pe = _project_kv_latent(p, x, cfg, positions)
+    kv = (c_kv @ p["wkv_b"].astype(x.dtype)).reshape(B, S, H, m.nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.nope_head_dim], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, m.rope_head_dim))], axis=-1)
+    o = chunked_attention(q, k, v, causal=True)             # (B,S,H,v_hd)
+    return o.reshape(B, S, -1) @ p["wo"].astype(x.dtype)
+
+
+def mla_prefill(p, x, cfg, positions) -> Tuple[jnp.ndarray, MLACache]:
+    out = mla_train(p, x, cfg, positions)
+    c_kv, k_pe = _project_kv_latent(p, x, cfg, positions)
+    return out, MLACache(c_kv, k_pe)
+
+
+def mla_decode(p, x, cfg, cache: MLACache, pos) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed form: scores against the latent cache directly."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_pe = _project_q(p, x, cfg, positions)         # (B,1,H,*)
+    c_new, kpe_new = _project_kv_latent(p, x, cfg, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, pos, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache.k_pe, kpe_new.astype(cache.k_pe.dtype), (0, pos, 0))
+
+    wkv_b = p["wkv_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.nope_head_dim + m.v_head_dim)
+    wk = wkv_b[..., : m.nope_head_dim]                      # (L, H, nope)
+    wv = wkv_b[..., m.nope_head_dim :]                      # (L, H, v_hd)
+    # absorb: q_c[h] = q_nope[h] @ wk[:,h,:].T  -> (B,H,L)
+    q_c = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], wk)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (jnp.einsum("bhl,bsl->bhs", q_c.astype(jnp.float32), c_kv.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_pe[:, 0].astype(jnp.float32), k_pe.astype(jnp.float32))
+         ) * scale
+    mask = jnp.arange(c_kv.shape[1]) <= pos
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", w, c_kv.astype(jnp.float32))   # (B,H,L)
+    o = jnp.einsum("bhl,lhd->bhd", ctx.astype(x.dtype), wv)         # (B,H,v_hd)
+    out = o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, MLACache(c_kv, k_pe)
+
+
+def init_mla_cache(cfg, batch: int, seq: int, dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        jnp.zeros((batch, seq, m.kv_lora_rank), dtype),
+        jnp.zeros((batch, seq, m.rope_head_dim), dtype),
+    )

@@ -1,0 +1,577 @@
+"""Model assembly: config -> (init, train loss, prefill, decode) for every
+assigned architecture family.
+
+Layer stacks are *scanned* over stacked params (HLO size independent of
+depth — essential for compiling 60-90 layer models on one CPU core), grouped
+by block type:
+
+  dense/vlm       : [attn+mlp] x L
+  moe (qwen3)     : [attn+moe] x L
+  moe (deepseek)  : [mla+mlp] x first_dense + [mla+moe] x rest
+  hybrid (jamba)  : [(mamba|attn)+(mlp|moe) period of `attn_period`] x L/period
+  ssm (rwkv6)     : [rwkv] x L
+  audio (whisper) : encoder [attn+mlp] x Le ; decoder [self+cross+mlp] x Ld
+
+Caches are pytrees stacked along the group axis so decode also scans.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import apply_mlp, embed_init, gelu_mlp, init_mlp, rmsnorm, dense_init
+
+
+class GroupDef(NamedTuple):
+    name: str
+    n: int
+    init: Callable          # key -> single-layer params
+    train: Callable         # (lp, x, ctx) -> (x, aux)
+    prefill: Callable       # (lp, x, ctx) -> (x, cache_l, aux)
+    decode: Callable        # (lp, x, cache_l, pos, ctx) -> (x, cache_l)
+    init_cache: Callable    # (batch, seq, dtype) -> cache_l (zeros)
+
+
+# ------------------------------------------------------------ block defs ----
+
+def _ffn_init(key, cfg, use_moe: bool, dtype):
+    if use_moe:
+        return moe_mod.init_moe(key, cfg, cfg.moe, dtype)
+    return init_mlp(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _ffn_apply(lp_ffn, x, cfg, use_moe: bool):
+    if use_moe:
+        B, S, D = x.shape
+        y, aux = moe_mod.moe_ffn(lp_ffn, x.reshape(B * S, D), cfg, cfg.moe)
+        return y.reshape(B, S, D), aux
+    return apply_mlp(lp_ffn, x), jnp.zeros((), jnp.float32)
+
+
+def attn_block(cfg: ModelConfig, use_moe: bool, use_mla: bool, name: str) -> GroupDef:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        mixer = mla_mod.init_mla(k1, cfg) if use_mla else attn.init_attention(k1, cfg)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "mixer": mixer,
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": _ffn_init(k2, cfg, use_moe, jnp.float32),
+        }
+
+    def train(lp, x, ctx):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.norm_eps)
+        if use_mla:
+            h = mla_mod.mla_train(lp["mixer"], h, cfg, ctx["positions"])
+        else:
+            h = attn.attention_train(lp["mixer"], h, cfg, ctx["positions"])
+        x = x + h
+        # Megatron-SP: shard the residual's sequence dim over the model axis
+        # between blocks (GSPMD turns the per-layer all-reduce into
+        # reduce-scatter + all-gather pairs: ~2x less wire traffic)
+        seq_ax = "seq_act" if cfg.seq_parallel else None
+        x = logical_constraint(x, ("batch", seq_ax, None))
+        f = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.norm_eps)
+        y, aux = _ffn_apply(lp["ffn"], f, cfg, use_moe)
+        return x + y, aux
+
+    def prefill(lp, x, ctx):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.norm_eps)
+        if use_mla:
+            h, cache = mla_mod.mla_prefill(lp["mixer"], h, cfg, ctx["positions"])
+        else:
+            h, cache = attn.attention_prefill(lp["mixer"], h, cfg, ctx["positions"])
+        x = x + h
+        f = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.norm_eps)
+        y, aux = _ffn_apply(lp["ffn"], f, cfg, use_moe)
+        return x + y, cache, aux
+
+    def decode(lp, x, cache, pos, ctx):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.norm_eps)
+        if use_mla:
+            h, cache = mla_mod.mla_decode(lp["mixer"], h, cfg, cache, pos)
+        else:
+            h, cache = attn.attention_decode(lp["mixer"], h, cfg, cache, pos)
+        x = x + h
+        f = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.norm_eps)
+        y, _ = _ffn_apply(lp["ffn"], f, cfg, use_moe)
+        return x + y, cache
+
+    def init_cache(batch, seq, dtype):
+        if use_mla:
+            return mla_mod.init_mla_cache(cfg, batch, seq, dtype)
+        return attn.KVCache(
+            jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+            jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+        )
+
+    return GroupDef(name, 0, init, train, prefill, decode, init_cache)
+
+
+def mamba_block(cfg: ModelConfig, use_moe: bool, name: str) -> GroupDef:
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "mixer": ssm_mod.init_mamba(k1, cfg),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "ffn": _ffn_init(k2, cfg, use_moe, jnp.float32),
+        }
+
+    def _body(lp, x, state):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.norm_eps)
+        h, new_state = ssm_mod.mamba_forward(lp["mixer"], h, cfg, state)
+        x = x + h
+        f = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.norm_eps)
+        y, aux = _ffn_apply(lp["ffn"], f, cfg, use_moe)
+        return x + y, new_state, aux
+
+    def train(lp, x, ctx):
+        x, _, aux = _body(lp, x, None)
+        return x, aux
+
+    def prefill(lp, x, ctx):
+        return _body(lp, x, None)
+
+    def decode(lp, x, state, pos, ctx):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.norm_eps)
+        h, new_state = ssm_mod.mamba_decode(lp["mixer"], h, cfg, state)
+        x = x + h
+        f = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.norm_eps)
+        y, _ = _ffn_apply(lp["ffn"], f, cfg, use_moe)
+        return x + y, new_state
+
+    def init_cache(batch, seq, dtype):
+        return ssm_mod.init_mamba_state(cfg, batch, dtype)
+
+    return GroupDef(name, 0, init, train, prefill, decode, init_cache)
+
+
+def rwkv_block(cfg: ModelConfig, name: str) -> GroupDef:
+    def init(key):
+        return {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mix": rwkv_mod.init_rwkv(key, cfg),
+        }
+
+    def _full(lp, x, state):
+        h = rmsnorm(x, lp["ln1"].astype(x.dtype), cfg.norm_eps)
+        y, tm_shift, wkv = rwkv_mod.rwkv_time_mix(lp["mix"], h, cfg, state)
+        x = x + y
+        h2 = rmsnorm(x, lp["ln2"].astype(x.dtype), cfg.norm_eps)
+        y2, cm_shift = rwkv_mod.rwkv_channel_mix(lp["mix"], h2, cfg, state)
+        x = x + y2
+        new_state = rwkv_mod.RWKVState(tm_shift.astype(x.dtype), cm_shift.astype(x.dtype), wkv)
+        return x, new_state
+
+    def train(lp, x, ctx):
+        x, _ = _full(lp, x, None)
+        return x, jnp.zeros((), jnp.float32)
+
+    def prefill(lp, x, ctx):
+        x, st = _full(lp, x, None)
+        return x, st, jnp.zeros((), jnp.float32)
+
+    def decode(lp, x, state, pos, ctx):
+        return _full(lp, x, state)
+
+    def init_cache(batch, seq, dtype):
+        return rwkv_mod.init_rwkv_state(cfg, batch, dtype)
+
+    return GroupDef(name, 0, init, train, prefill, decode, init_cache)
+
+
+def jamba_period(cfg: ModelConfig, name: str) -> GroupDef:
+    """One period of `attn_period` layers: attention at slot period//2,
+    mamba elsewhere; MoE FFN on every `moe_every`-th slot."""
+    period = cfg.attn_period
+    attn_slot = period // 2
+    subs: List[GroupDef] = []
+    for i in range(period):
+        use_moe = cfg.moe is not None and (i % cfg.moe_every == cfg.moe_every - 1)
+        if i == attn_slot:
+            subs.append(attn_block(cfg, use_moe, False, f"sub{i}_attn"))
+        else:
+            subs.append(mamba_block(cfg, use_moe, f"sub{i}_mamba"))
+
+    def init(key):
+        ks = jax.random.split(key, period)
+        return {f"sub{i}": subs[i].init(ks[i]) for i in range(period)}
+
+    def train(lp, x, ctx):
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(period):
+            x, a = subs[i].train(lp[f"sub{i}"], x, ctx)
+            aux = aux + a
+        return x, aux
+
+    def prefill(lp, x, ctx):
+        caches, aux = {}, jnp.zeros((), jnp.float32)
+        for i in range(period):
+            x, c, a = subs[i].prefill(lp[f"sub{i}"], x, ctx)
+            caches[f"sub{i}"] = c
+            aux = aux + a
+        return x, caches, aux
+
+    def decode(lp, x, cache, pos, ctx):
+        new = {}
+        for i in range(period):
+            x, c = subs[i].decode(lp[f"sub{i}"], x, cache[f"sub{i}"], pos, ctx)
+            new[f"sub{i}"] = c
+        return x, new
+
+    def init_cache(batch, seq, dtype):
+        return {f"sub{i}": subs[i].init_cache(batch, seq, dtype) for i in range(period)}
+
+    return GroupDef(name, 0, init, train, prefill, decode, init_cache)
+
+
+# -------------------------------------------------------------- assembly ----
+
+def build_groups(cfg: ModelConfig) -> List[GroupDef]:
+    if cfg.rwkv:
+        return [rwkv_block(cfg, "rwkv")._replace(n=cfg.n_layers)]
+    if cfg.attn_period:  # jamba
+        assert cfg.n_layers % cfg.attn_period == 0
+        return [jamba_period(cfg, "period")._replace(n=cfg.n_layers // cfg.attn_period)]
+    use_mla = cfg.mla is not None
+    groups = []
+    if cfg.moe is not None:
+        nd = cfg.first_dense_layers
+        if nd:
+            groups.append(attn_block(cfg, False, use_mla, "dense_head")._replace(n=nd))
+        groups.append(attn_block(cfg, True, use_mla, "moe_body")._replace(n=cfg.n_layers - nd))
+    else:
+        groups.append(attn_block(cfg, False, use_mla, "body")._replace(n=cfg.n_layers))
+    return groups
+
+
+def _stack_init(gdef: GroupDef, key):
+    return jax.vmap(gdef.init)(jax.random.split(key, gdef.n))
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+@dataclass
+class LM:
+    """Decoder-only LM (plus vision/audio prefix stubs for vlm family)."""
+
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.groups = build_groups(self.cfg)
+
+    # ------------------------------------------------------------ params --
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = jax.random.split(key, len(self.groups) + 3)
+        params: Dict[str, Any] = {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "groups": [_stack_init(g, ks[i + 1]) for i, g in enumerate(self.groups)],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(ks[-2], cfg.d_model, cfg.vocab, scale=0.02)
+        if cfg.frontend == "vision":
+            params["frontend_proj"] = dense_init(ks[-1], cfg.d_model, cfg.d_model)
+        return params
+
+    # ----------------------------------------------------------- helpers --
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.cfg.activation_dtype)
+        return logical_constraint(x, ("batch", None, None))
+
+    def _prefix(self, params, extra):
+        """Vision stub: pre-embedded patches projected and prepended."""
+        if self.cfg.frontend == "vision" and extra is not None and "patches" in extra:
+            pe = extra["patches"].astype(self.cfg.activation_dtype)
+            return pe @ params["frontend_proj"].astype(pe.dtype)
+        return None
+
+    def _head(self, params, x):
+        w = (params["embed"].T if self.cfg.tie_embeddings else params["lm_head"])
+        logits = x @ w.astype(x.dtype)
+        return logical_constraint(logits, ("batch", None, "vocab"))
+
+    # ------------------------------------------------------------- modes --
+
+    def forward_train(self, params, tokens, extra=None):
+        """tokens: (B,S) -> logits (B,S,V) [token positions only], aux."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        prefix = self._prefix(params, extra)
+        P = 0
+        if prefix is not None:
+            P = prefix.shape[1]
+            x = jnp.concatenate([prefix, x], axis=1)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        ctx = {"positions": positions}
+        aux_total = jnp.zeros((), jnp.float32)
+        for g, gp in zip(self.groups, params["groups"]):
+            body = _maybe_remat(lambda xx, lp, g=g: g.train(lp, xx, ctx), cfg)
+            x, auxs = jax.lax.scan(body, x, gp)
+            aux_total = aux_total + auxs.sum()
+        x = rmsnorm(x, params["norm_f"].astype(x.dtype), cfg.norm_eps)
+        logits = self._head(params, x[:, P:])
+        return logits, aux_total
+
+    def prefill(self, params, tokens, extra=None):
+        """-> (last-position logits (B,V), caches, next_pos)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        prefix = self._prefix(params, extra)
+        if prefix is not None:
+            x = jnp.concatenate([prefix, x], axis=1)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        ctx = {"positions": positions}
+        caches = []
+        for g, gp in zip(self.groups, params["groups"]):
+            def body(xx, lp, g=g):
+                xx, cache, _ = g.prefill(lp, xx, ctx)
+                return xx, cache
+            x, gc = jax.lax.scan(body, x, gp)
+            caches.append(gc)
+        x = rmsnorm(x, params["norm_f"].astype(x.dtype), cfg.norm_eps)
+        return self._head(params, x[:, -1:])[:, 0], caches, S
+
+    def decode_step(self, params, token, caches, pos):
+        """token: (B,1) int32; pos: scalar int32 — write index into caches."""
+        cfg = self.cfg
+        x = self._embed(params, token)
+        ctx = {}
+        new_caches = []
+        for g, gp, gc in zip(self.groups, params["groups"], caches):
+            def body(xx, inp, g=g):
+                lp, cache = inp
+                xx, c2 = g.decode(lp, xx, cache, pos, ctx)
+                return xx, c2
+            x, gc2 = jax.lax.scan(body, x, (gp, gc))
+            new_caches.append(gc2)
+        x = rmsnorm(x, params["norm_f"].astype(x.dtype), cfg.norm_eps)
+        return self._head(params, x)[:, 0], new_caches
+
+    def init_caches(self, batch: int, seq: int, dtype=None):
+        dtype = dtype or self.cfg.activation_dtype
+        out = []
+        for g in self.groups:
+            one = g.init_cache(batch, seq, dtype)
+            out.append(jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (g.n,) + l.shape), one))
+        return out
+
+    # --------------------------------------------------------------- loss --
+
+    def loss(self, params, batch):
+        """batch: {tokens (B,S), targets (B,S), [patches]} -> scalar CE."""
+        logits, aux = self.forward_train(params, batch["tokens"], batch)
+        ce = softmax_xent(logits, batch["targets"])
+        return ce + 0.01 * aux
+
+
+def softmax_xent(logits, targets):
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+# -------------------------------------------------------------- enc-dec ----
+
+@dataclass
+class EncDecLM:
+    """Whisper-style encoder-decoder; audio frontend is a stub (pre-embedded
+    frames per the brief). Decoder = causal self-attn + cross-attn + MLP."""
+
+    cfg: ModelConfig
+
+    class DecCache(NamedTuple):
+        self_kv: attn.KVCache
+        cross_kv: attn.KVCache
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 6)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "attn": attn.init_attention(k1, cfg),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+            }
+
+        def dec_layer(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {
+                "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "self": attn.init_attention(k1, cfg),
+                "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+                "cross": attn.init_cross_attention(k2, cfg),
+                "ln3": jnp.ones((cfg.d_model,), jnp.float32),
+                "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff),
+            }
+
+        return {
+            "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+            "enc": jax.vmap(enc_layer)(jax.random.split(ks[1], cfg.encoder_layers)),
+            "dec": jax.vmap(dec_layer)(jax.random.split(ks[2], cfg.n_layers)),
+            "norm_enc": jnp.ones((cfg.d_model,), jnp.float32),
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab, scale=0.02),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.activation_dtype)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(xx, lp):
+            h = rmsnorm(xx, lp["ln1"].astype(xx.dtype), cfg.norm_eps)
+            h = attn.attention_train(lp["attn"], h, cfg, pos, causal=False)
+            xx = xx + h
+            f = rmsnorm(xx, lp["ln2"].astype(xx.dtype), cfg.norm_eps)
+            return xx + apply_mlp(lp["mlp"], f), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc"])
+        return rmsnorm(x, params["norm_enc"].astype(x.dtype), cfg.norm_eps)
+
+    def forward_train(self, params, tokens, extra):
+        cfg = self.cfg
+        enc = self.encode(params, extra["frames"])
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(xx, lp):
+            h = rmsnorm(xx, lp["ln1"].astype(xx.dtype), cfg.norm_eps)
+            h = attn.attention_train(lp["self"], h, cfg, pos)
+            xx = xx + h
+            h = rmsnorm(xx, lp["ln2"].astype(xx.dtype), cfg.norm_eps)
+            xx = xx + attn.cross_attention(lp["cross"], h, enc, cfg)
+            f = rmsnorm(xx, lp["ln3"].astype(xx.dtype), cfg.norm_eps)
+            return xx + apply_mlp(lp["mlp"], f), None
+
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["dec"])
+        x = rmsnorm(x, params["norm_f"].astype(x.dtype), cfg.norm_eps)
+        return x @ params["lm_head"].astype(x.dtype), jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward_train(params, batch["tokens"], batch)
+        return softmax_xent(logits, batch["targets"])
+
+    def prefill(self, params, tokens, extra):
+        cfg = self.cfg
+        enc = self.encode(params, extra["frames"])
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        def body(xx, lp):
+            h = rmsnorm(xx, lp["ln1"].astype(xx.dtype), cfg.norm_eps)
+            h, self_kv = attn.attention_prefill(lp["self"], h, cfg, pos)
+            xx = xx + h
+            hd = cfg.hd
+            ck = (enc @ lp["cross"]["wk"].astype(xx.dtype)).reshape(B, -1, cfg.n_kv_heads, hd)
+            cv = (enc @ lp["cross"]["wv"].astype(xx.dtype)).reshape(B, -1, cfg.n_kv_heads, hd)
+            h = rmsnorm(xx, lp["ln2"].astype(xx.dtype), cfg.norm_eps)
+            xx = xx + attn.cross_attention(lp["cross"], h, enc, cfg)
+            f = rmsnorm(xx, lp["ln3"].astype(xx.dtype), cfg.norm_eps)
+            return xx + apply_mlp(lp["mlp"], f), self.DecCache(self_kv, attn.KVCache(ck, cv))
+
+        x, caches = jax.lax.scan(body, x, params["dec"])
+        x = rmsnorm(x, params["norm_f"].astype(x.dtype), cfg.norm_eps)
+        return (x[:, -1] @ params["lm_head"].astype(x.dtype)), caches, S
+
+    def decode_step(self, params, token, caches, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], token, axis=0).astype(cfg.activation_dtype)
+
+        def body(xx, inp):
+            lp, cache = inp
+            h = rmsnorm(xx, lp["ln1"].astype(xx.dtype), cfg.norm_eps)
+            h, self_kv = attn.attention_decode(lp["self"], h, cfg, cache.self_kv, pos)
+            xx = xx + h
+            h = rmsnorm(xx, lp["ln2"].astype(xx.dtype), cfg.norm_eps)
+            xx = xx + attn.cross_attention_cached(lp["cross"], h, cache.cross_kv, cfg)
+            f = rmsnorm(xx, lp["ln3"].astype(xx.dtype), cfg.norm_eps)
+            return xx + apply_mlp(lp["mlp"], f), self.DecCache(self_kv, cache.cross_kv)
+
+        x, new_caches = jax.lax.scan(body, x, (params["dec"], caches))
+        x = rmsnorm(x, params["norm_f"].astype(x.dtype), cfg.norm_eps)
+        return (x[:, 0] @ params["lm_head"].astype(x.dtype)), new_caches
+
+    def init_caches(self, batch: int, seq: int, dtype=None, enc_len: int = 1500):
+        cfg = self.cfg
+        dtype = dtype or cfg.activation_dtype
+        kv = lambda s: attn.KVCache(
+            jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.hd), dtype),
+            jnp.zeros((cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.hd), dtype))
+        return self.DecCache(kv(seq), kv(enc_len))
+
+
+# ------------------------------------------------------------- factories ----
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+def count_params_struct(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    routed = 0
+
+    def walk(path, leaf):
+        nonlocal total, routed
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "experts" in path:
+            routed += n
+
+    def _rec(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                _rec(v, path + "/" + str(k))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                _rec(v, path + f"/{i}")
+        elif hasattr(node, "_asdict"):
+            _rec(node._asdict(), path)
+        else:
+            walk(path, node)
+
+    _rec(shapes, "")
+    if active_only and cfg.moe is not None:
+        E, K = cfg.moe.n_experts, cfg.moe.top_k
+        total = total - routed + routed * K // E
+    return total

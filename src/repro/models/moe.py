@@ -1,0 +1,273 @@
+"""Mixture-of-Experts FFN with *selectable dispatch implementation* — the
+Morpheus idea (runtime-switchable sparse representation) applied where LMs
+actually carry sparsity.
+
+The router's output IS a sparse (slots x tokens) matrix P with T*K non-zeros;
+dispatch is X_e = P @ X and combine is Y = P^T @ (weights * H). The three
+implementations mirror the paper's versions:
+
+  'onehot' : dense masked einsum — the vendor/XLA path (ArmPL analogue).
+             O(T*E*C*D) FLOPs; only sane for smoke-scale configs.
+  'sort'   : sort-by-expert + capacity gather/scatter — the CSR-flavoured
+             general-purpose path (default at scale).
+  'coo'    : dispatch/combine routed through repro.core COO SpMM (the
+             paper's library doing the work; numerically identical to
+             'sort', exercised in tests + MoE benchmarks).
+
+All paths share the same router, capacity, and renormalisation so the
+auto-tuner can switch them per (config, shape) without changing results.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from repro.distributed.sharding import logical_constraint
+
+
+def init_moe(key, cfg, mcfg, dtype=jnp.float32):
+    D, E, F = cfg.d_model, mcfg.n_experts, mcfg.d_expert_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * scale),
+        "experts": {
+            "w_gate": jax.random.normal(ks[1], (E, D, F), dtype) * scale,
+            "w_up": jax.random.normal(ks[2], (E, D, F), dtype) * scale,
+            "w_down": jax.random.normal(ks[3], (E, F, D), dtype) * (1.0 / math.sqrt(F)),
+        },
+    }
+    if mcfg.n_shared:
+        Fs = mcfg.d_shared_ff or mcfg.n_shared * F
+        km = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(km[0], D, Fs, dtype=dtype),
+            "w_up": dense_init(km[1], D, Fs, dtype=dtype),
+            "w_down": dense_init(km[2], Fs, D, dtype=dtype),
+        }
+    return p
+
+
+def _capacity(T: int, K: int, E: int, factor: float) -> int:
+    c = int(math.ceil(T * K / E * factor))
+    return max(8, -(-c // 8) * 8)
+
+
+def _route(p, x, mcfg):
+    """Common router: top-k gates renormalised, plus Switch-style aux loss."""
+    logits = x.astype(jnp.float32) @ p["router"]            # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, mcfg.top_k)           # (T, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux: E * sum_e f_e * P_e
+    E = gates.shape[-1]
+    f = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(1.0) / tope.size
+    P = gates.mean(axis=0)
+    aux = E * jnp.sum(f * P)
+    return topw, tope, aux
+
+
+def _experts_ffn(p, xe):
+    """xe: (E, C, D) -> (E, C, D); bf16 matmuls, f32-safe because silu/mul
+    stay in activation dtype (MXU accumulates f32 internally)."""
+    w_gate = p["w_gate"].astype(xe.dtype)
+    w_up = p["w_up"].astype(xe.dtype)
+    w_down = p["w_down"].astype(xe.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", xe, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def moe_ffn(p, x, cfg, mcfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (T, D) flat tokens -> (y, aux_loss). Dispatch per mcfg.dispatch_impl."""
+    impl = mcfg.dispatch_impl
+    if impl == "onehot":
+        y, aux = _moe_onehot(p, x, cfg, mcfg)
+    elif impl == "coo":
+        y, aux = _moe_coo(p, x, cfg, mcfg)
+    elif impl == "grouped":
+        y, aux = _moe_grouped(p, x, cfg, mcfg)
+    else:
+        y, aux = _moe_sort(p, x, cfg, mcfg)
+    if "shared" in p:
+        from .layers import apply_mlp
+        y = y + apply_mlp(p["shared"], x)
+    return y, aux
+
+
+# ----------------------------------------------------------- grouped path ----
+
+def _num_groups(mcfg, T):
+    """Groups = DP degree (pod x data) from the active mesh, so routing,
+    sort and scatter stay shard-local. Falls back to 1 (== 'sort' path)."""
+    if getattr(mcfg, "n_groups", 0):
+        return mcfg.n_groups
+    from repro.distributed.sharding import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    g = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            g *= mesh.shape[ax]
+    return g if g > 1 and T % g == 0 else 1
+
+
+def _moe_grouped(p, x, cfg, mcfg):
+    """GShard-style per-group dispatch (§Perf iteration M1).
+
+    Tokens are grouped by data shard; routing/sort/scatter are vmapped over
+    groups so every index stays group-local (no cross-shard gathers). The
+    dispatched tensor (G, E, C, D) is sharded G->data, E->model: expert
+    matmuls contract locally and the only cross-device traffic left is the
+    combine's row-parallel all-reduce over the model axis + expert-grad
+    reduction — the same collectives a dense Megatron FFN needs.
+    """
+    T, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    G = _num_groups(mcfg, T)
+    if G == 1:
+        return _moe_sort(p, x, cfg, mcfg)
+    Tg = T // G
+    C = _capacity(Tg, K, E, mcfg.capacity_factor)
+
+    x3 = logical_constraint(x.reshape(G, Tg, D), ("batch", None, None))
+    logits = x3.astype(jnp.float32) @ p["router"]            # (G, Tg, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(gates, K)                     # (G, Tg, K)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    f = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(1.0) / tope.size
+    aux = E * jnp.sum(f * gates.mean(axis=(0, 1)))
+
+    def route_group(topw_g, tope_g):
+        slot, t_s, w_s, keep = _dispatch_indices(tope_g, topw_g, Tg, E, K, C)
+        # slot-space inverse map: which token does each (expert, cap) slot
+        # feed, with what weight (sentinel slot -> token Tg, weight 0).
+        # All slot-space arrays are index/weight vectors (no D dim), so the
+        # heavy tensors are built by GATHER below — shard-local on the
+        # expert axis (see §Perf iteration M1c).
+        t_slot = jnp.full((E * C + 1,), Tg, jnp.int32).at[slot].set(t_s)
+        w_slot = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(
+            jnp.where(keep, w_s, 0.0))
+        return t_slot[: E * C], w_slot[: E * C]
+
+    t_slot, w_slot = jax.vmap(route_group)(topw, tope)        # (G, E*C)
+    t_slot = t_slot.reshape(G, E, C)
+    t_slot = logical_constraint(t_slot, ("batch", "experts", None))
+
+    def gather_group(xg, ts):
+        xpad = jnp.concatenate([xg, jnp.zeros((1, D), xg.dtype)], axis=0)
+        return xpad[ts.reshape(E * C)].reshape(E, C, D)
+
+    xe = jax.vmap(gather_group)(x3, t_slot)                   # (G, E, C, D)
+    xe = logical_constraint(xe, ("batch", "experts", None, None))
+    h = _experts_ffn_grouped(p["experts"], xe)
+    h = logical_constraint(h, ("batch", "experts", None, None))
+
+    def combine(hg, ts, ws):
+        # expert-local scatter-add straight into token space: the cross-shard
+        # reduction then happens on the (Tg, D) OUTPUT (row-parallel psum),
+        # not on the (Tg*K, D) slot-space gather — see §Perf iteration M1b.
+        contrib = hg.reshape(E * C, D) * ws.reshape(E * C)[:, None].astype(hg.dtype)
+        return jnp.zeros((Tg + 1, D), hg.dtype).at[ts.reshape(E * C)].add(contrib)[:Tg]
+
+    y3 = jax.vmap(combine)(h, t_slot.reshape(G, E * C), w_slot)  # (G, Tg, D)
+    y3 = logical_constraint(y3, ("batch", None, None))
+    return y3.reshape(T, D).astype(x.dtype), aux
+
+
+def _experts_ffn_grouped(p, xe):
+    """xe: (G, E, C, D) -> (G, E, C, D); contraction is local per (g, e)."""
+    w_gate = p["w_gate"].astype(xe.dtype)
+    w_up = p["w_up"].astype(xe.dtype)
+    w_down = p["w_down"].astype(xe.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate)) * jnp.einsum(
+        "gecd,edf->gecf", xe, w_up)
+    return jnp.einsum("gecf,efd->gecd", h, w_down)
+
+
+# ------------------------------------------------------------- sort path ----
+
+def _dispatch_indices(tope, topw, T, E, K, C):
+    """Shared routing -> slot assignment. Returns (slot, tok, w, keep) flat."""
+    e_flat = tope.reshape(-1)                               # (T*K,)
+    t_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    w_flat = topw.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)                # group by expert
+    e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+    # position within the expert's segment = index - first occurrence of e_s
+    pos = jnp.arange(T * K, dtype=jnp.int32) - jnp.searchsorted(
+        e_s, e_s, side="left").astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, e_s * C + pos, E * C)            # overflow slot
+    return slot, t_s, w_s, keep
+
+
+def _moe_sort(p, x, cfg, mcfg):
+    T, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = _capacity(T, K, E, mcfg.capacity_factor)
+    topw, tope, aux = _route(p, x, mcfg)
+    slot, t_s, w_s, keep = _dispatch_indices(tope, topw, T, E, K, C)
+
+    xe = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(x[t_s])
+    xe = xe[: E * C].reshape(E, C, D)
+    xe = logical_constraint(xe, ("experts", "expert_cap", None))
+    h = _experts_ffn(p["experts"], xe)
+    h = logical_constraint(h, ("experts", "expert_cap", None))
+    h_flat = jnp.concatenate([h.reshape(E * C, D),
+                              jnp.zeros((1, D), h.dtype)], axis=0)
+    contrib = h_flat[slot] * jnp.where(keep, w_s, 0.0)[:, None].astype(h.dtype)
+    y = jnp.zeros((T, D), h.dtype).at[t_s].add(contrib)
+    return y.astype(x.dtype), aux
+
+
+# ----------------------------------------------------------- onehot path ----
+
+def _moe_onehot(p, x, cfg, mcfg):
+    """GShard-style dense dispatch (vendor path; O(T*E*C*D))."""
+    T, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = _capacity(T, K, E, mcfg.capacity_factor)
+    topw, tope, aux = _route(p, x, mcfg)
+    slot, t_s, w_s, keep = _dispatch_indices(tope, topw, T, E, K, C)
+    # dense dispatch tensor (T, E*C) built from the same slot assignment
+    disp = jnp.zeros((T, E * C + 1), x.dtype).at[t_s, slot].set(
+        jnp.where(keep, 1.0, 0.0).astype(x.dtype))[:, : E * C]
+    comb = jnp.zeros((T, E * C + 1), jnp.float32).at[t_s, slot].set(
+        jnp.where(keep, w_s, 0.0))[:, : E * C]
+    xe = jnp.einsum("ts,td->sd", disp, x).reshape(E, C, D)
+    h = _experts_ffn(p["experts"], xe).reshape(E * C, D)
+    y = jnp.einsum("ts,sd->td", comb.astype(h.dtype), h)
+    return y.astype(x.dtype), aux
+
+
+# -------------------------------------------------------------- coo path ----
+
+def _moe_coo(p, x, cfg, mcfg):
+    """Dispatch/combine as repro.core COO SpMM — the paper's library in the
+    LM hot loop. P: (E*C, T) with T*K entries; X_e = P @ X; Y = (P*w)^T @ H."""
+    from repro.core.formats import COO
+    from repro.core.spmv import spmm
+
+    T, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = _capacity(T, K, E, mcfg.capacity_factor)
+    topw, tope, aux = _route(p, x, mcfg)
+    slot, t_s, w_s, keep = _dispatch_indices(tope, topw, T, E, K, C)
+
+    ones = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    P_disp = COO(slot.astype(jnp.int32), t_s.astype(jnp.int32), ones, (E * C, T))
+    xe = spmm(P_disp, x).reshape(E, C, D)
+    h = _experts_ffn(p["experts"], xe).reshape(E * C, D)
+    # combine: transpose by swapping row/col; rows (tokens) unsorted is fine
+    # for the scatter-add plain impl (Algorithm 1 has no order requirement).
+    w = jnp.where(keep, w_s, 0.0).astype(h.dtype)
+    P_comb = COO(t_s.astype(jnp.int32), slot.astype(jnp.int32), w, (T, E * C + 1))
+    h_pad = jnp.concatenate([h, jnp.zeros((1, D), h.dtype)], axis=0)
+    y = spmm(P_comb, h_pad)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,143 @@
+"""RWKV-6 (Finch) block: attention-free time-mix with *data-dependent decay*
+(the headline v6 feature, arXiv:2404.05892) + squared-ReLU channel-mix.
+
+Recurrent state per layer: (tm_shift (B,D), cm_shift (B,D), wkv (B,H,hd,hd)).
+Train/prefill scan over time; decode is one step. Sub-quadratic by
+construction — this is why rwkv6 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jnp.ndarray  # (B, D) previous token (time-mix)
+    cm_shift: jnp.ndarray  # (B, D) previous token (channel-mix)
+    wkv: jnp.ndarray       # (B, H, hd, hd) f32 state
+
+
+def _dims(cfg):
+    hd = cfg.rwkv_head_size
+    H = cfg.d_model // hd
+    return H, hd
+
+
+def init_rwkv(key, cfg, dtype=jnp.float32):
+    D = cfg.d_model
+    H, hd = _dims(cfg)
+    lora = 64
+    dd_lora = 64
+    ks = jax.random.split(key, 16)
+    p = {
+        # token-shift mixing coefficients (static part)
+        "mu_x": jnp.full((D,), 0.5, jnp.float32),
+        "mu": jnp.full((5, D), 0.5, jnp.float32),           # r,w,k,v,g
+        # data-dependent lerp lora (v6 ddlerp)
+        "ddl_w1": dense_init(ks[0], D, 5 * lora, dtype=dtype),
+        "ddl_w2": (jax.random.normal(ks[1], (5, lora, D), dtype) * 0.01),
+        # projections
+        "tm_r": dense_init(ks[2], D, H * hd, dtype=dtype),
+        "tm_k": dense_init(ks[3], D, H * hd, dtype=dtype),
+        "tm_v": dense_init(ks[4], D, H * hd, dtype=dtype),
+        "tm_g": dense_init(ks[5], D, H * hd, dtype=dtype),
+        "tm_o": dense_init(ks[6], H * hd, D, dtype=dtype),
+        # data-dependent decay (v6): w = exp(-exp(w0 + lora(x)))
+        "w0": jnp.full((H * hd,), -6.0, jnp.float32),
+        "wd_w1": dense_init(ks[7], D, dd_lora, dtype=dtype),
+        "wd_w2": (jax.random.normal(ks[8], (dd_lora, H * hd), dtype) * 0.01),
+        "bonus_u": (jax.random.normal(ks[9], (H, hd), jnp.float32) * 0.1),
+        "ln_x_w": jnp.ones((H * hd,), jnp.float32),
+        "ln_x_b": jnp.zeros((H * hd,), jnp.float32),
+        # channel mix
+        "cm_mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "cm_mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "cm_r": dense_init(ks[10], D, D, dtype=dtype),
+        "cm_k": dense_init(ks[11], D, cfg.d_ff, dtype=dtype),
+        "cm_v": dense_init(ks[12], cfg.d_ff, D, dtype=dtype),
+    }
+    return p
+
+
+def _ddlerp(p, x, xx):
+    """v6 data-dependent token-shift: per-channel lerp coeffs from a LoRA."""
+    xd = xx - x
+    base = x + xd * p["mu_x"].astype(x.dtype)
+    z = jnp.tanh(base @ p["ddl_w1"].astype(x.dtype))        # (...,5*lora)
+    z = z.reshape(*z.shape[:-1], 5, -1)
+    off = jnp.einsum("...fl,fld->...fd", z, p["ddl_w2"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype) + off                     # (...,5,D)
+    return tuple(x + xd * mix[..., i, :] for i in range(5))  # r,w,k,v,g
+
+
+def _wkv_step(S, r, k, v, w, u):
+    """One WKV recurrence step (all (B,H,hd) except S (B,H,hd,hd) f32).
+    y = r . (S + u * k^T v);  S' = diag(w) S + k^T v."""
+    kv = k[..., :, None] * v[..., None, :]                  # (B,H,hd,hd)
+    y = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    return S, y
+
+
+def rwkv_time_mix(p, x, cfg, state: RWKVState | None):
+    """x: (B,S,D) -> (y, new_tm_shift, new_wkv)."""
+    B, S, D = x.shape
+    H, hd = _dims(cfg)
+    prev = state.tm_shift[:, None, :] if state is not None else jnp.zeros((B, 1, D), x.dtype)
+    xx = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)  # shifted
+    xr, xw, xk, xv, xg = _ddlerp(p, x, xx)
+    r = (xr @ p["tm_r"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (xk @ p["tm_k"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (xv @ p["tm_v"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["tm_g"].astype(x.dtype))
+    # data-dependent decay per channel
+    wlog = p["w0"] + (jnp.tanh(xw @ p["wd_w1"].astype(x.dtype)).astype(jnp.float32)
+                      @ p["wd_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B, S, H, hd)        # in (0,1)
+    u = p["bonus_u"]
+
+    S0 = state.wkv if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(Sc, inp):
+        rt, kt, vt, wt = inp
+        Sc, y = _wkv_step(Sc, rt.astype(jnp.float32), kt.astype(jnp.float32),
+                          vt.astype(jnp.float32), wt, u)
+        return Sc, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    Sn, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, H * hd)
+    # per-head groupnorm (ln over hd within head)
+    yf = y.astype(jnp.float32).reshape(B, S, H, hd)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = ((yf - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, H * hd)
+    y = (yf * p["ln_x_w"] + p["ln_x_b"]).astype(x.dtype)
+    out = (y * g) @ p["tm_o"].astype(x.dtype)
+    return out, x[:, -1, :], Sn
+
+
+def rwkv_channel_mix(p, x, cfg, state: RWKVState | None):
+    B, S, D = x.shape
+    prev = state.cm_shift[:, None, :] if state is not None else jnp.zeros((B, 1, D), x.dtype)
+    xx = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+    xd = xx - x
+    xr = x + xd * p["cm_mu_r"].astype(x.dtype)
+    xk = x + xd * p["cm_mu_k"].astype(x.dtype)
+    r = jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    return r * (k @ p["cm_v"].astype(x.dtype)), x[:, -1, :]
+
+
+def init_rwkv_state(cfg, batch: int, dtype) -> RWKVState:
+    H, hd = _dims(cfg)
+    return RWKVState(
+        jnp.zeros((batch, cfg.d_model), dtype),
+        jnp.zeros((batch, cfg.d_model), dtype),
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+    )

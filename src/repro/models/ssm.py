@@ -1,0 +1,120 @@
+"""Mamba (S6) block for the Jamba hybrid — selective SSM with conv frontend.
+
+Train/prefill run a lax.scan over time (carry = (B, d_inner, d_state) f32
+state); decode is a single recurrence step against a (conv window, ssm state)
+cache. The sequential scan is the faithful baseline; the chunked SSD
+reformulation is a §Perf candidate (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv-1, d_inner) trailing inputs
+    ssm: jnp.ndarray   # (B, d_inner, d_state) f32
+
+
+def _dims(cfg):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank, m.d_state, m.d_conv
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": jax.random.normal(ks[1], (d_conv, d_inner), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype=dtype),
+        "dt_bias": jnp.log(jnp.exp(jnp.clip(
+            jax.random.uniform(ks[4], (d_inner,)) * (0.1 - 1e-3) + 1e-3, 1e-4, None)) - 1.0
+        ).astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, cfg.d_model, dtype=dtype),
+    }
+
+
+def _ssm_step(h, xt, dt, Bt, Ct, A):
+    """One recurrence step. h:(B,di,ds) f32; xt,dt:(B,di); Bt,Ct:(B,ds)."""
+    dA = jnp.exp(dt[..., None] * A[None])                   # (B, di, ds)
+    dBx = (dt * xt)[..., None] * Bt[:, None, :]             # (B, di, ds)
+    h = h * dA + dBx
+    y = jnp.einsum("bds,bs->bd", h, Ct)                     # (B, di)
+    return h, y
+
+
+def _pre_scan(p, x, cfg, conv_ctx=None):
+    """Shared projections; x: (B,S,D). Returns xz components + scan inputs."""
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    B, S, _ = x.shape
+    xz = x @ p["in_proj"].astype(x.dtype)                   # (B,S,2*di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # depthwise causal conv over time
+    ctx = conv_ctx if conv_ctx is not None else jnp.zeros((B, d_conv - 1, d_inner), xi.dtype)
+    xpad = jnp.concatenate([ctx.astype(xi.dtype), xi], axis=1)
+    conv_w = p["conv_w"].astype(xi.dtype)
+    xc = sum(xpad[:, i : i + S] * conv_w[i] for i in range(d_conv))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(xi.dtype))
+    proj = xc @ p["x_proj"].astype(xi.dtype)                # (B,S,dtr+2ds)
+    dt_r, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"].astype(xi.dtype)).astype(jnp.float32) + p["dt_bias"])
+    new_ctx = xpad[:, S:, :] if S >= d_conv - 1 else xpad[:, -(d_conv - 1):, :]
+    return xc, z, dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32), new_ctx
+
+
+def mamba_forward(p, x, cfg, state: MambaState | None = None
+                  ) -> Tuple[jnp.ndarray, MambaState]:
+    """Full-sequence forward. x: (B,S,D) -> (B,S,D), final state."""
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    B, S, _ = x.shape
+    A = -jnp.exp(p["A_log"])
+    conv_ctx = state.conv if state is not None else None
+    xc, z, dt, Bc, Cc, new_ctx = _pre_scan(p, x, cfg, conv_ctx)
+    h0 = state.ssm if state is not None else jnp.zeros((B, d_inner, d_state), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        h, y = _ssm_step(h, xt.astype(jnp.float32), dtt, Bt, Ct, A)
+        return h, y
+
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)               # (B,S,di)
+    y = y + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, MambaState(new_ctx.astype(x.dtype), h)
+
+
+def mamba_decode(p, x, cfg, state: MambaState) -> Tuple[jnp.ndarray, MambaState]:
+    """Single-token step. x: (B,1,D)."""
+    A = -jnp.exp(p["A_log"])
+    xc, z, dt, Bc, Cc, new_ctx = _pre_scan(p, x, cfg, state.conv)
+    h, y = _ssm_step(state.ssm, xc[:, 0].astype(jnp.float32), dt[:, 0], Bc[:, 0], Cc[:, 0], A)
+    y = y.astype(x.dtype)[:, None, :] + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, MambaState(new_ctx.astype(x.dtype), h)
+
+
+def init_mamba_state(cfg, batch: int, dtype) -> MambaState:
+    d_inner, _, d_state, d_conv = _dims(cfg)
+    return MambaState(
+        jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    )

@@ -1,0 +1,95 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX (no optax).
+
+Optimizer state shards exactly like params (moments inherit the param
+PartitionSpec), so the sharded train step needs no extra rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray   # () int32
+    m: Any              # like params (f32)
+    v: Any              # like params (f32)
+    master: Any = None  # mixed-precision ZeRO: f32 master copy when the
+                        # compute params are bf16 (None otherwise)
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    keep_master: bool = False   # True: params are bf16, master f32 in state
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params, keep_master: bool = False) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = (jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+              if keep_master else None)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree_util.tree_map(zeros, params),
+                      jax.tree_util.tree_map(zeros, params),
+                      master)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, mp):
+        """mp: f32 master (== p when no master kept)."""
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        step_dir = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * mp
+        mp_new = mp - lr * step_dir
+        return mp_new.astype(p.dtype), m, v, mp_new
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    flat_mp = (jax.tree_util.tree_leaves(state.master) if state.master is not None
+               else [p.astype(jnp.float32) for p in flat_p])
+    out = [upd(p, g, m, v, mp)
+           for p, g, m, v, mp in zip(flat_p, flat_g, flat_m, flat_v, flat_mp)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    new_mp = (jax.tree_util.tree_unflatten(tdef, [o[3] for o in out])
+              if state.master is not None else None)
+    return new_p, AdamWState(step, new_m, new_v, new_mp), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,216 @@
+"""Three-term roofline from compiled XLA artifacts (TPU v5e model).
+
+compute   = HLO_FLOPs_per_device / peak_FLOPs        (197 TFLOP/s bf16)
+memory    = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+collective= collective_operand_bytes_per_device / link_bw   (~50 GB/s/link)
+
+cost_analysis() and the post-SPMD HLO are *per-device*, so dividing by
+per-chip peaks is identical to the brief's global/(chips*peak) formula.
+Collective bytes are parsed from compiled.as_text(): sum of operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(two-pass: build result-shape table, then sum named operands).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^=]*?\)|[^\s]+)\s+([\w\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """bytes of 'f32[128,256]{1,0}' or tuple '(f32[2], u32[])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+    entry_bytes: int = 0      # collectives in the entry computation (run once)
+    body_bytes: int = 0       # collectives inside loop-body computations
+    entry_wire: int = 0       # ring-wire estimates (see _WIRE_FACTOR)
+    body_wire: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def corrected_bytes(self, loop_multiplier: int) -> int:
+        """While bodies execute `loop_multiplier` times (scan-over-layers trip
+        count x microbatches) but appear once in the HLO text."""
+        return self.entry_bytes + self.body_bytes * loop_multiplier
+
+    def corrected_wire(self, loop_multiplier: int) -> int:
+        return self.entry_wire + self.body_wire * loop_multiplier
+
+
+def _wire_estimate(kind: str, operand_bytes: int, result_bytes: int) -> int:
+    """Ring-algorithm wire bytes per device: all-reduce moves ~2x its operand,
+    all-gather moves ~its (full) result, reduce-scatter/all-to-all/permute
+    move ~their operand."""
+    if kind == "all-reduce":
+        return 2 * operand_bytes
+    if kind == "all-gather":
+        return max(result_bytes, operand_bytes)
+    return operand_bytes
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    # pass 1: result shapes of all instructions + their enclosing computation
+    shapes: Dict[str, str] = {}
+    instrs = []
+    in_entry = False
+    for line in hlo_text.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            in_entry = bool(cm.group(1))
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, op = m.group(1).lstrip("%"), m.group(2), m.group(3)
+        shapes[name] = shape
+        base = op.rstrip(".0123456789")
+        for c in _COLLECTIVES:
+            if base == c or base == c + "-start" or base == c + "-done":
+                instrs.append((name, shape, c, base, line, in_entry))
+                break
+    # pass 2: operand bytes (operands appear as %name refs inside parens)
+    stats = CollectiveStats()
+    for name, shape, kind, base, line, entry in instrs:
+        if base.endswith("-done"):
+            continue  # avoid double counting async pairs
+        paren = line.split("(", 1)
+        operand_bytes = 0
+        if len(paren) == 2:
+            ops = re.findall(r"%([\w.\-]+)", paren[1])
+            for o in ops:
+                if o in shapes:
+                    operand_bytes += shape_bytes(shapes[o])
+        if operand_bytes == 0:  # fallback: result shape
+            operand_bytes = shape_bytes(shape)
+        wire = _wire_estimate(kind, operand_bytes, shape_bytes(shape))
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + operand_bytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+        if entry:
+            stats.entry_bytes += operand_bytes
+            stats.entry_wire += wire
+        else:
+            stats.body_bytes += operand_bytes
+            stats.body_wire += wire
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collectives: Dict[str, int]
+    collective_counts: Dict[str, int]
+    raw_flops: float = 0.0           # uncorrected cost_analysis (loop bodies x1)
+    raw_hbm_bytes: float = 0.0
+    raw_collective_bytes: float = 0.0
+    loop_multiplier: int = 1
+    wire_bytes: float = 0.0          # ring-wire estimate (loop-corrected)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.collective_bytes,
+            "collective_bytes_by_kind": self.collectives,
+            "collective_counts": self.collective_counts,
+            "raw_cost_analysis": {"flops": self.raw_flops,
+                                  "bytes_accessed": self.raw_hbm_bytes,
+                                  "collective_bytes_uncorrected": self.raw_collective_bytes},
+            "loop_multiplier": self.loop_multiplier,
+            "wire_bytes_per_device": self.wire_bytes,
+            "t_collective_wire_s": self.wire_bytes / LINK_BW,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+        }
+
+
+def analyze(compiled, hlo_text: Optional[str] = None, loop_multiplier: int = 1,
+            analytic=None) -> Roofline:
+    """Roofline terms. FLOPs/bytes come from `analytic` (AnalyticCost) when
+    given — XLA's cost_analysis under-counts loop bodies (see analytic.py) —
+    with the raw numbers kept alongside. Collective bytes come from the HLO
+    parse with loop-body correction."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    stats = parse_collectives(text)
+    flops = analytic.flops_per_device if analytic else raw_flops
+    hbm = analytic.hbm_bytes_per_device if analytic else raw_hbm
+    return Roofline(flops, hbm, float(stats.corrected_bytes(loop_multiplier)),
+                    stats.bytes_by_kind, stats.count_by_kind,
+                    raw_flops, raw_hbm, float(stats.total_bytes), loop_multiplier,
+                    float(stats.corrected_wire(loop_multiplier)))
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """MODEL_FLOPS per device: 6*N*D train / 2*N*D_token decode-prefill
+    (N = active params)."""
+    n_active = cfg.active_param_count()
+    toks = shape.tokens if shape.kind != "decode" else shape.global_batch
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * toks / chips

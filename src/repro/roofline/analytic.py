@@ -1,0 +1,144 @@
+"""Analytic per-device FLOP/byte model for the roofline terms.
+
+WHY THIS EXISTS: XLA's HloCostAnalysis counts a ``while`` body ONCE, so any
+scan (over layers, kv chunks, recurrence steps) makes ``cost_analysis()``
+under-count by the trip count — we measured useful/HLO = 3.6x > 1 for
+llama3.2-1b train_4k, which is physically impossible. The dry-run therefore
+records BOTH the raw cost_analysis numbers AND this analytic model
+(cross-checked against raw numbers on scan-free modules), and the roofline
+terms use the analytic FLOPs/bytes + the trip-count-corrected collective
+parse. See EXPERIMENTS.md §Dry-run for the validation.
+
+Conventions (documented assumptions):
+  - matmul-parameter FLOPs: fwd 2NT, bwd 4NT, remat re-fwd +2NT
+  - attention scores/PV: full S^2 (the chunked kernel computes masked chunks
+    too — an acknowledged 2x opportunity listed in §Perf)
+  - training params/optimizer in f32 (4B), serving weights in bf16 (2B)
+  - activations bf16, k_act ~= 12 streamed tensors per layer per direction
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeCell
+
+
+@dataclass
+class AnalyticCost:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    detail: dict
+
+
+def _layer_counts(cfg: ModelConfig):
+    """(attn_layers, mamba_layers, rwkv_layers)."""
+    if cfg.rwkv:
+        return 0, 0, cfg.n_layers
+    if cfg.attn_period:
+        n_attn = cfg.n_layers // cfg.attn_period
+        return n_attn, cfg.n_layers - n_attn, 0
+    return cfg.n_layers + cfg.encoder_layers, 0, 0
+
+
+def attention_flops_fwd(cfg: ModelConfig, B: int, Sq: int, Skv: int) -> float:
+    """QK + PV for ONE attention layer, full (unskipped) S^2."""
+    H = cfg.n_heads
+    if cfg.mla is not None:
+        hd_qk = cfg.mla.nope_head_dim + cfg.mla.rope_head_dim
+        hd_v = cfg.mla.v_head_dim
+    else:
+        hd_qk = hd_v = cfg.hd
+    return 2.0 * B * H * Sq * Skv * (hd_qk + hd_v)
+
+
+def recurrence_flops_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    """One mamba or rwkv layer's recurrence (excl. projections = in params)."""
+    if cfg.rwkv:
+        H = cfg.d_model // cfg.rwkv_head_size
+        return 5.0 * B * S * H * cfg.rwkv_head_size ** 2
+    if cfg.mamba is not None:
+        di = cfg.mamba.expand * cfg.d_model
+        return 12.0 * B * S * di * cfg.mamba.d_state
+    return 0.0
+
+
+def cost(cfg: ModelConfig, shape: ShapeCell, chips: int,
+         microbatches: int = 1) -> AnalyticCost:
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.active_param_count()
+    P_total = cfg.param_count()
+    n_attn, n_mamba, n_rwkv = _layer_counts(cfg)
+    remat = 1.0 if (cfg.remat == "full" and shape.kind == "train") else 0.0
+    # causal chunk skipping computes the lower triangle only (+ diagonal
+    # chunk overhead): ~0.52 of the full S^2 at 1k chunks over 4k seq
+    attn_frac = 0.52 if cfg.causal_skip else 1.0
+
+    if shape.kind == "train":
+        T = B * S
+        f_param = (6.0 + 2.0 * remat) * N * T
+        f_attn = n_attn * attention_flops_fwd(cfg, B, S, S) * (3.0 + remat) * attn_frac
+        f_rec = (n_mamba + n_rwkv) * recurrence_flops_fwd(cfg, B, S) * (3.0 + remat)
+        flops = (f_param + f_attn + f_rec) / chips
+
+        pbytes = 4.0  # f32 master params
+        # params: fwd + bwd + remat reads, grads rw, opt read p/m/v write p/m/v
+        b_param = P_total * pbytes * (2 + remat) + P_total * 4.0 * (2 + 6)
+        k_act = 12.0
+        L = max(1, cfg.n_layers + cfg.encoder_layers)
+        b_act = k_act * L * T * cfg.d_model * 2.0 * (2 + remat)
+        b_logits = 3.0 * T * cfg.vocab * 2.0 * 2
+        # params shard over TP only (replicated across DP) -> /tp per device;
+        # activations/logits shard over batch (and vocab) -> /chips.
+        tp = min(chips, 16)
+        hbm = b_param / tp + b_logits / chips + b_act / chips
+        detail = dict(f_param=f_param, f_attn=f_attn, f_rec=f_rec,
+                      b_param=b_param, b_act=b_act, b_logits=b_logits)
+        return AnalyticCost(flops, hbm, detail)
+
+    if shape.kind == "prefill":
+        T = B * S
+        f_param = 2.0 * N * T
+        f_attn = n_attn * attention_flops_fwd(cfg, B, S, S)
+        f_rec = (n_mamba + n_rwkv) * recurrence_flops_fwd(cfg, B, S)
+        flops = (f_param + f_attn + f_rec) / chips
+        tp = min(chips, 16)
+        b_param = P_total * 2.0 / tp              # bf16 serving weights
+        b_act = 8.0 * max(1, cfg.n_layers + cfg.encoder_layers) * T * cfg.d_model * 2.0 / chips
+        b_cache = _cache_bytes(cfg, B, S) / chips
+        hbm = b_param + b_act + b_cache
+        return AnalyticCost(flops, hbm, dict(f_param=f_param, f_attn=f_attn,
+                                             f_rec=f_rec, b_param=b_param * tp,
+                                             b_act=b_act * chips, b_cache=b_cache * chips))
+
+    # decode: one token, cache of length S
+    f_param = 2.0 * N * B
+    f_attn = n_attn * attention_flops_fwd(cfg, B, 1, S)
+    f_rec = (n_mamba + n_rwkv) * recurrence_flops_fwd(cfg, B, 1)
+    flops = (f_param + f_attn + f_rec) / chips
+    tp = min(chips, 16)
+    b_param = P_total * 2.0 / tp
+    b_cache = _cache_bytes(cfg, B, S)            # read whole cache every token
+    b_act = 20.0 * max(1, cfg.n_layers) * B * cfg.d_model * 2.0
+    hbm = b_param + (b_cache + b_act) / chips
+    return AnalyticCost(flops, hbm, dict(f_param=f_param, f_attn=f_attn, f_rec=f_rec,
+                                         b_param=b_param * tp, b_cache=b_cache))
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    """Global KV/state cache bytes (bf16)."""
+    n_attn, n_mamba, n_rwkv = _layer_counts(cfg)
+    n_attn -= cfg.encoder_layers  # encoder has no decode cache
+    total = 0.0
+    if cfg.mla is not None:
+        total += cfg.n_layers * B * S * (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2.0
+    elif n_attn:
+        total += n_attn * 2 * B * S * cfg.n_kv_heads * cfg.hd * 2.0
+    if n_mamba and cfg.mamba:
+        di = cfg.mamba.expand * cfg.d_model
+        total += n_mamba * B * di * (cfg.mamba.d_state * 4.0 + (cfg.mamba.d_conv - 1) * 2.0)
+    if n_rwkv:
+        H = cfg.d_model // cfg.rwkv_head_size
+        total += n_rwkv * B * H * cfg.rwkv_head_size ** 2 * 4.0
+    if cfg.is_encdec:
+        total += cfg.n_layers * 2 * B * cfg.frontend_tokens * cfg.n_kv_heads * cfg.hd * 2.0
+    return total

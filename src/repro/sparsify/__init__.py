@@ -1,0 +1,50 @@
+"""Bridge between the paper's sparse library and the LM stack.
+
+- MoE dispatch-as-SpMM with runtime-switchable implementation lives in
+  ``repro.models.moe`` (re-exported here): 'sort' | 'onehot' | 'coo' |
+  'grouped' — the Morpheus format-switching idea where LMs actually carry
+  sparsity.
+- ``prune_linear_to_bsr`` converts a dense weight into the MXU-native BSR
+  container (magnitude pruning at block granularity); ``bsr_linear`` applies
+  it through the Pallas scalar-prefetch SpMM kernel.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.moe import moe_ffn  # noqa: F401  (dispatch impls)
+from repro.core.formats import BSR
+from repro.core.spmv import spmm
+
+
+def prune_linear_to_bsr(w, density: float = 0.25, bs: int = 32) -> BSR:
+    """Keep the top-`density` fraction of (bs x bs) blocks of w (in, out) by
+    Frobenius norm; returns a BSR container over w^T (out, in) so that
+    y = W_bsr @ x matches x @ w."""
+    w = np.asarray(w, np.float32).T                        # (out, in)
+    out_d, in_d = w.shape
+    nbr, nbc = -(-out_d // bs), -(-in_d // bs)
+    pad = np.zeros((nbr * bs, nbc * bs), np.float32)
+    pad[:out_d, :in_d] = w
+    blocks = pad.reshape(nbr, bs, nbc, bs).transpose(0, 2, 1, 3)  # (nbr,nbc,bs,bs)
+    norms = np.linalg.norm(blocks, axis=(2, 3))
+    k = max(1, int(density * nbr * nbc))
+    thresh = np.partition(norms.reshape(-1), -k)[-k]
+    keep = norms >= thresh
+    bwidth = max(1, int(keep.sum(axis=1).max()))
+    bcols = np.full((nbr, bwidth), -1, np.int32)
+    bdata = np.zeros((nbr, bwidth, bs, bs), np.float32)
+    for r in range(nbr):
+        cols = np.nonzero(keep[r])[0][:bwidth]
+        bcols[r, : len(cols)] = cols
+        bdata[r, : len(cols)] = blocks[r, cols]
+    return BSR(jnp.asarray(bcols), jnp.asarray(bdata), (out_d, in_d))
+
+
+def bsr_linear(A: BSR, x, impl: str = "pallas"):
+    """y = x @ W for the pruned weight (A built over W^T): (..., in) -> (..., out)."""
+    lead = x.shape[:-1]
+    X = x.reshape(-1, x.shape[-1]).T                       # (in, batch)
+    Y = spmm(A, X, impl)                                   # (out, batch)
+    return Y.T.reshape(*lead, A.shape[0])

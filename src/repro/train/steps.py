@@ -1,0 +1,77 @@
+"""Step builders: train_step (fwd+bwd+AdamW, with microbatched gradient
+accumulation), prefill_step, decode_step. These are the functions the
+dry-run lowers and the launcher executes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(model, ocfg: adamw.AdamWConfig, microbatches: int = 1,
+                    grad_shardings=None, accum_dtype=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: batch leading dim is split into `microbatches`
+    chunks consumed by a lax.scan — activations live for one microbatch only.
+    ``grad_shardings`` (ZeRO-2): each microbatch's gradients are constrained
+    to the optimizer's FSDP sharding, so XLA reduce-scatters per microbatch
+    and the accumulator lives sharded over the data axis.
+    """
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def _constrain(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree_util.tree_map(
+            jax.lax.with_sharding_constraint, g, grad_shardings)
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+            mbs = {k: split(v) for k, v in batch.items()}
+
+            adt = accum_dtype or jnp.float32
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g = jax.tree_util.tree_map(lambda x: x.astype(adt), g)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, _constrain(g))
+                return (_constrain(gsum), lsum + l), None
+
+            gz = _constrain(jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, adt), params))
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (gz, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _constrain(grads)
+        params, opt_state, metrics = adamw.update(ocfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(model):
+    def step(params, tokens, extra: Optional[Dict[str, Any]] = None):
+        return model.prefill(params, tokens, extra)
+    return step
+
+
+def make_decode_step(model):
+    def step(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos)
+    return step

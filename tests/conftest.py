@@ -1,0 +1,19 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 1, timeout: int = 420):
+    """Run `code` in a fresh interpreter with `devices` fake host devices
+    (multi-device tests must not pollute this process's jax device state)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    if devices > 1:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    r = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                       capture_output=True, text=True)
+    assert r.returncode == 0, f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}"
+    return r.stdout

@@ -1,0 +1,118 @@
+"""Distribution: sharding rules + divisibility fallback, multi-device
+DistributedSpMV (subprocess with 4 fake devices), gradient compression."""
+import numpy as np
+
+from conftest import run_py
+
+
+def test_spec_divisibility_fallback():
+    """qwen1.5's 20 heads vs model=16: heads replicated, fused dim sharded."""
+    code = """
+import jax
+from repro.launch.mesh import make_production_mesh
+from repro.distributed.sharding import spec_for
+mesh = make_production_mesh()
+# 20 kv heads do not divide 16 -> replicated
+s = spec_for((128, 32768, 20, 128), (None, "batch", "heads_out", None), mesh)
+assert s == jax.sharding.PartitionSpec(None, ("data",)), s
+# fused qkv out dim 2560 divides -> sharded over model
+s2 = spec_for((2560, 2560), ("embed", "heads_out"), mesh)
+assert s2 == jax.sharding.PartitionSpec(None, "model"), s2
+# batch=1 cannot shard
+s3 = spec_for((1, 524288), ("batch", "seq_kv"), mesh,
+              rules={"seq_kv": ("model", "data")})
+assert s3 == jax.sharding.PartitionSpec(None, ("model", "data")), s3
+print("OK")
+"""
+    assert "OK" in run_py(code, devices=512)
+
+
+def test_param_rules_cover_all_archs():
+    """Every param of every full config gets a legal PartitionSpec."""
+    code = """
+import jax
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import params_pspecs
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+mesh = make_production_mesh(multi_pod=True)
+for arch in list_archs():
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(build_model(cfg).init, jax.random.PRNGKey(0))
+    specs = params_pspecs(shapes, mesh)
+    n_sharded = 0
+    for leaf, spec in zip(jax.tree_util.tree_leaves(shapes),
+                          jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))):
+            if ax is None: continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            k = 1
+            for a in axes: k *= mesh.shape[a]
+            assert dim % k == 0, (arch, leaf.shape, spec)
+            n_sharded += 1
+    assert n_sharded > 0, arch
+print("OK")
+"""
+    assert "OK" in run_py(code, devices=512, timeout=600)
+
+
+def test_distributed_spmv_4way():
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import matrices as M
+from repro.core.distributed import DistributedSpMV
+
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+s = M.fdm27(4, 4, 8)   # n=128, 4 parts of 32 rows
+x = np.random.default_rng(0).standard_normal(128).astype(np.float32)
+xs = jax.device_put(x, NamedSharding(mesh, P("data")))
+ref = s.toarray() @ x
+for lf, rf, mode in [("dia", "coo", "auto"), ("csr", "csr", "allgather"),
+                     ("ell", "coo", "auto")]:
+    op = DistributedSpMV.build(s, mesh, "data", lf, rf, mode=mode)
+    y = np.asarray(op(xs))
+    err = np.abs(y - ref).max() / np.abs(ref).max()
+    assert err < 1e-5, (lf, rf, mode, err)
+    if mode == "auto":
+        assert op.halo is not None   # neighbour (ppermute) path exercised
+print("OK")
+"""
+    assert "OK" in run_py(code, devices=4)
+
+
+def test_compressed_allreduce_4way():
+    code = """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.distributed.compression import CompressedAllReduce
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+car = CompressedAllReduce(mesh, "data", chunk=64)
+rng = np.random.default_rng(0)
+n = 2048
+npad = car.padded_len(n)
+vecs = rng.standard_normal((4, n)).astype(np.float32)
+vp = np.zeros((4, npad), np.float32); vp[:, :n] = vecs
+mean, err = car(jnp.asarray(vp), car.init_error(n))
+rel = np.abs(np.asarray(mean)[:n] - vecs.mean(0)).max() / np.abs(vecs.mean(0)).max()
+assert rel < 0.05, rel
+# error feedback: residual equals what quantisation lost (non-zero, bounded)
+e = np.asarray(err)[:, :n]
+assert 0 < np.abs(e).max() < 0.05
+print("OK")
+"""
+    assert "OK" in run_py(code, devices=4)
+
+
+def test_hpcg_distributed_4way():
+    code = """
+import jax, numpy as np
+from jax.sharding import Mesh
+from repro.apps.hpcg import run_hpcg_distributed
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("data",))
+res = run_hpcg_distributed(mesh, 4, 4, 8, iters=20, reps=1, verbose=False)
+assert res.valid, res.rel_err
+assert "local" in res.chosen
+print("OK")
+"""
+    assert "OK" in run_py(code, devices=4)

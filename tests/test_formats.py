@@ -1,0 +1,85 @@
+"""Format containers: conversion exactness + Plain SpMV vs dense oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import available_impls, convert, from_dense, spmm, spmv
+from repro.core import matrices as M
+
+FORMATS = ["coo", "csr", "dia", "ell", "sell", "bsr", "dense"]
+SUITE = list(M.suite("small"))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_to_dense_roundtrip(fmt):
+    for name, s in SUITE:
+        A = from_dense(s, fmt)
+        np.testing.assert_allclose(np.asarray(A.to_dense()),
+                                   s.toarray().astype(np.float32),
+                                   rtol=1e-5, atol=1e-5, err_msg=f"{name}/{fmt}")
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_spmv_plain_matches_dense(fmt):
+    rng = np.random.default_rng(0)
+    for name, s in SUITE:
+        d = s.toarray().astype(np.float32)
+        x = jnp.asarray(rng.standard_normal(d.shape[1]).astype(np.float32))
+        y = np.asarray(spmv(from_dense(s, fmt), x, "plain"))
+        ref = d @ np.asarray(x)
+        scale = np.abs(ref).max() + 1e-9
+        np.testing.assert_allclose(y / scale, ref / scale, atol=5e-5,
+                                   err_msg=f"{name}/{fmt}")
+
+
+def test_convert_between_formats():
+    s = M.banded(96, 4, seed=1)
+    A = from_dense(s, "csr")
+    for fmt in FORMATS:
+        B = convert(A, fmt)
+        assert B.format == fmt
+        np.testing.assert_allclose(np.asarray(B.to_dense()),
+                                   np.asarray(A.to_dense()), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_matches_dense():
+    rng = np.random.default_rng(1)
+    s = M.random_uniform(80, 0.05, seed=2)
+    X = rng.standard_normal((80, 7)).astype(np.float32)
+    ref = s.toarray() @ X
+    for fmt in ["coo", "csr", "bsr", "ell"]:
+        Y = np.asarray(spmm(from_dense(s, fmt), jnp.asarray(X)))
+        np.testing.assert_allclose(Y, ref, rtol=1e-3, atol=1e-4, err_msg=fmt)
+
+
+def test_coo_is_row_sorted():
+    for name, s in SUITE:
+        A = from_dense(s, "coo")
+        rows = np.asarray(A.row)
+        assert (np.diff(rows) >= 0).all(), name
+
+
+def test_sell_perm_is_permutation():
+    s = M.powerlaw(100, 6, seed=0)
+    A = from_dense(s, "sell")
+    perm = np.asarray(A.perm)
+    real = perm[perm < 100]
+    assert sorted(real.tolist()) == list(range(100))
+
+
+def test_registered_impls():
+    for fmt in ["coo", "dia", "ell"]:
+        impls = available_impls(fmt)
+        assert "plain" in impls and "pallas" in impls and "dense" in impls, (fmt, impls)
+
+
+def test_workspace_caches_handles():
+    from repro.core import workspace
+    ws = workspace()
+    h0, m0 = ws.hits, ws.misses
+    s = M.tridiag(64, seed=3)
+    x = jnp.ones((64,), jnp.float32)
+    y1 = ws.spmv(s, x, "dia", "plain")
+    y2 = ws.spmv(s, x, "dia", "plain")
+    assert ws.misses == m0 + 1 and ws.hits == h0 + 1
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))

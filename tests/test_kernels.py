@@ -1,0 +1,131 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the ref.py pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import from_dense
+from repro.core import matrices as M
+from repro.kernels import ref
+from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.coo_spmv import build_scoo, coo_spmv, scoo_spmv
+from repro.kernels.dia_spmv import dia_spmv
+from repro.kernels.ell_spmv import ell_spmv
+
+SHAPES = [(32, 32), (100, 100), (257, 129), (512, 768)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mat(n, m, seed, kind="mixed"):
+    rng = np.random.default_rng(seed)
+    if kind == "banded":
+        import scipy.sparse as sp
+        d = min(n, m)
+        mat = sp.lil_matrix((n, m))
+        for off in (-3, -1, 0, 1, 2):
+            for i in range(n):
+                j = i + off
+                if 0 <= j < m:
+                    mat[i, j] = rng.standard_normal()
+        return mat.tocsr()
+    import scipy.sparse as sp
+    mat = sp.random(n, m, density=0.05, random_state=rng, format="csr")
+    mat.data = rng.standard_normal(len(mat.data))
+    return mat
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dia_kernel_sweep(shape, dtype):
+    n, m = shape
+    s = _mat(n, m, 0, "banded")
+    A = from_dense(s, "dia", dtype=dtype)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(m), dtype)
+    got = np.asarray(dia_spmv(A.offsets, A.data, x), np.float32)
+    want = np.asarray(ref.dia_spmv_ref(A.offsets, A.data.astype(jnp.float32),
+                                       x.astype(jnp.float32), A.shape))
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ell_kernel_sweep(shape, dtype):
+    n, m = shape
+    s = _mat(n, m, 2)
+    A = from_dense(s, "ell", dtype=dtype)
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(m), dtype)
+    got = np.asarray(ell_spmv(A.indices, A.data, x), np.float32)
+    want = np.asarray(ref.ell_spmv_ref(A.indices, A.data.astype(jnp.float32),
+                                       x.astype(jnp.float32)))
+    np.testing.assert_allclose(got, want, **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("tile", [64, 512])
+def test_coo_kernel_sweep(shape, tile):
+    n, m = shape
+    s = _mat(n, m, 4)
+    A = from_dense(s, "coo")
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(m), jnp.float32)
+    got = np.asarray(coo_spmv(A.row, A.col, A.val, x, nrows=n, tile=tile))
+    want = np.asarray(ref.coo_spmv_ref(A.row, A.col, A.val, x, n))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("slice_rows", [64, 256])
+def test_scoo_kernel(slice_rows):
+    n = 300
+    s = _mat(n, n, 6)
+    A = from_dense(s, "coo")
+    x = jnp.asarray(np.random.default_rng(7).standard_normal(n), jnp.float32)
+    rr, cc, vv, sid = build_scoo(A.row, A.col, A.val, n, slice_rows=slice_rows, tile=128)
+    got = np.asarray(scoo_spmv(jnp.asarray(rr), jnp.asarray(cc), jnp.asarray(vv),
+                               jnp.asarray(sid), x, nrows=n,
+                               slice_rows=slice_rows, tile=128))
+    want = np.asarray(ref.coo_spmv_ref(A.row, A.col, A.val, x, n))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("bs", [8, 32])
+@pytest.mark.parametrize("nf", [1, 9, 64])
+def test_bsr_spmm_sweep(bs, nf):
+    n = 160
+    s = M.block_random(n, bs=bs, block_density=0.15, seed=8)
+    A = from_dense(s, "bsr", bs=bs)
+    X = jnp.asarray(np.random.default_rng(9).standard_normal((A.bcols.shape[0] * bs, nf)),
+                    jnp.float32)
+    got = np.asarray(bsr_spmm(A.bcols, A.blocks, X))
+    want = np.asarray(ref.bsr_spmm_ref(A.bcols, A.blocks, X))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_kernels_jit_cacheable():
+    """Same shapes => no retrace (the ArmPL-handle analogy: compile once)."""
+    s = _mat(128, 128, 10, "banded")
+    A = from_dense(s, "dia")
+    x = jnp.ones((128,), jnp.float32)
+    f = jax.jit(lambda o, d, x: dia_spmv(o, d, x))
+    y1 = f(A.offsets, A.data, x)
+    y2 = f(A.offsets, A.data, x * 2)
+    np.testing.assert_allclose(np.asarray(y2), 2 * np.asarray(y1), rtol=1e-5)
+
+
+def test_block_sparse_weight_pruning():
+    """sparsify: BSR-pruned linear matches the dense masked weight."""
+    import jax.numpy as jnp
+    from repro.sparsify import bsr_linear, prune_linear_to_bsr
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((96, 64)).astype(np.float32)
+    A = prune_linear_to_bsr(w, density=0.5, bs=16)
+    x = jnp.asarray(rng.standard_normal((4, 96)).astype(np.float32))
+    y = np.asarray(bsr_linear(A, x))
+    w_masked = np.asarray(A.to_dense()).T[:96, :64]
+    np.testing.assert_allclose(y, np.asarray(x) @ w_masked, rtol=1e-3, atol=1e-4)
+    # w^T is (64, 96) -> 4 block-rows x 6 block-cols; width can't exceed 6
+    assert A.bwidth <= 6
+    kept = int((np.asarray(A.bcols) >= 0).sum())
+    assert kept <= 24  # never more blocks than exist

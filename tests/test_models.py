@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests (deliverable f): reduced config, one forward
+/train step on CPU, output shapes + no NaNs; decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, get_config, list_archs
+from repro.models import build_model, count_params_struct
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32),
+         "targets": jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.frontend == "vision":
+        b["patches"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "audio":
+        b["frames"] = jnp.asarray(
+            rng.standard_normal((B, cfg.frontend_tokens, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    logits, aux = model.forward_train(params, batch["tokens"], batch)
+    assert logits.shape == (B, S, cfg.vocab), arch
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+    # one actual optimizer step
+    from repro.optim import adamw
+    from repro.train.steps import make_train_step
+    step = jax.jit(make_train_step(model, adamw.AdamWConfig(total_steps=10)))
+    p2, o2, metrics = step(params, adamw.init(params), batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum())
+                for a, b in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(p2)))
+    assert delta > 0, arch
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "jamba-v0.1-52b", "rwkv6-7b",
+                                  "deepseek-v2-236b", "qwen3-moe-235b-a22b"])
+def test_decode_matches_train(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:  # avoid capacity drops: decode vs train capacity differs
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    if cfg.mla is not None:
+        # absorbed-form MLA decode is algebraically identical but reassociates
+        # matmuls; run in f32 so the comparison is tight (bf16 drift ~1%)
+        cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 8
+    batch = _batch(cfg, B, S)
+    lt, _ = model.forward_train(params, batch["tokens"], batch)
+    caches = model.init_caches(B, S + 2)
+    dec = jax.jit(model.decode_step)
+    for t in range(S):
+        logits, caches = dec(params, batch["tokens"][:, t:t + 1], caches, t)
+    ref = np.asarray(lt[:, -1], np.float32)
+    got = np.asarray(logits, np.float32)
+    np.testing.assert_allclose(got, ref, rtol=0, atol=0.05 * np.abs(ref).max(),
+                               err_msg=arch)
+
+
+def test_prefill_matches_train_whisper_and_vlm():
+    for arch in ["whisper-base", "internvl2-26b"]:
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg, 2, 8)
+        lt, _ = model.forward_train(params, batch["tokens"], batch)
+        last, caches, _ = model.prefill(params, batch["tokens"], batch)
+        np.testing.assert_allclose(np.asarray(last, np.float32),
+                                   np.asarray(lt[:, -1], np.float32),
+                                   atol=1e-3, err_msg=arch)
+
+
+FULL_PARAM_TARGETS = {  # billions, generous bands (configs are from the pool)
+    "llama3.2-1b": (1.0, 1.6),
+    "mistral-nemo-12b": (11, 14),
+    "command-r-plus-104b": (95, 115),
+    "deepseek-v2-236b": (200, 260),
+    "qwen3-moe-235b-a22b": (210, 260),
+    "jamba-v0.1-52b": (45, 60),
+    "rwkv6-7b": (6, 9),
+    "internvl2-26b": (18, 26),   # LM backbone only (ViT is stubbed)
+    "qwen1.5-4b": (3, 5),
+    "whisper-base": (0.05, 0.12),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_count(arch):
+    """eval_shape-based count of the FULL config (no allocation) lands in the
+    published ballpark — guards against config transcription errors."""
+    cfg = get_config(arch)
+    n = count_params_struct(cfg) / 1e9
+    lo, hi = FULL_PARAM_TARGETS[arch]
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo},{hi}]B"
+
+
+def test_active_params_moe():
+    cfg = get_config("deepseek-v2-236b")
+    total = count_params_struct(cfg)
+    active = count_params_struct(cfg, active_only=True)
+    assert active < 0.25 * total  # ~21B active of 236B

@@ -1,0 +1,88 @@
+"""Hypothesis property tests on the sparse-format system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_dense, spmv
+
+FORMATS = ["coo", "csr", "dia", "ell", "sell", "bsr"]
+
+
+@st.composite
+def sparse_matrices(draw, max_n=48):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(4, max_n))
+    density = draw(st.floats(0.01, 0.3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    mat = sp.random(n, m, density=density, random_state=rng, format="csr")
+    mat.data = rng.standard_normal(len(mat.data))
+    return mat
+
+
+@settings(max_examples=25, deadline=None)
+@given(sparse_matrices(), st.sampled_from(FORMATS))
+def test_roundtrip_preserves_matrix(s, fmt):
+    A = from_dense(s, fmt)
+    np.testing.assert_allclose(np.asarray(A.to_dense()),
+                               s.toarray().astype(np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sparse_matrices(), st.sampled_from(FORMATS), st.integers(0, 2**31 - 1))
+def test_spmv_equals_dense(s, fmt, xseed):
+    x = jnp.asarray(np.random.default_rng(xseed).standard_normal(s.shape[1]),
+                    jnp.float32)
+    y = np.asarray(spmv(from_dense(s, fmt), x, "plain"))
+    ref = s.toarray().astype(np.float32) @ np.asarray(x)
+    scale = max(np.abs(ref).max(), 1.0)
+    np.testing.assert_allclose(y / scale, ref / scale, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparse_matrices(max_n=32), st.sampled_from(FORMATS),
+       st.floats(-3, 3), st.floats(-3, 3), st.integers(0, 2**31 - 1))
+def test_spmv_linearity(s, fmt, a, b, seed):
+    """spmv(A, a*x + b*y) == a*spmv(A,x) + b*spmv(A,y)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(s.shape[1]), jnp.float32)
+    y = jnp.asarray(rng.standard_normal(s.shape[1]), jnp.float32)
+    A = from_dense(s, fmt)
+    lhs = np.asarray(spmv(A, a * x + b * y, "plain"))
+    rhs = a * np.asarray(spmv(A, x, "plain")) + b * np.asarray(spmv(A, y, "plain"))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sparse_matrices(max_n=40))
+def test_pallas_matches_plain(s):
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(s.shape[1]), jnp.float32)
+    for fmt in ["dia", "ell", "coo"]:
+        A = from_dense(s, fmt)
+        yp = np.asarray(spmv(A, x, "plain"))
+        yk = np.asarray(spmv(A, x, "pallas"))
+        np.testing.assert_allclose(yk, yp, rtol=1e-3, atol=1e-4, err_msg=fmt)
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrices(max_n=40))
+def test_coo_sorted_and_padded_consistently(s):
+    A = from_dense(s, "coo")
+    rows = np.asarray(A.row)
+    assert (np.diff(rows) >= 0).all()
+    assert int(np.asarray(A.val != 0).sum()) <= s.nnz
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_dia_banded_exact(band_lo, band_hi, seed):
+    """DIA is exact for banded matrices (its home turf)."""
+    rng = np.random.default_rng(seed)
+    n = 32
+    diags = [rng.standard_normal(n) for _ in range(band_lo + band_hi + 1)]
+    s = sp.diags(diags, list(range(-band_lo, band_hi + 1)), shape=(n, n)).tocsr()
+    A = from_dense(s, "dia")
+    assert A.ndiags == band_lo + band_hi + 1
+    np.testing.assert_allclose(np.asarray(A.to_dense()), s.toarray(), rtol=1e-6)

@@ -1,5 +1,10 @@
 """Shared benchmark utilities. Every figure-module exposes run(scale) ->
 list[dict] rows; benchmarks.run prints them as `name,us_per_call,derived` CSV.
+
+Figure modules drive SpMV through the SparseOperator API: build an operator
+once per (matrix, format), retarget it per backend with ``op.using(...)``
+(policies are pytree aux data, so each backend gets its own jit entry), and
+time the shared jitted ``A @ x``.
 """
 from __future__ import annotations
 
@@ -8,6 +13,24 @@ from typing import Callable
 
 import jax
 import numpy as np
+
+from repro.core import as_operator
+
+
+@jax.jit
+def apply_op(A, x):
+    """Shared jitted SpMV/SpMM entry: retraces per (format, policy)."""
+    return A @ x
+
+
+def time_backend(op, x, backend: str, iters: int = 10, warmup: int = 3) -> float:
+    """Time ``op @ x`` with the operator retargeted to ``backend``."""
+    return time_us(apply_op, op.using(backend), x, iters=iters, warmup=warmup)
+
+
+def operator_for(mat, fmt: str):
+    """Operator over ``mat`` stored as ``fmt`` (conversion cost excluded)."""
+    return as_operator(mat, fmt)
 
 
 def time_us(fn: Callable, *args, iters: int = 10, warmup: int = 3) -> float:

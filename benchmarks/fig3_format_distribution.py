@@ -8,16 +8,18 @@ version (DIA becomes optimal for ~10% of matrices only under SVE).
 """
 from collections import Counter
 
-from repro.core import autotune_spmv
+from repro.core import DispatchKey, autotune_spmv
 from .common import bench_suite
 
 VERSIONS = {
-    "plain": [("coo", "plain"), ("csr", "plain"), ("dia", "plain"),
-              ("ell", "plain"), ("sell", "plain")],
-    "vendor": [("coo", "dense"), ("csr", "dense"), ("dia", "dense"),
-               ("dense", "dense")],
-    "pallas": [("coo", "pallas"), ("csr", "plain"), ("dia", "pallas"),
-               ("ell", "pallas"), ("sell", "pallas")],
+    "plain": [DispatchKey("coo", "plain"), DispatchKey("csr", "plain"),
+              DispatchKey("dia", "plain"), DispatchKey("ell", "plain"),
+              DispatchKey("sell", "plain")],
+    "vendor": [DispatchKey("coo", "dense"), DispatchKey("csr", "dense"),
+               DispatchKey("dia", "dense"), DispatchKey("dense", "dense")],
+    "pallas": [DispatchKey("coo", "pallas"), DispatchKey("csr", "plain"),
+               DispatchKey("dia", "pallas"), DispatchKey("ell", "pallas"),
+               DispatchKey("sell", "pallas")],
 }
 
 

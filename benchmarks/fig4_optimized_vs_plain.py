@@ -1,10 +1,10 @@
 """Fig. 4 analogue: per-format speedup of the optimised (Pallas, SVE
 analogue) SpMV over the Plain version, same format. Paper: avg 3.6x COO,
-~1x CSR, ~5x DIA on A64FX."""
+~1x CSR, ~5x DIA on A64FX. Both versions run through the same jitted
+``A @ x`` — only the operator's ExecutionPolicy differs."""
 import jax
 
-from repro.core import from_dense, spmv
-from .common import bench_suite, geomean, time_us
+from .common import bench_suite, geomean, operator_for, time_backend
 
 
 def run(scale="quick"):
@@ -14,14 +14,12 @@ def run(scale="quick"):
         speedups, best = [], 0.0
         for name, mat in suite:
             try:
-                A = from_dense(mat, fmt)
+                A = operator_for(mat, fmt)
             except Exception:
                 continue
             x = jax.numpy.ones((mat.shape[1],), jax.numpy.float32)
-            f_plain = jax.jit(lambda A, x: spmv(A, x, "plain"))
-            f_opt = jax.jit(lambda A, x: spmv(A, x, "pallas"))
-            t_p = time_us(f_plain, A, x)
-            t_k = time_us(f_opt, A, x)
+            t_p = time_backend(A, x, "plain")
+            t_k = time_backend(A, x, "pallas")
             speedups.append(t_p / t_k)
             best = max(best, t_p / t_k)
             rows.append({"name": f"fig4/{fmt}/{name}", "us_per_call": t_k,

@@ -1,10 +1,9 @@
-"""Fig. 5 analogue: COO and DIA (plain + pallas) against the Plain-CSR
-reference. Paper: DIA/SVE reaches up to ~20x on banded matrices; COO mostly
-slower than CSR except structured outliers."""
+"""Fig. 5 analogue: COO and DIA (plain + pallas backends) against the
+Plain-CSR reference. Paper: DIA/SVE reaches up to ~20x on banded matrices;
+COO mostly slower than CSR except structured outliers."""
 import jax
 
-from repro.core import from_dense, spmv
-from .common import bench_suite, geomean, time_us
+from .common import bench_suite, operator_for, time_backend
 
 
 def run(scale="quick"):
@@ -12,13 +11,12 @@ def run(scale="quick"):
     rows = []
     for name, mat in suite:
         x = jax.numpy.ones((mat.shape[1],), jax.numpy.float32)
-        A_csr = from_dense(mat, "csr")
-        t_csr = time_us(jax.jit(lambda A, x: spmv(A, x, "plain")), A_csr, x)
+        t_csr = time_backend(operator_for(mat, "csr"), x, "plain")
         for fmt in ["coo", "dia"]:
-            for impl in ["plain", "pallas"]:
-                A = from_dense(mat, fmt)
-                t = time_us(jax.jit(lambda A, x, impl=impl: spmv(A, x, impl)), A, x)
-                rows.append({"name": f"fig5/{fmt}-{impl}/{name}",
+            A = operator_for(mat, fmt)
+            for backend in ["plain", "pallas"]:
+                t = time_backend(A, x, backend)
+                rows.append({"name": f"fig5/{fmt}-{backend}/{name}",
                              "us_per_call": t,
                              "derived": f"speedup_vs_plain_csr={t_csr/t:.2f}"})
     return rows

@@ -12,20 +12,19 @@ switching."""
 import jax
 import jax.numpy as jnp
 
-from repro.core import from_dense
-from repro.core.spmv import spmv
 from repro.kernels.coo_spmv import build_scoo, coo_spmv, scoo_spmv
-from .common import bench_suite, time_us
+from .common import bench_suite, operator_for, time_backend, time_us
 
 
 def run(scale="quick"):
     suite = bench_suite(scale)
     rows = []
     for name, mat in suite:
-        A = from_dense(mat, "coo")
+        op = operator_for(mat, "coo")
+        A = op.container
         n = mat.shape[0]
         x = jnp.ones((mat.shape[1],), jnp.float32)
-        t_scatter = time_us(jax.jit(lambda A, x: spmv(A, x, "plain")), A, x)
+        t_scatter = time_backend(op, x, "plain")
         ts = {"scatter": t_scatter}
         if n <= 8192:
             f_one = jax.jit(lambda r, c, v, x: coo_spmv(r, c, v, x, nrows=n))

@@ -1,7 +1,9 @@
 """Fig. 8a analogue: Morpheus-enabled HPCG vs reference over problem sizes.
 (8b/8c distributed scaling runs under tests/test_distributed.py with 4 fake
 devices; here we keep the serial sweep that produced the paper's 5x DIA
-result.)"""
+result.) The CG loop inside run_hpcg is driven by SparseOperators: the
+reference is csr/plain, the optimised path is the auto-tuner's retargeted
+operator."""
 from repro.apps.hpcg import run_hpcg
 
 

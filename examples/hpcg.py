@@ -4,9 +4,11 @@
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/hpcg.py --distributed
 
-Serial: phases 1-5 with the run-first auto-tuner choosing the SpMV format.
-Distributed: rows sharded over the mesh, local/remote split with per-part
-formats (Table III) and ppermute halo exchange.
+Serial: phases 1-5; the run-first auto-tuner returns a retargeted
+``SparseOperator`` (winning format + ExecutionPolicy) that drives the CG
+loop as a plain ``A @ p``. Distributed: rows sharded over the mesh,
+local/remote split with per-part formats (Table III) and ppermute halo
+exchange.
 """
 import argparse
 

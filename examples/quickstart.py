@@ -1,16 +1,17 @@
-"""Quickstart: the Morpheus-in-JAX core in 60 lines.
+"""Quickstart: the Morpheus-in-JAX operator API in 60 lines.
 
   PYTHONPATH=src python examples/quickstart.py
 
 1. build matrices with different sparsity patterns
-2. convert between formats at runtime (the paper's core capability)
-3. run SpMV through the Plain / vendor / Pallas implementations
-4. let the run-first auto-tuner pick the best (format, impl) per matrix
+2. wrap them in SparseOperator and switch formats at runtime (cached)
+3. run the same ``A @ x`` through Plain / vendor / Pallas backends via
+   ExecutionPolicy — no string `impl=` threading
+4. let the run-first auto-tuner return a retargeted operator per matrix
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (autotune_spmv, from_dense, convert, spmv, workspace)
+from repro.core import as_operator, use_backend, workspace
 from repro.core import matrices as M
 
 rng = np.random.default_rng(0)
@@ -24,28 +25,31 @@ mats = {
 for name, s in mats.items():
     print(f"  {name}: shape={s.shape} nnz={s.nnz}")
 
-print("\n== 2. runtime format switching ==")
-s = mats["banded (FDM-like)"]
-A = from_dense(s, "csr")
+print("\n== 2. runtime format switching (cached conversions) ==")
+A = as_operator(mats["banded (FDM-like)"], "csr")
 for fmt in ["coo", "dia", "ell", "sell", "bsr"]:
-    B = convert(A, fmt)
-    print(f"  csr -> {fmt}: container={type(B).__name__} nnz(stored)={B.nnz}")
+    B = A.asformat(fmt)
+    print(f"  csr -> {fmt}: container={type(B.container).__name__} "
+          f"nnz(stored)={B.nnz} nbytes={B.nbytes}")
 
-print("\n== 3. same math, three implementations ==")
+print("\n== 3. same math, three backends ==")
 x = jnp.asarray(rng.standard_normal(1024).astype(np.float32))
-A_dia = from_dense(s, "dia")
-for impl in ["plain", "dense", "pallas"]:
-    y = spmv(A_dia, x, impl)
-    print(f"  dia/{impl:7s} -> |y|={float(jnp.linalg.norm(y)):.4f}")
+A_dia = A.asformat("dia")
+for backend in ["plain", "dense", "pallas"]:
+    with use_backend(backend):
+        y = A_dia @ x
+    print(f"  dia/{backend:7s} -> |y|={float(jnp.linalg.norm(y)):.4f}")
 
 print("\n== 4. run-first auto-tuner (paper §VII-D) ==")
 for name, s in mats.items():
-    res = autotune_spmv(s, iters=5, warmup=2)
-    print(f"  {name:20s} -> {res.format}/{res.impl} ({res.time_us:.0f}us; "
-          f"{len(res.table)} candidates, {len(res.skipped)} skipped)")
+    op = as_operator(s).tune(iters=5, warmup=2)
+    print(f"  {name:20s} -> {op.format}/{op.policy.backends[0]} "
+          f"({op.nbytes} device bytes)")
 
-print("\n== 5. workspace (ArmPL handle analogue) ==")
+print("\n== 5. workspace (ArmPL handle analogue, true LRU) ==")
 ws = workspace()
+s = mats["power-law rows"]
 for _ in range(3):
-    ws.spmv(s, x, "dia", "pallas")
-print(f"  3 calls -> conversions: {ws.misses}, cache hits: {ws.hits}")
+    ws.spmv(s, x, "sell")
+print(f"  3 calls -> conversions: {ws.misses}, cache hits: {ws.hits}, "
+      f"entries: {len(ws)}")

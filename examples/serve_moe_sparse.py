@@ -3,8 +3,14 @@ the paper's dynamic-format idea inside an LM serving loop.
 
   PYTHONPATH=src python examples/serve_moe_sparse.py --impl coo
   PYTHONPATH=src python examples/serve_moe_sparse.py --tune
+  PYTHONPATH=src python examples/serve_moe_sparse.py --impl coo --spmv-backend pallas
+
+The COO dispatch path routes expert dispatch/combine through the core SpMM;
+``--spmv-backend`` scopes an ExecutionPolicy over the serving loop so the
+kernel backend is chosen declaratively instead of threading impl strings.
 """
 import argparse
+import contextlib
 import dataclasses
 import time
 
@@ -13,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import use_backend
 from repro.models import build_model
 
 
@@ -47,22 +54,27 @@ def main():
     ap.add_argument("--impl", default="sort", choices=["sort", "onehot", "coo"])
     ap.add_argument("--tune", action="store_true",
                     help="run-first auto-tune the dispatch impl, then serve")
+    ap.add_argument("--spmv-backend", default=None, choices=["plain", "pallas", "dense"],
+                    help="ExecutionPolicy backend for the sparse dispatch SpMM")
     args = ap.parse_args()
 
-    if args.tune:
-        best, best_tps = None, 0.0
-        for impl in ["sort", "onehot", "coo"]:
-            cfg, model, params = build(impl)
-            tps = serve(cfg, model, params, G=8)
-            print(f"  dispatch={impl:7s}: {tps:.1f} tok/s")
-            if tps > best_tps:
-                best, best_tps = impl, tps
-        print(f"auto-tuner picks: {best}")
-        impl = best
-    else:
-        impl = args.impl
-    cfg, model, params = build(impl)
-    tps = serve(cfg, model, params)
+    policy_scope = (use_backend(args.spmv_backend) if args.spmv_backend
+                    else contextlib.nullcontext())
+    with policy_scope:
+        if args.tune:
+            best, best_tps = None, 0.0
+            for impl in ["sort", "onehot", "coo"]:
+                cfg, model, params = build(impl)
+                tps = serve(cfg, model, params, G=8)
+                print(f"  dispatch={impl:7s}: {tps:.1f} tok/s")
+                if tps > best_tps:
+                    best, best_tps = impl, tps
+            print(f"auto-tuner picks: {best}")
+            impl = best
+        else:
+            impl = args.impl
+        cfg, model, params = build(impl)
+        tps = serve(cfg, model, params)
     print(f"serving qwen3-moe(smoke) with dispatch={impl}: {tps:.1f} tok/s")
 
 

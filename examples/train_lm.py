@@ -6,10 +6,12 @@ hundred steps, with checkpointing + fault tolerance + data replay.
   PYTHONPATH=src python examples/train_lm.py --inject-failure # restart demo
 """
 import argparse
+import contextlib
 
 import jax
 
 from repro.configs.base import ModelConfig
+from repro.core import use_backend
 from repro.optim import adamw
 from repro.train.trainer import Trainer, TrainerConfig
 
@@ -36,6 +38,9 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--inject-failure", action="store_true")
+    ap.add_argument("--spmv-backend", default=None, choices=["plain", "pallas", "dense"],
+                    help="ExecutionPolicy backend for sparse ops (MoE dispatch, "
+                         "sparsified layers) traced under the train step")
     args = ap.parse_args()
 
     cfg = model_tiny() if args.quick else model_100m()
@@ -48,7 +53,9 @@ def main():
     n = sum(x.size for x in jax.tree_util.tree_leaves(tr.state[0]))
     print(f"model={cfg.name} params={n/1e6:.1f}M steps={steps} "
           f"tokens/step={args.batch * seq}")
-    hist = tr.train(fail_at=steps * 2 // 3 if args.inject_failure else None)
+    scope = use_backend(args.spmv_backend) if args.spmv_backend else contextlib.nullcontext()
+    with scope:
+        hist = tr.train(fail_at=steps * 2 // 3 if args.inject_failure else None)
     print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
           f"median step {1e3*sorted(h['time_s'] for h in hist)[len(hist)//2]:.0f}ms; "
           f"straggler flags={tr.straggler.flagged}")

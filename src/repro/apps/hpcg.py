@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import autotune_spmv, from_dense, spmv
+from repro.core import as_operator, autotune_spmv
 from repro.core.distributed import DistributedSpMV, autotune_distributed
 from repro.core import matrices as M
 
@@ -78,15 +78,15 @@ def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3,
     b = jnp.asarray(A_sp @ np.ones(n), jnp.float32)
 
     # Phase 2: reference timing (Plain CSR)
-    A_ref = from_dense(A_sp, "csr")
-    ref_solve = jax.jit(lambda b: cg_solve(lambda p: spmv(A_ref, p, "plain"), b, iters))
+    A_ref = as_operator(A_sp, "csr").using("plain")
+    ref_solve = jax.jit(lambda b: cg_solve(lambda p: A_ref @ p, b, iters))
     x_ref, _ = ref_solve(b)
     t_ref = _time(ref_solve, b, reps=reps)
 
-    # Phase 3: optimisation setup (run-first auto-tuner)
+    # Phase 3: optimisation setup (run-first auto-tuner -> retargeted operator)
     tune = autotune_spmv(A_sp, candidates=candidates)
-    A_opt, impl = tune.matrix, tune.impl
-    opt_solve = jax.jit(lambda b: cg_solve(lambda p: spmv(A_opt, p, impl), b, iters))
+    A_opt, impl = tune.operator, tune.impl
+    opt_solve = jax.jit(lambda b: cg_solve(lambda p: A_opt @ p, b, iters))
 
     # Phase 4: validation
     x_opt, _ = opt_solve(b)

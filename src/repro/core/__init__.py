@@ -1,16 +1,39 @@
 """Morpheus-in-JAX: dynamic sparse-format abstraction (the paper's core).
 
 Public API:
-    formats:   COO, CSR, DIA, ELL, SELL, BSR, Dense
+    operator:  SparseOperator facade (A @ x, A.asformat, A.tune) +
+               ExecutionPolicy / use_policy / use_backend backend selection
+    formats:   COO, CSR, DIA, ELL, SELL, BSR, Dense containers
     convert:   from_dense, convert, to_coo/to_csr/to_dia/to_ell/to_sell/to_bsr
-    spmv/spmm: format-dispatched sparse mat-vec / mat-mat
-    autotune:  run-first (format, impl) auto-tuner
-    registry:  handle/workspace cache (ArmPL-style create/optimize/exec)
+    spmv/spmm: policy-dispatched sparse mat-vec / mat-mat (string ``impl``
+               args survive as deprecated back-compat shims)
+    autotune:  run-first (format, backend) auto-tuner -> SparseOperator
+    registry:  LRU handle/workspace cache (ArmPL-style create/optimize/exec)
     distributed: local/remote-split SpMV over a mesh axis
 """
 from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense, format_class, registered_formats
 from .convert import convert, from_dense, to_bsr, to_coo, to_csr, to_dia, to_ell, to_sell
-from .spmv import available_impls, register_spmv, spmm, spmv
+from .operator import (
+    DEFAULT_POLICY,
+    ExecutionPolicy,
+    SparseOperator,
+    as_operator,
+    current_policy,
+    policy_for_impl,
+    use_backend,
+    use_policy,
+)
+from .spmv import (
+    BackendUnsupportedError,
+    DispatchKey,
+    available_impls,
+    dispatch_table,
+    register_spmm,
+    register_spmv,
+    select_spmv,
+    spmm,
+    spmv,
+)
 from .autotune import TuneResult, autotune_spmv, optimal_format_distribution
 from .registry import SpmvWorkspace, spmv_cached, workspace
 from .distributed import DistributedSpMV, autotune_distributed, split_local_remote
@@ -19,7 +42,10 @@ __all__ = [
     "BSR", "COO", "CSR", "DIA", "ELL", "SELL", "Dense",
     "format_class", "registered_formats",
     "convert", "from_dense", "to_bsr", "to_coo", "to_csr", "to_dia", "to_ell", "to_sell",
-    "available_impls", "register_spmv", "spmm", "spmv",
+    "DEFAULT_POLICY", "ExecutionPolicy", "SparseOperator", "as_operator",
+    "current_policy", "policy_for_impl", "use_backend", "use_policy",
+    "BackendUnsupportedError", "DispatchKey", "available_impls", "dispatch_table",
+    "register_spmm", "register_spmv", "select_spmv", "spmm", "spmv",
     "TuneResult", "autotune_spmv", "optimal_format_distribution",
     "SpmvWorkspace", "spmv_cached", "workspace",
     "DistributedSpMV", "autotune_distributed", "split_local_remote",

@@ -1,11 +1,15 @@
 """Run-first auto-tuner (paper §VII-D: "run-first auto-tuner ... finds the
 optimal format to use on every process").
 
-Given a matrix, convert it to each candidate (format, impl), time the jitted
-SpMV, and return the winner + the full timing table. This is deliberately
-measurement-based (not a learned oracle — that is the Morpheus-Oracle
-follow-up paper [35]); conversion cost is excluded, matching the paper's
-methodology of timing 100 SpMV iterations after setup.
+Given a matrix, convert it to each candidate ``DispatchKey(format, backend)``,
+time the jitted SpMV, and return the winner + the full timing table. This is
+deliberately measurement-based (not a learned oracle — that is the
+Morpheus-Oracle follow-up paper [35]); conversion cost is excluded, matching
+the paper's methodology of timing 100 SpMV iterations after setup.
+
+The result carries a ready-to-use ``SparseOperator`` (winning container +
+policy preferring the winning backend) — the operator-centric entry point is
+``SparseOperator.tune()`` / ``TuneResult.operator``.
 """
 from __future__ import annotations
 
@@ -17,15 +21,16 @@ import jax
 import numpy as np
 
 from .convert import from_dense as _from_dense
-from .spmv import available_impls, spmv
+from .operator import DEFAULT_POLICY, ExecutionPolicy, SparseOperator
+from .spmv import DispatchKey, available_impls, spmv
 
-DEFAULT_CANDIDATES: Tuple[Tuple[str, str], ...] = (
-    ("coo", "plain"), ("coo", "pallas"),
-    ("csr", "plain"),
-    ("dia", "plain"), ("dia", "pallas"),
-    ("ell", "plain"), ("ell", "pallas"),
-    ("sell", "plain"), ("sell", "pallas"),
-    ("dense", "dense"),
+DEFAULT_CANDIDATES: Tuple[DispatchKey, ...] = (
+    DispatchKey("coo", "plain"), DispatchKey("coo", "pallas"),
+    DispatchKey("csr", "plain"),
+    DispatchKey("dia", "plain"), DispatchKey("dia", "pallas"),
+    DispatchKey("ell", "plain"), DispatchKey("ell", "pallas"),
+    DispatchKey("sell", "plain"), DispatchKey("sell", "pallas"),
+    DispatchKey("dense", "dense"),
 )
 
 
@@ -37,6 +42,18 @@ class TuneResult:
     matrix: object
     table: Dict[Tuple[str, str], float] = field(default_factory=dict)
     skipped: List[Tuple[str, str, str]] = field(default_factory=list)
+    base_policy: Optional[ExecutionPolicy] = None  # limits candidates ran under
+
+    @property
+    def key(self) -> DispatchKey:
+        return DispatchKey(self.format, self.impl)
+
+    @property
+    def operator(self) -> SparseOperator:
+        """The tuned matrix as a retargeted SparseOperator: the winning
+        backend chain merged into the policy the tuner measured under."""
+        base = self.base_policy if self.base_policy is not None else DEFAULT_POLICY
+        return SparseOperator(self.matrix, base.preferring(self.impl))
 
     def __repr__(self):
         return f"TuneResult(format={self.format!r}, impl={self.impl!r}, {self.time_us:.1f}us)"
@@ -53,25 +70,57 @@ def _time_call(fn, *args, iters: int = 10, warmup: int = 3) -> float:
     return float(np.median(ts)) / 1e3  # us
 
 
+def _normalize_candidates(candidates) -> Tuple[Tuple[str, str], ...]:
+    # DispatchKey is iterable, so both it and (fmt, impl) tuples unpack
+    return tuple((fmt, impl) for fmt, impl in candidates)
+
+
+def _container_to_scipy(c):
+    """Registered container -> scipy CSR without densifying where the format
+    allows (COO/CSR carry their triplets directly; pad sentinels dropped).
+    Other formats go via to_dense — the same exactness-only route convert.py
+    uses."""
+    import scipy.sparse as sp
+
+    nrows, ncols = (int(d) for d in c.shape)
+    if c.format == "coo":
+        row, col, val = (np.asarray(x) for x in (c.row, c.col, c.val))
+        keep = row < nrows  # drop (row=nrows, col=0, val=0) pad sentinels
+        return sp.csr_matrix((val[keep], (row[keep], col[keep])), shape=(nrows, ncols))
+    if c.format == "csr":
+        indptr = np.asarray(c.indptr)
+        nnz = int(indptr[-1])  # trailing entries past indptr[-1] are padding
+        return sp.csr_matrix((np.asarray(c.data)[:nnz], np.asarray(c.indices)[:nnz],
+                              indptr), shape=(nrows, ncols))
+    return sp.csr_matrix(np.asarray(c.to_dense()))
+
+
 def autotune_spmv(
     a_dense,
-    candidates: Optional[Sequence[Tuple[str, str]]] = None,
+    candidates: Optional[Sequence] = None,
     iters: int = 10,
     warmup: int = 3,
     dia_max_diags: int = 512,
     ell_max_width_factor: float = 4.0,
     dtype=None,
+    policy: Optional[ExecutionPolicy] = None,
 ) -> TuneResult:
-    """Pick the fastest (format, impl) for ``a_dense`` on this backend.
+    """Pick the fastest (format, backend) for ``a_dense`` on this backend.
 
-    Structural guards mirror Morpheus's practical limits: DIA is not built
-    when the matrix has too many distinct diagonals (memory blow-up — the
-    paper's FPGA section calls out exactly this), ELL when max row width
-    far exceeds the mean (power-law matrices).
+    ``a_dense`` may be dense, scipy sparse, a registered container, or a
+    ``SparseOperator``. Candidates are ``DispatchKey``s (legacy ``(fmt, impl)``
+    tuples still accepted). Structural guards mirror Morpheus's practical
+    limits: DIA is not built when the matrix has too many distinct diagonals
+    (memory blow-up — the paper's FPGA section calls out exactly this), ELL
+    when max row width far exceeds the mean (power-law matrices).
     """
     import scipy.sparse as sp
 
-    s = a_dense if isinstance(a_dense, sp.spmatrix) else sp.csr_matrix(np.asarray(a_dense))
+    if isinstance(a_dense, SparseOperator):
+        a_dense = a_dense.container
+    if hasattr(a_dense, "to_dense") and not sp.issparse(a_dense):
+        a_dense = _container_to_scipy(a_dense)
+    s = a_dense if sp.issparse(a_dense) else sp.csr_matrix(np.asarray(a_dense))
     s = s.tocsr()
     n = s.shape[1]
     x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
@@ -85,7 +134,7 @@ def autotune_spmv(
     table: Dict[Tuple[str, str], float] = {}
     skipped: List[Tuple[str, str, str]] = []
     mats = {}
-    cand = tuple(candidates if candidates is not None else DEFAULT_CANDIDATES)
+    cand = _normalize_candidates(candidates if candidates is not None else DEFAULT_CANDIDATES)
     for fmt, impl in cand:
         if fmt == "dia" and ndiags > dia_max_diags:
             skipped.append((fmt, impl, f"ndiags={ndiags}>{dia_max_diags}"))
@@ -100,7 +149,8 @@ def autotune_spmv(
             kw = {"dtype": dtype} if dtype is not None else {}
             mats[fmt] = _from_dense(s, fmt, **kw)
         A = mats[fmt]
-        fn = jax.jit(lambda A, x, impl=impl: spmv(A, x, impl))
+        pol = (policy if policy is not None else DEFAULT_POLICY).preferring(impl)
+        fn = jax.jit(lambda A, x, pol=pol: spmv(A, x, policy=pol))
         try:
             table[(fmt, impl)] = _time_call(fn, A, x, iters=iters, warmup=warmup)
         except Exception as e:  # pragma: no cover - impl-specific lowering gaps
@@ -109,7 +159,7 @@ def autotune_spmv(
     if not table:
         raise RuntimeError("auto-tuner: no candidate succeeded")
     (fmt, impl), t = min(table.items(), key=lambda kv: kv[1])
-    return TuneResult(fmt, impl, t, mats[fmt], table, skipped)
+    return TuneResult(fmt, impl, t, mats[fmt], table, skipped, base_policy=policy)
 
 
 def optimal_format_distribution(suite, candidates=None, **kw) -> Dict[str, str]:

@@ -17,8 +17,12 @@ from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense
 
 
 def _as_scipy(a) -> sp.csr_matrix:
-    if isinstance(a, sp.spmatrix):
+    if hasattr(a, "container"):  # SparseOperator facade
+        a = a.container
+    if sp.issparse(a):
         return a.tocsr()
+    if hasattr(a, "to_dense"):  # registered sparse container
+        a = a.to_dense()
     a = np.asarray(a)
     return sp.csr_matrix(a)
 
@@ -40,7 +44,7 @@ def convert(A, fmt: str, **kw):
 
 
 def to_densefmt(a, dtype=jnp.float32):
-    a = np.asarray(a if not isinstance(a, sp.spmatrix) else a.toarray())
+    a = np.asarray(a.toarray() if sp.issparse(a) else a)
     return Dense(jnp.asarray(a, dtype), tuple(a.shape))
 
 

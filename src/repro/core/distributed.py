@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .convert import to_coo, to_csr, to_dia, to_ell
+from .operator import ExecutionPolicy, policy_for_impl
 from .spmv import spmv
 
 
@@ -161,7 +162,7 @@ class DistributedSpMV:
 
     ``local_fmt``/``remote_fmt`` default to the paper's SVE-version winners
     (Table III): DIA local, COO remote. ``impl`` maps to the kernel version
-    ('plain' | 'pallas').
+    ('plain' | 'pallas'); ``policy`` overrides it with a full ExecutionPolicy.
     """
 
     mesh: Mesh
@@ -173,17 +174,23 @@ class DistributedSpMV:
     local_fmt: str
     remote_fmt: str
     impl: str = "plain"
+    policy: Optional[ExecutionPolicy] = None
+
+    def execution_policy(self) -> ExecutionPolicy:
+        return self.policy if self.policy is not None else policy_for_impl(self.impl)
 
     @classmethod
     def build(cls, s: sp.spmatrix, mesh: Mesh, axis: str = "data",
               local_fmt: str = "dia", remote_fmt: str = "coo",
-              impl: str = "plain", dtype=jnp.float32, mode: str = "auto"):
+              impl: str = "plain", dtype=jnp.float32, mode: str = "auto",
+              policy: Optional[ExecutionPolicy] = None):
         nparts = mesh.shape[axis]
         locals_, remotes, halo = split_local_remote(
             s, nparts, halo=None if mode == "allgather" else "auto")
         lc = build_stacked(locals_, local_fmt, dtype)
         rc = build_stacked(remotes, remote_fmt, dtype)
-        return cls(mesh, axis, lc, rc, halo, s.shape[0], local_fmt, remote_fmt, impl)
+        return cls(mesh, axis, lc, rc, halo, s.shape[0], local_fmt, remote_fmt,
+                   impl, policy)
 
     @property
     def nparts(self) -> int:
@@ -201,11 +208,12 @@ class DistributedSpMV:
         return NamedSharding(self.mesh, P(self.axis))
 
     def _shard_fn(self, local, remote, x):
+        pol = self.execution_policy()
         local, remote = _take_part(local), _take_part(remote)
-        y = spmv(local, x, self.impl)
+        y = spmv(local, x, policy=pol)
         if self.halo is None:
             xg = jax.lax.all_gather(x, self.axis, tiled=True)
-            return y + spmv(remote, xg, self.impl)
+            return y + spmv(remote, xg, policy=pol)
         h = self.halo
         m = x.shape[0]
         nparts = self.nparts
@@ -220,7 +228,7 @@ class DistributedSpMV:
             right = jnp.where(idx == 0, 0, right)          # zero Dirichlet edges
             left = jnp.where(idx == nparts - 1, 0, left)
             xw = jnp.concatenate([right, x, left])
-        return y + spmv(remote, xw, self.impl)
+        return y + spmv(remote, xw, policy=pol)
 
 
 def autotune_distributed(s: sp.spmatrix, mesh: Mesh, axis: str = "data",

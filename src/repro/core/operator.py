@@ -1,0 +1,273 @@
+"""`SparseOperator` + `ExecutionPolicy` — the Morpheus-style abstraction layer.
+
+Morpheus's central claim is that an *abstraction* over sparse containers with
+compile-time backend dispatch lets one codebase run fast everywhere; its
+companion `DynamicMatrix` work adds runtime format switching driven by the
+auto-tuner. This module is our layer over both halves:
+
+  - ``SparseOperator``  : a pytree facade over any registered container.
+    ``A @ x`` does SpMV, ``A @ X`` does SpMM, ``A.asformat("dia")`` is a
+    cached runtime format switch, ``A.tune()`` wraps the run-first
+    auto-tuner and returns a retargeted operator.
+  - ``ExecutionPolicy`` : a frozen description of *how* to execute — a
+    backend preference chain plus the device-fit limits that used to be
+    hard-coded inside ``kernels/ops.py``. Kernels declare what they can run
+    via ``supports(A, policy)`` predicates (see ``core/spmv.py``); dispatch
+    walks the chain and falls back declaratively instead of each kernel
+    hiding an ad-hoc guard.
+  - ``use_policy`` / ``use_backend`` : context managers scoping the ambient
+    policy, replacing ``impl="..."`` string threading through call sites.
+
+Policies are pytree *aux data* on the operator, so two operators that differ
+only in policy retrace under jit — the jit cache plays the role of Morpheus's
+compile-time dispatch, exactly as before.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .convert import convert, from_dense
+from .formats import registered_formats
+
+# ----------------------------------------------------------------- policy ----
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """How to execute sparse ops: backend preference chain + device limits.
+
+    ``backends`` is tried in order; a backend is skipped when no kernel is
+    registered for the operand's format or its ``supports`` predicate rejects
+    the (matrix, policy) pair. The limits mirror the 'fits-the-device' checks
+    of Morpheus's FPGA backend (paper §V): resident-x Pallas strategies keep
+    x plus a couple of tiles in VMEM, the COO one-hot kernel materialises an
+    (nrows, tile) window.
+    """
+
+    backends: Tuple[str, ...] = ("plain",)
+    max_resident_cols: int = 1 << 20   # VMEM guard for resident-x kernels
+    max_onehot_rows: int = 8192        # COO full-window one-hot row limit
+    allow_fallback: bool = True        # walk down the chain on unsupported
+
+    def replace(self, **kw) -> "ExecutionPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def preferring(self, impl: str) -> "ExecutionPolicy":
+        """This policy retargeted to prefer ``impl``, keeping the silent
+        fall-back-to-plain the old in-kernel guards had (the single place
+        the legacy chain shape is defined)."""
+        chain = (impl,) if impl == "plain" else (impl, "plain")
+        return self.replace(backends=chain)
+
+    @classmethod
+    def for_impl(cls, impl: str, **kw) -> "ExecutionPolicy":
+        """Policy equivalent of the legacy ``impl=`` string."""
+        return cls(**kw).preferring(impl)
+
+
+DEFAULT_POLICY = ExecutionPolicy()
+
+
+def policy_for_impl(impl: str) -> ExecutionPolicy:
+    return ExecutionPolicy.for_impl(impl)
+
+
+class _PolicyStack(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_POLICY = _PolicyStack()
+
+
+def current_policy() -> ExecutionPolicy:
+    """The ambient policy (innermost ``use_policy`` scope, or the default)."""
+    return _POLICY.stack[-1] if _POLICY.stack else DEFAULT_POLICY
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ExecutionPolicy] = None, **kw):
+    """Scope the ambient ExecutionPolicy.
+
+    ``use_policy(pol)`` pushes ``pol``; ``use_policy(backends=("pallas",))``
+    derives from the current ambient policy. Note the policy is consulted at
+    *trace* time: a jitted function traced under one policy does not retrace
+    when the ambient policy later changes — attach the policy to the operator
+    (``A.with_policy`` / ``A.using``) when that matters.
+    """
+    base = policy if policy is not None else current_policy()
+    if kw:
+        base = base.replace(**kw)
+    _POLICY.stack.append(base)
+    try:
+        yield base
+    finally:
+        _POLICY.stack.pop()
+
+
+def use_backend(*backends: str, fallback: bool = True):
+    """``use_backend("pallas")`` == prefer Pallas kernels, fall back to plain.
+
+    ``fallback=False`` is strict: plain is not appended AND the preferred
+    backend must actually run — an unregistered or predicate-rejected backend
+    raises BackendUnsupportedError instead of degrading.
+    """
+    chain = tuple(backends)
+    if fallback and "plain" not in chain:
+        chain += ("plain",)
+    return use_policy(backends=chain, allow_fallback=fallback)
+
+
+# --------------------------------------------------------------- operator ----
+
+
+@dataclass(frozen=True)
+class SparseOperator:
+    """Format-agnostic linear operator over a registered sparse container.
+
+    A thin, immutable facade: ``container`` is the actual pytree of arrays
+    (COO/CSR/DIA/...), ``policy`` (pytree aux data) decides which kernel runs.
+    ``_cache`` memoises format conversions and is shared across the operators
+    an ``asformat`` chain produces; it is dropped at jit boundaries.
+    """
+
+    container: Any
+    policy: Optional[ExecutionPolicy] = None
+    _cache: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def format(self) -> str:
+        return self.container.format
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return tuple(self.container.shape)
+
+    @property
+    def dtype(self):
+        return self.container.dtype
+
+    @property
+    def nnz(self) -> int:
+        return self.container.nnz
+
+    @property
+    def nbytes(self) -> int:
+        """Device bytes of the container (data + index arrays)."""
+        return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree_util.tree_leaves(self.container))
+
+    def __repr__(self):
+        pol = "" if self.policy is None else f", backends={self.policy.backends}"
+        return (f"SparseOperator(format={self.format!r}, shape={self.shape}, "
+                f"nnz={self.nnz}{pol})")
+
+    # -- policy retargeting -------------------------------------------------
+
+    def with_policy(self, policy: Optional[ExecutionPolicy]) -> "SparseOperator":
+        return SparseOperator(self.container, policy, self._cache)
+
+    def using(self, *backends: str, fallback: bool = True, **kw) -> "SparseOperator":
+        """Operator preferring ``backends`` (chain ends in plain by default).
+        ``fallback=False`` is strict, like ``use_backend``: the preferred
+        backend must run or dispatch raises BackendUnsupportedError."""
+        chain = tuple(backends)
+        if fallback and "plain" not in chain:
+            chain += ("plain",)
+        base = self.policy if self.policy is not None else DEFAULT_POLICY
+        opts = {"backends": chain, "allow_fallback": fallback, **kw}  # explicit kw wins
+        return self.with_policy(base.replace(**opts))
+
+    def _effective_policy(self) -> ExecutionPolicy:
+        return self.policy if self.policy is not None else current_policy()
+
+    # -- format switching (Morpheus convert / DynamicMatrix) ----------------
+
+    def asformat(self, fmt: str, **kw) -> "SparseOperator":
+        """Cached conversion: repeated switches to the same format are free."""
+        if fmt == self.format and not kw:
+            return self
+        if fmt not in registered_formats():
+            raise ValueError(f"unknown format {fmt!r}; registered: {registered_formats()}")
+        key = (fmt, tuple(sorted(kw.items())))
+        if key not in self._cache:
+            self._cache[key] = convert(self.container, fmt, **kw)
+        return SparseOperator(self._cache[key], self.policy, self._cache)
+
+    def to_dense(self) -> jnp.ndarray:
+        return self.container.to_dense()
+
+    # -- application --------------------------------------------------------
+
+    def __matmul__(self, other):
+        from .spmv import _dispatch_spmm, _dispatch_spmv
+
+        other = jnp.asarray(other)
+        if other.ndim not in (1, 2):
+            raise ValueError(f"SparseOperator @ ndim={other.ndim}: expected 1 (SpMV) or 2 (SpMM)")
+        if other.shape[0] != self.shape[1]:
+            raise ValueError(f"shape mismatch: {self.shape} @ {tuple(other.shape)} "
+                             f"(the plain kernels would silently clamp gathers)")
+        if other.ndim == 1:
+            return _dispatch_spmv(self.container, other, self._effective_policy())
+        return _dispatch_spmm(self.container, other, self._effective_policy())
+
+    def matvec(self, x) -> jnp.ndarray:
+        return self @ x
+
+    def matmat(self, X) -> jnp.ndarray:
+        return self @ X
+
+    # -- auto-tuning --------------------------------------------------------
+
+    def tune(self, candidates=None, **kw) -> "SparseOperator":
+        """Run-first auto-tune (paper §VII-D) and return the retargeted
+        operator: winning format, policy preferring the winning backend.
+        The operator's own limits (VMEM budget, fallback rules) are kept —
+        only the backend chain is retargeted, and candidates are measured
+        under those same limits."""
+        from .autotune import autotune_spmv
+
+        return autotune_spmv(self, candidates=candidates,
+                             policy=self.policy, **kw).operator
+
+
+jax.tree_util.register_pytree_node(
+    SparseOperator,
+    lambda op: ((op.container,), (op.policy,)),
+    lambda aux, leaves: SparseOperator(leaves[0], aux[0]),
+)
+
+
+def as_operator(a, fmt: Optional[str] = None, policy: Optional[ExecutionPolicy] = None,
+                **kw) -> SparseOperator:
+    """Wrap anything matrix-like into a SparseOperator.
+
+    Accepts a SparseOperator (retargeted to ``fmt``/``policy`` if given), a
+    registered container, a scipy sparse matrix, or a dense array (converted
+    to ``fmt``, default csr).
+    """
+    import scipy.sparse as sp
+
+    if isinstance(a, SparseOperator):
+        if fmt is not None:
+            a = a.asformat(fmt, **kw)
+        return a.with_policy(policy) if policy is not None else a
+    # scipy first: on older scipy versions spmatrix.format is a plain class
+    # attribute ('csr', ...), which would shadow the container check below
+    if sp.issparse(a) or isinstance(a, (np.ndarray, jnp.ndarray)) or hasattr(a, "__array__"):
+        return SparseOperator(from_dense(a, fmt or "csr", **kw), policy)
+    if getattr(type(a), "format", None) in registered_formats():
+        op = SparseOperator(a, policy)
+        return op.asformat(fmt, **kw) if fmt is not None else op
+    raise TypeError(f"cannot build a SparseOperator from {type(a).__name__}")

@@ -3,19 +3,21 @@
 ArmPL requires ``armpl_spmat_create -> hint -> optimize -> exec*N -> destroy``;
 Morpheus hides that behind a per-format Singleton workspace that re-uses the
 handle across SpMV calls on the same matrix. Our analogue caches the
-*converted container* and the *jitted executable* keyed by a cheap structural
+*converted operator* and the *jitted executable* keyed by a cheap structural
 fingerprint, so repeated ``spmv_cached`` calls on the same logical matrix pay
-conversion + compilation once.
+conversion + compilation once. The matrix cache is a true LRU: hits move the
+entry to the back, so the hottest matrices are evicted last.
 """
 from __future__ import annotations
 
 import hashlib
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
-from .convert import from_dense as _from_dense
+from .operator import ExecutionPolicy, SparseOperator, as_operator, policy_for_impl
 from .spmv import spmv
 
 
@@ -23,46 +25,73 @@ class SpmvWorkspace:
     """Singleton-per-process workspace (paper Table I machinery)."""
 
     def __init__(self, max_entries: int = 64):
-        self._mats: Dict[str, object] = {}
-        self._fns: Dict[Tuple[str, str, str], object] = {}
+        self._ops: "OrderedDict[str, SparseOperator]" = OrderedDict()
+        self._fns: Dict[Tuple[str, ExecutionPolicy, str], object] = {}
         self._max = max_entries
         self.hits = 0
         self.misses = 0
 
     @staticmethod
     def fingerprint(a) -> str:
+        import jax
         import scipy.sparse as sp
 
-        if isinstance(a, sp.spmatrix):
+        if isinstance(a, SparseOperator):
+            a = a.container
+        h = hashlib.sha1()
+        if sp.issparse(a):
             s = a.tocsr()
-            h = hashlib.sha1()
             h.update(np.int64(s.shape[0]).tobytes() + np.int64(s.shape[1]).tobytes())
             h.update(np.asarray(s.indptr[:: max(1, len(s.indptr) // 64)]).tobytes())
             h.update(np.asarray(s.data[:: max(1, len(s.data) // 64)]).tobytes())
             return h.hexdigest()
+        if hasattr(a, "to_dense") and hasattr(a, "format"):
+            # registered container: hash subsampled leaves, never densify;
+            # slice on device so only ~64 elements cross to host per leaf
+            h.update(repr((a.format, tuple(a.shape))).encode())
+            for leaf in jax.tree_util.tree_leaves(a):
+                flat = leaf.reshape(-1)
+                h.update(np.asarray(flat[:: max(1, flat.size // 64)]).tobytes())
+            return h.hexdigest()
         a = np.asarray(a)
-        return hashlib.sha1(a.tobytes()).hexdigest()
+        h.update(repr(tuple(a.shape)).encode())  # same bytes, different shape
+        h.update(a.tobytes())
+        return h.hexdigest()
+
+    def get_operator(self, a, fmt: str, **kw) -> SparseOperator:
+        """LRU-cached conversion handle for (matrix fingerprint, format)."""
+        key = f"{self.fingerprint(a)}:{fmt}:{sorted(kw.items())}"
+        if key in self._ops:
+            self.hits += 1
+            self._ops.move_to_end(key)  # true LRU: a hit refreshes recency
+        else:
+            self.misses += 1
+            while len(self._ops) >= self._max:
+                self._ops.popitem(last=False)  # evict least-recently-used
+            self._ops[key] = as_operator(a, fmt, **kw)
+        return self._ops[key]
 
     def get_matrix(self, a, fmt: str, **kw):
-        key = f"{self.fingerprint(a)}:{fmt}:{sorted(kw.items())}"
-        if key not in self._mats:
-            self.misses += 1
-            if len(self._mats) >= self._max:
-                self._mats.pop(next(iter(self._mats)))
-            self._mats[key] = _from_dense(a, fmt, **kw)
-        else:
-            self.hits += 1
-        return self._mats[key]
+        return self.get_operator(a, fmt, **kw).container
 
-    def get_fn(self, fmt: str, impl: str):
-        key = (fmt, impl, "spmv")
+    def get_fn(self, fmt: str, policy: ExecutionPolicy):
+        key = (fmt, policy, "spmv")
         if key not in self._fns:
-            self._fns[key] = jax.jit(lambda A, x: spmv(A, x, impl))
+            self._fns[key] = jax.jit(lambda A, x: spmv(A, x, policy=policy))
         return self._fns[key]
 
-    def spmv(self, a, x, fmt: str = "csr", impl: str = "plain", **kw):
-        A = self.get_matrix(a, fmt, **kw)
-        return self.get_fn(fmt, impl)(A, x)
+    def spmv(self, a, x, fmt: str = "csr", impl: Optional[str] = None,
+             policy: Optional[ExecutionPolicy] = None, **kw):
+        if policy is None:
+            policy = policy_for_impl(impl or "plain")
+        op = self.get_operator(a, fmt, **kw)
+        return self.get_fn(fmt, policy)(op.container, x)
+
+    def __len__(self) -> int:
+        return len(self._ops)
+
+    def keys(self):
+        return tuple(self._ops)
 
 
 _WORKSPACE: Optional[SpmvWorkspace] = None
@@ -75,5 +104,6 @@ def workspace() -> SpmvWorkspace:
     return _WORKSPACE
 
 
-def spmv_cached(a, x, fmt: str = "csr", impl: str = "plain", **kw):
-    return workspace().spmv(a, x, fmt, impl, **kw)
+def spmv_cached(a, x, fmt: str = "csr", impl: Optional[str] = None,
+                policy: Optional[ExecutionPolicy] = None, **kw):
+    return workspace().spmv(a, x, fmt, impl, policy=policy, **kw)

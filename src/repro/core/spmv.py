@@ -1,37 +1,87 @@
-"""SpMV dispatch + the 'Plain' (pure-jnp transliteration) implementations.
+"""Structured SpMV/SpMM dispatch + the 'Plain' (pure-jnp) implementations.
 
 Morpheus dispatches one implementation per (algorithm, backend) at compile
-time; here the registry key is ``(format, impl)`` and the jit cache plays the
-role of the compile-time dispatch. ``impl`` names mirror the paper's versions:
+time; here the dispatch table is keyed by ``DispatchKey(format, backend)`` and
+the jit cache plays the role of the compile-time dispatch. Backend names
+mirror the paper's versions:
 
   - ``plain``  : straightforward jnp transliterations of Algorithms 1-3
                  (what the compiler gives you)
   - ``dense``  : densify + XLA matmul (the vendor-library / ArmPL analogue)
   - ``pallas`` : hand-tiled TPU kernels (the SVE-intrinsics analogue),
                  registered lazily by ``repro.kernels.ops``
+
+Each registration may carry a declarative ``supports(A, policy)`` capability
+predicate (the device-fit guards that used to live inside ``kernels/ops.py``);
+dispatch walks the policy's backend chain and falls back to the next backend
+when a predicate rejects. ``spmv(A, x, impl=...)`` / ``spmm(A, X, impl=...)``
+remain as thin back-compat shims over the policy path and return bit-identical
+results to the old string-dispatch API.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense
+from .operator import ExecutionPolicy, current_policy, policy_for_impl
 
-_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+# ------------------------------------------------------------- dispatch ----
 
 
-def register_spmv(fmt: str, impl: str):
+@dataclass(frozen=True)
+class DispatchKey:
+    """One slot of the dispatch table: (container format, backend name)."""
+
+    format: str
+    backend: str
+
+    def __iter__(self):  # allow `fmt, backend = key` unpacking
+        return iter((self.format, self.backend))
+
+
+@dataclass(frozen=True)
+class KernelEntry:
+    key: DispatchKey
+    fn: Callable
+    supports: Optional[Callable] = None  # (A, policy) -> bool; None = always
+
+    def ok(self, A, policy: ExecutionPolicy) -> bool:
+        return self.supports is None or bool(self.supports(A, policy))
+
+
+_SPMV: Dict[DispatchKey, KernelEntry] = {}
+_SPMM: Dict[DispatchKey, KernelEntry] = {}
+
+
+def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
     def deco(fn):
-        _REGISTRY[(fmt, impl)] = fn
+        key = DispatchKey(fmt, backend)
+        _SPMV[key] = KernelEntry(key, fn, supports)
+        return fn
+    return deco
+
+
+def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None):
+    def deco(fn):
+        key = DispatchKey(fmt, backend)
+        _SPMM[key] = KernelEntry(key, fn, supports)
         return fn
     return deco
 
 
 def available_impls(fmt: str):
+    """Backends with a registered SpMV kernel for ``fmt``."""
     _ensure_pallas()
-    return tuple(sorted(i for (f, i) in _REGISTRY if f == fmt))
+    return tuple(sorted(k.backend for k in _SPMV if k.format == fmt))
+
+
+def dispatch_table(op: str = "spmv") -> Dict[DispatchKey, KernelEntry]:
+    _ensure_pallas()
+    return dict(_SPMV if op == "spmv" else _SPMM)
 
 
 _PALLAS_LOADED = False
@@ -44,14 +94,103 @@ def _ensure_pallas():
         _PALLAS_LOADED = True
 
 
-def spmv(A, x: jnp.ndarray, impl: str = "plain") -> jnp.ndarray:
-    """y = A @ x with the chosen implementation. Shape: (ncols,) -> (nrows,)."""
+class BackendUnsupportedError(RuntimeError):
+    """Raised when fallback is disabled and the preferred backend rejects."""
+
+
+def select_spmv(A, policy: ExecutionPolicy) -> KernelEntry:
+    """Walk the policy's backend chain; first registered + supporting entry
+    wins. With ``allow_fallback=False`` a rejecting predicate raises instead
+    of silently degrading."""
+    if "pallas" in policy.backends:
+        _ensure_pallas()
+    tried: List[str] = []
+    for backend in policy.backends:
+        entry = _SPMV.get(DispatchKey(A.format, backend))
+        if entry is not None and entry.ok(A, policy):
+            return entry
+        why = "unregistered" if entry is None else "unsupported"
+        if not policy.allow_fallback:
+            # fallback disabled: the preferred backend must run, whether it
+            # is missing for this format or its predicate rejected
+            raise BackendUnsupportedError(
+                f"backend {backend!r} {why} for {A.format} matrix of shape "
+                f"{tuple(A.shape)} under {policy} and fallback is disabled")
+        tried.append(f"{backend}: {why}")
+    raise KeyError(
+        f"no SpMV for format {A.format!r} under backend chain {policy.backends}; "
+        f"tried [{'; '.join(tried)}]; registered: {sorted((k.format, k.backend) for k in _SPMV)}")
+
+
+def _dispatch_spmv(A, x, policy: ExecutionPolicy) -> jnp.ndarray:
+    return select_spmv(A, policy).fn(A, x)
+
+
+def _dispatch_spmm(A, X, policy: ExecutionPolicy) -> jnp.ndarray:
+    """SpMM: native kernel when one is registered along the chain (BSR has a
+    true MXU kernel — that is the point of the format), else vmapped SpMV."""
+    if "pallas" in policy.backends:
+        _ensure_pallas()
+    for backend in policy.backends:
+        entry = _SPMM.get(DispatchKey(A.format, backend))
+        if entry is not None:
+            if entry.ok(A, policy):
+                return entry.fn(A, X)
+            if not policy.allow_fallback:
+                raise BackendUnsupportedError(
+                    f"SpMM backend {backend!r} rejected {A.format} matrix of shape "
+                    f"{tuple(A.shape)} under {policy} and fallback is disabled")
+        elif not policy.allow_fallback:
+            # no native SpMM for the preferred backend: the vmapped-SpMV path
+            # below still enforces strictness through select_spmv
+            break
+    return jax.vmap(lambda col: _dispatch_spmv(A, col, policy),
+                    in_axes=1, out_axes=1)(X)
+
+
+# ------------------------------------------------------ back-compat shims ----
+
+
+def _unwrap(A):
+    from .operator import SparseOperator
+
+    return A.container if isinstance(A, SparseOperator) else A
+
+
+def _shim_policy(A, impl: Optional[str], policy: Optional[ExecutionPolicy],
+                 table: Dict[DispatchKey, KernelEntry]) -> ExecutionPolicy:
+    if policy is not None:
+        return policy
+    if impl is None:
+        return current_policy()
+    # legacy strictness: an impl never registered for this format is an error,
+    # while a registered-but-unsupported one silently falls back to plain
+    # (that is exactly what the old in-kernel guards did).
     if impl == "pallas":
         _ensure_pallas()
-    key = (A.format, impl)
-    if key not in _REGISTRY:
-        raise KeyError(f"no SpMV registered for {key}; have {sorted(_REGISTRY)}")
-    return _REGISTRY[key](A, x)
+    key = DispatchKey(A.format, impl)
+    if key not in table and key not in _SPMV:
+        raise KeyError(f"no kernel registered for {(A.format, impl)}; "
+                       f"have {sorted((k.format, k.backend) for k in _SPMV)}")
+    return policy_for_impl(impl)
+
+
+def spmv(A, x: jnp.ndarray, impl: Optional[str] = None, *,
+         policy: Optional[ExecutionPolicy] = None) -> jnp.ndarray:
+    """y = A @ x. Shape: (ncols,) -> (nrows,).
+
+    ``impl`` is the deprecated string spelling; prefer ``SparseOperator``
+    with an ``ExecutionPolicy`` (or the ``use_backend`` context manager).
+    """
+    A = _unwrap(A)
+    return _dispatch_spmv(A, x, _shim_policy(A, impl, policy, _SPMV))
+
+
+def spmm(A, X: jnp.ndarray, impl: Optional[str] = None, *,
+         policy: Optional[ExecutionPolicy] = None) -> jnp.ndarray:
+    """Sparse @ dense-matrix; ``impl`` is the deprecated string spelling."""
+    A = _unwrap(A)
+    return _dispatch_spmm(A, X, _shim_policy(A, impl, policy, _SPMM))
 
 
 # ---------------------------------------------------------------- plain ----
@@ -134,24 +273,13 @@ def _via_dense(A, x):
 
 
 for _fmt in ("coo", "csr", "dia", "ell", "sell", "bsr"):
-    _REGISTRY[(_fmt, "dense")] = _via_dense
+    register_spmv(_fmt, "dense")(_via_dense)
 
 
 # ------------------------------------------------------------------ SpMM ----
 
-def spmm(A, X: jnp.ndarray, impl: str = "plain") -> jnp.ndarray:
-    """Sparse @ dense-matrix — vmapped SpMV except where a native impl exists
-    (BSR has a true MXU SpMM kernel; that is the point of the format)."""
-    if impl == "pallas":
-        _ensure_pallas()
-        key = (A.format, "pallas_spmm")
-        if key in _REGISTRY:
-            return _REGISTRY[key](A, X)
-    if A.format == "bsr" and impl in ("plain", "dense"):
-        return _bsr_spmm_plain(A, X)
-    return jax.vmap(lambda col: spmv(A, col, impl), in_axes=1, out_axes=1)(X)
-
-
+@register_spmm("bsr", "plain")
+@register_spmm("bsr", "dense")
 def _bsr_spmm_plain(A: BSR, X):
     nrows, ncols = A.shape
     bs, nf = A.bs, X.shape[1]

@@ -93,7 +93,16 @@ def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
                 prod *= mesh.shape[m]
         for m in picked:
             used.add(m)
-        out.append(tuple(picked) if len(picked) > 1 else (picked[0] if picked else None))
+        # preserve the rule's tuple form: a multi-axis rule yields a tuple
+        # entry even when only one axis survives the divisibility filter, so
+        # specs stay stable as mesh shapes change; single-axis rules yield
+        # the bare name.
+        if not picked:
+            out.append(None)
+        elif len(cands) > 1:
+            out.append(tuple(picked))
+        else:
+            out.append(picked[0])
     while out and out[-1] is None:
         out.pop()
     return P(*out)

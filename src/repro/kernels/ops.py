@@ -1,10 +1,14 @@
-"""jit'd wrappers over the Pallas kernels + registration into the Morpheus
-dispatch registry as the ``pallas`` implementation of each format.
+"""jit'd wrappers over the Pallas kernels, registered into the structured
+dispatch table as the ``pallas`` backend of each format.
 
-Guards mirror the 'fits-the-device' checks Morpheus's FPGA backend applies
-(buffer-size limits, §V of the paper): when the matrix is too large for the
-resident-x kernel strategy, the wrapper falls back to the plain path rather
-than claiming a VMEM budget it cannot hold.
+Device-fit rules mirror the checks Morpheus's FPGA backend applies
+(buffer-size limits, §V of the paper), but they are *declarative* here:
+each registration carries a ``supports(A, policy)`` capability predicate
+consulted by ``core.spmv`` dispatch, which falls back down the policy's
+backend chain (normally to ``plain``) instead of each kernel hiding an
+ad-hoc guard. The thresholds come from the ``ExecutionPolicy`` — resident-x
+strategies keep x (f32) plus a couple of tiles in VMEM, the COO one-hot
+kernel materialises an (nrows, tile) window.
 """
 from __future__ import annotations
 
@@ -12,48 +16,58 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BSR, COO, DIA, ELL, SELL
-from repro.core.spmv import register_spmv, _REGISTRY
+from repro.core.spmv import register_spmm, register_spmv
 
 from .bsr_spmm import bsr_spmm
 from .coo_spmv import coo_spmv, scoo_spmv, build_scoo
 from .dia_spmv import dia_spmv
 from .ell_spmv import ell_spmv
 
-# VMEM guard: resident-x strategies keep x (f32) + a couple of tiles in VMEM.
-MAX_RESIDENT_COLS = 1 << 20
+
+# --------------------------------------------------- capability predicates ----
+
+def _dia_fits(A: DIA, policy) -> bool:
+    # x + per-diagonal shifted windows resident in VMEM
+    return A.shape[1] + 2 * A.shape[0] <= 4 * policy.max_resident_cols
 
 
-@register_spmv("dia", "pallas")
+def _ell_fits(A: ELL, policy) -> bool:
+    return A.shape[1] <= policy.max_resident_cols
+
+
+def _coo_fits(A: COO, policy) -> bool:
+    # full-window mode: one-hot window = all rows; jit-friendly but VMEM-bound
+    return A.shape[0] <= policy.max_onehot_rows and A.shape[1] <= policy.max_resident_cols
+
+
+def _sell_concrete(A: SELL, policy) -> bool:
+    # SCOO rebuild needs concrete arrays (the handle path); reject under trace
+    return not isinstance(A.data, jax.core.Tracer)
+
+
+# ------------------------------------------------------------ registrations ----
+
+@register_spmv("dia", "pallas", supports=_dia_fits)
 def dia_spmv_pallas(A: DIA, x):
-    if A.shape[1] + 2 * A.shape[0] > 4 * MAX_RESIDENT_COLS:
-        return _REGISTRY[("dia", "plain")](A, x)
     return dia_spmv(A.offsets, A.data, x)
 
 
-@register_spmv("ell", "pallas")
+@register_spmv("ell", "pallas", supports=_ell_fits)
 def ell_spmv_pallas(A: ELL, x):
-    if A.shape[1] > MAX_RESIDENT_COLS:
-        return _REGISTRY[("ell", "plain")](A, x)
     return ell_spmv(A.indices, A.data, x)
 
 
-@register_spmv("coo", "pallas")
+@register_spmv("coo", "pallas", supports=_coo_fits)
 def coo_spmv_pallas(A: COO, x):
-    # full-window mode: one-hot window = all rows; jit-friendly but VMEM-bound.
-    if A.shape[0] > 8192 or A.shape[1] > MAX_RESIDENT_COLS:
-        return _REGISTRY[("coo", "plain")](A, x)
     return coo_spmv(A.row, A.col, A.val, x, nrows=A.shape[0])
 
 
-@register_spmv("sell", "pallas")
+@register_spmv("sell", "pallas", supports=_sell_concrete)
 def sell_spmv_pallas(A: SELL, x):
     """SELL runs through the sliced-COO kernel: same slice-major layout idea
-    (C-row slices), expressed as SCOO tiles. Requires concrete arrays (the
-    handle path); under tracing fall back to plain."""
+    (C-row slices), expressed as SCOO tiles."""
     import numpy as np
 
-    if isinstance(A.data, jax.core.Tracer):
-        return _REGISTRY[("sell", "plain")](A, x)
     rows = np.asarray(A.entry_rows())
     valid = np.asarray(A.indices) >= 0
     r, c, v = rows[valid], np.asarray(A.indices)[valid], np.asarray(A.data)[valid]
@@ -63,14 +77,12 @@ def sell_spmv_pallas(A: SELL, x):
                      jnp.asarray(sid), x, nrows=A.shape[0], slice_rows=sr)
 
 
+@register_spmm("bsr", "pallas")
 def bsr_spmm_pallas(A: BSR, X):
     nbcols = -(-A.shape[1] // A.bs)
     Xp = jnp.zeros((nbcols * A.bs, X.shape[1]), X.dtype).at[: X.shape[0]].set(X)
     Y = bsr_spmm(A.bcols, A.blocks, Xp)
     return Y[: A.shape[0]].astype(X.dtype)
-
-
-_REGISTRY[("bsr", "pallas_spmm")] = bsr_spmm_pallas
 
 
 @register_spmv("bsr", "pallas")

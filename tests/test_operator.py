@@ -1,0 +1,220 @@
+"""SparseOperator / ExecutionPolicy abstraction layer: operator round-trips,
+policy fallback, context-manager scoping, LRU workspace, and back-compat shim
+equivalence with the legacy string-``impl`` API."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BackendUnsupportedError,
+    DispatchKey,
+    ExecutionPolicy,
+    SparseOperator,
+    SpmvWorkspace,
+    as_operator,
+    current_policy,
+    from_dense,
+    policy_for_impl,
+    registered_formats,
+    select_spmv,
+    spmm,
+    spmv,
+    use_backend,
+    use_policy,
+)
+from repro.core import matrices as M
+
+S = M.banded(128, 4, seed=0)
+X1 = jnp.asarray(np.random.default_rng(0).standard_normal(128), jnp.float32)
+REF = S.toarray().astype(np.float32) @ np.asarray(X1)
+
+
+# ------------------------------------------------------------- round trips ----
+
+@pytest.mark.parametrize("fmt", sorted(registered_formats()))
+def test_operator_roundtrip_every_format(fmt):
+    """A.asformat(f) @ x == A.to_dense() @ x for every registered format."""
+    A = as_operator(S, "csr")
+    B = A.asformat(fmt)
+    assert B.format == fmt
+    y = np.asarray(B @ X1)
+    scale = np.abs(REF).max() + 1e-9
+    np.testing.assert_allclose(y / scale, REF / scale, atol=5e-5)
+    # introspection surface
+    assert B.shape == (128, 128)
+    assert B.nnz > 0 and B.nbytes > 0
+
+
+def test_asformat_is_cached_and_shared():
+    A = as_operator(S, "csr")
+    B1 = A.asformat("dia")
+    B2 = A.asformat("dia")
+    assert B1.container is B2.container  # conversion paid once
+    # the cache is shared along the asformat chain
+    C = B1.asformat("ell")
+    assert C.container is A.asformat("ell").container
+    assert A.asformat("csr") is A  # no-op conversion returns self
+
+
+def test_operator_is_a_pytree():
+    A = as_operator(S, "dia").using("plain")
+    f = jax.jit(lambda A, x: A @ x)
+    np.testing.assert_allclose(np.asarray(f(A, X1)), REF, rtol=1e-4, atol=1e-4)
+    leaves = jax.tree_util.tree_leaves(A)
+    assert all(hasattr(l, "dtype") for l in leaves)
+
+
+def test_operator_spmm():
+    Xm = jnp.asarray(np.random.default_rng(1).standard_normal((128, 6)), jnp.float32)
+    refm = S.toarray().astype(np.float32) @ np.asarray(Xm)
+    for fmt in ["coo", "csr", "bsr", "ell"]:
+        Y = np.asarray(as_operator(S, fmt) @ Xm)
+        np.testing.assert_allclose(Y, refm, rtol=1e-3, atol=1e-4, err_msg=fmt)
+
+
+def test_tune_returns_retargeted_operator():
+    op = as_operator(S).tune(iters=2, warmup=1)
+    assert isinstance(op, SparseOperator)
+    assert op.policy is not None and op.policy.backends
+    np.testing.assert_allclose(np.asarray(op @ X1), REF, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- policy fallback ----
+
+def test_policy_fallback_down_the_chain():
+    """Pallas-unsupported shapes silently fall back to plain."""
+    A = as_operator(S, "coo")
+    tiny = ExecutionPolicy(backends=("pallas", "plain"), max_onehot_rows=4)
+    assert select_spmv(A.container, tiny).key == DispatchKey("coo", "plain")
+    ok = ExecutionPolicy(backends=("pallas", "plain"))
+    assert select_spmv(A.container, ok).key == DispatchKey("coo", "pallas")
+    # both paths compute the same SpMV
+    y = np.asarray(A.with_policy(tiny) @ X1)
+    np.testing.assert_allclose(y, REF, rtol=1e-4, atol=1e-4)
+
+
+def test_policy_no_fallback_raises():
+    A = as_operator(S, "coo")
+    strict = ExecutionPolicy(backends=("pallas",), max_onehot_rows=4,
+                             allow_fallback=False)
+    with pytest.raises(BackendUnsupportedError):
+        select_spmv(A.container, strict)
+    # uniform strictness: an *unregistered* preferred backend raises too
+    # (csr has no pallas SpMV), instead of silently walking the chain
+    csr = as_operator(S, "csr")
+    strict2 = ExecutionPolicy(backends=("pallas", "plain"), allow_fallback=False)
+    with pytest.raises(BackendUnsupportedError):
+        select_spmv(csr.container, strict2)
+    # ...and SpMM honours allow_fallback through the vmapped-SpMV path
+    Xm = jnp.ones((128, 3), jnp.float32)
+    with pytest.raises(BackendUnsupportedError):
+        csr.with_policy(strict2) @ Xm
+    # using(..., fallback=False) is strict too: both knobs move together
+    strict_op = csr.using("pallas", fallback=False)
+    assert strict_op.policy.allow_fallback is False
+    with pytest.raises(BackendUnsupportedError):
+        strict_op @ X1
+    with pytest.raises(BackendUnsupportedError):
+        with use_backend("pallas", fallback=False):
+            csr @ X1
+
+
+def test_tune_preserves_policy_limits():
+    """tune() retargets the backend chain but keeps the caller's limits."""
+    A = as_operator(S, "coo").using("pallas", max_resident_cols=4)
+    op = A.tune(iters=2, warmup=1)
+    assert op.policy.max_resident_cols == 4
+    assert op.policy.backends  # retargeted to the winning backend chain
+    np.testing.assert_allclose(np.asarray(op @ X1), REF, rtol=1e-4, atol=1e-4)
+
+
+def test_unregistered_chain_raises_keyerror():
+    A = as_operator(S, "csr")
+    with pytest.raises(KeyError):
+        A.with_policy(ExecutionPolicy(backends=("pallas",))) @ X1
+
+
+# ----------------------------------------------------- context-manager scope ----
+
+def test_use_policy_scoping_and_nesting():
+    base = current_policy()
+    with use_policy(backends=("dense", "plain")) as p1:
+        assert current_policy() is p1
+        assert current_policy().backends == ("dense", "plain")
+        with use_backend("pallas") as p2:
+            assert current_policy() is p2
+            assert current_policy().backends == ("pallas", "plain")
+            # derived policies inherit limits from the enclosing scope
+            assert p2.max_resident_cols == p1.max_resident_cols
+        assert current_policy() is p1
+    assert current_policy() == base
+
+
+def test_ambient_policy_drives_dispatch():
+    A = as_operator(S, "dia")  # no attached policy -> ambient
+    with use_backend("dense"):
+        y = np.asarray(A @ X1)
+    np.testing.assert_allclose(y, REF, rtol=1e-4, atol=1e-4)
+    # attached policy wins over ambient
+    with use_backend("dense"):
+        y2 = np.asarray(A.using("plain") @ X1)
+    y_plain = np.asarray(spmv(A.container, X1, "plain"))
+    assert np.array_equal(y2, y_plain)
+
+
+# ------------------------------------------------------- back-compat shims ----
+
+@pytest.mark.parametrize("fmt,impl", [("coo", "plain"), ("dia", "plain"),
+                                      ("dia", "pallas"), ("ell", "pallas"),
+                                      ("csr", "dense"), ("dense", "dense")])
+def test_shim_spmv_bit_identical_to_operator(fmt, impl):
+    A = from_dense(S, fmt)
+    y_shim = np.asarray(spmv(A, X1, impl))
+    y_op = np.asarray(as_operator(A, policy=policy_for_impl(impl)) @ X1)
+    assert np.array_equal(y_shim, y_op), (fmt, impl)
+
+
+def test_shim_spmm_bit_identical():
+    Xm = jnp.asarray(np.random.default_rng(2).standard_normal((128, 4)), jnp.float32)
+    for fmt, impl in [("bsr", "plain"), ("bsr", "pallas"), ("coo", "plain")]:
+        Y_shim = np.asarray(spmm(from_dense(S, fmt), Xm, impl))
+        Y_op = np.asarray(as_operator(S, fmt, policy=policy_for_impl(impl)) @ Xm)
+        assert np.array_equal(Y_shim, Y_op), (fmt, impl)
+
+
+def test_shim_accepts_operator_and_rejects_unknown_impl():
+    A = as_operator(S, "csr")
+    y = np.asarray(spmv(A, X1, "plain"))  # operators pass through the shim
+    np.testing.assert_allclose(y, REF, rtol=1e-4, atol=1e-4)
+    with pytest.raises(KeyError):
+        spmv(A, X1, "pallas")  # never registered for csr — legacy strictness
+
+
+def test_shim_guard_fallback_matches_declarative_dispatch():
+    """The old in-kernel guard (large COO -> plain) survives as a supports
+    predicate: the shim still silently degrades, bit-identically."""
+    big = M.random_uniform(9000, 0.001, seed=3)  # > max_onehot_rows
+    xb = jnp.ones((9000,), jnp.float32)
+    A = from_dense(big, "coo")
+    y_pallas_impl = np.asarray(spmv(A, xb, "pallas"))
+    y_plain = np.asarray(spmv(A, xb, "plain"))
+    assert np.array_equal(y_pallas_impl, y_plain)
+
+
+# ------------------------------------------------------------ LRU workspace ----
+
+def test_workspace_is_true_lru():
+    ws = SpmvWorkspace(max_entries=2)
+    mats = [M.tridiag(32, seed=i) for i in range(3)]
+    x = jnp.ones((32,), jnp.float32)
+    ws.spmv(mats[0], x, "csr")          # cache: [0]
+    ws.spmv(mats[1], x, "csr")          # cache: [0, 1]
+    ws.spmv(mats[0], x, "csr")          # hit refreshes 0 -> cache: [1, 0]
+    assert ws.hits == 1 and ws.misses == 2
+    ws.spmv(mats[2], x, "csr")          # evicts 1 (LRU), not 0
+    assert len(ws) == 2
+    ws.spmv(mats[0], x, "csr")          # still cached — hot entry survived
+    assert ws.hits == 2 and ws.misses == 3
+    ws.spmv(mats[1], x, "csr")          # was evicted — misses again
+    assert ws.misses == 4

@@ -1,7 +1,10 @@
 """Hypothesis property tests on the sparse-format system's invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
 import scipy.sparse as sp
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import from_dense, spmv

@@ -1,14 +1,17 @@
 """End-to-end driver: the Morpheus-enabled HPCG benchmark (paper §VII-D).
 
   PYTHONPATH=src python examples/hpcg.py [--grid 16] [--iters 50]
+  PYTHONPATH=src python examples/hpcg.py --no-precond      # SpMV-only slice
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/hpcg.py --distributed
 
-Serial: phases 1-5; the run-first auto-tuner returns a retargeted
-``SparseOperator`` (winning format + ExecutionPolicy) that drives the CG
-loop as a plain ``A @ p``. Distributed: rows sharded over the mesh,
-local/remote split with per-part formats (Table III) and ppermute halo
-exchange.
+Serial: the full pipeline — setup (stencil + multigrid hierarchy), reference
+run (csr/plain PCG with SymGS-smoothed V-cycle), optimisation (run-first
+auto-tuner picks a format/backend per multigrid level), validation (the
+optimised machinery re-run on csr/plain must match the reference bit-for-bit,
+the tuned run to tolerance), timed fixed-iteration runs. Distributed: rows
+sharded over the mesh, local/remote split with per-part formats (Table III)
+and ppermute halo exchange (SpMV-only slice).
 """
 import argparse
 
@@ -22,6 +25,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--grid", type=int, default=12)
     ap.add_argument("--iters", type=int, default=50)
+    ap.add_argument("--depth", type=int, default=4, help="multigrid levels")
+    ap.add_argument("--tol", type=float, default=1e-6)
+    ap.add_argument("--no-precond", action="store_true",
+                    help="disable the multigrid preconditioner (plain CG)")
     ap.add_argument("--distributed", action="store_true")
     args = ap.parse_args()
 
@@ -33,8 +40,14 @@ def main():
         print(f"devices={ndev}")
         res = run_hpcg_distributed(mesh, g, g, 2 * g, iters=args.iters)
     else:
-        res = run_hpcg(g, g, g, iters=args.iters)
-    print(f"\nphases: setup -> reference -> tune -> validate({res.valid}) -> timed")
+        res = run_hpcg(g, g, g, iters=args.iters, depth=args.depth,
+                       tol=args.tol, precond=not args.no_precond)
+    checks = f"valid={res.valid}" if args.distributed else \
+             f"bitwise={res.bitwise}, valid={res.valid}"
+    print(f"\nphases: setup -> reference -> tune -> validate({checks}) -> timed")
+    if res.mg_levels:
+        print(f"multigrid levels: {res.mg_levels}")
+        print(f"pcg: {res.pcg_iters} iters to rel_res={res.rel_res:.2e}")
     print("tuner table:")
     for k, v in sorted(res.table.items(), key=lambda kv: str(kv[1])):
         print(f"  {k}: {v if isinstance(v, str) else f'{v:.1f}us' if v < 1e4 else f'{v/1e3:.1f}ms'}")

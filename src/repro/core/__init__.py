@@ -28,6 +28,8 @@ from .spmv import (
     DispatchKey,
     available_impls,
     dispatch_table,
+    masked_spmv,
+    register_masked_spmv,
     register_spmm,
     register_spmv,
     select_spmv,
@@ -45,6 +47,7 @@ __all__ = [
     "DEFAULT_POLICY", "ExecutionPolicy", "SparseOperator", "as_operator",
     "current_policy", "policy_for_impl", "use_backend", "use_policy",
     "BackendUnsupportedError", "DispatchKey", "available_impls", "dispatch_table",
+    "masked_spmv", "register_masked_spmv",
     "register_spmm", "register_spmv", "select_spmv", "spmm", "spmv",
     "TuneResult", "autotune_spmv", "optimal_format_distribution",
     "SpmvWorkspace", "spmv_cached", "workspace",

@@ -27,6 +27,17 @@ def _as_scipy(a) -> sp.csr_matrix:
     return sp.csr_matrix(a)
 
 
+def _as_scipy_sorted(a) -> sp.csr_matrix:
+    """Like ``_as_scipy`` but with canonical (sorted) index order, copying
+    first when needed — ``tocsr()`` aliases csr inputs, and sorting the
+    caller's own matrix in place would be an unadvertised side effect."""
+    s = _as_scipy(a)
+    if not s.has_sorted_indices:
+        s = s.copy()
+        s.sort_indices()
+    return s
+
+
 def from_dense(a, fmt: str, dtype=jnp.float32, **kw):
     """Build a sparse container of format ``fmt`` from a dense/scipy matrix."""
     builders = {
@@ -66,8 +77,7 @@ def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None):
 
 
 def to_csr(a, dtype=jnp.float32):
-    s = _as_scipy(a)
-    s.sort_indices()
+    s = _as_scipy_sorted(a)
     indices, data = s.indices, s.data
     if len(data) == 0:  # degenerate: one pad entry past indptr[-1] (sentinel row)
         indices = np.array([0], np.int32)
@@ -89,23 +99,33 @@ def to_dia(a, dtype=jnp.float32):
     return DIA(jnp.asarray(offs, jnp.int32), jnp.asarray(data, dtype), (nrows, ncols))
 
 
+def _row_entry_positions(take: np.ndarray):
+    """Vectorised row walk shared by the ELL/SELL builders: for ``take[r]``
+    entries taken from each row, (j, k) give every taken entry's within-row
+    position and its source row's index in ``take``."""
+    total = int(take.sum())
+    k = np.repeat(np.arange(len(take)), take)
+    j = np.arange(total) - np.repeat(np.cumsum(take) - take, take)
+    return j, k
+
+
 def to_ell(a, dtype=jnp.float32, width: Optional[int] = None):
-    s = _as_scipy(a)
+    s = _as_scipy_sorted(a)
     nrows, ncols = s.shape
     counts = np.diff(s.indptr)
     w = int(width if width is not None else (counts.max() if nrows else 0))
     w = max(w, 1)
     idx = np.full((nrows, w), -1, np.int32)
     dat = np.zeros((nrows, w), np.float64)
-    for r in range(nrows):
-        lo, hi = s.indptr[r], min(s.indptr[r + 1], s.indptr[r] + w)
-        idx[r, : hi - lo] = s.indices[lo:hi]
-        dat[r, : hi - lo] = s.data[lo:hi]
+    j, k = _row_entry_positions(np.minimum(counts, w))
+    src = s.indptr[k] + j
+    idx[k, j] = s.indices[src]
+    dat[k, j] = s.data[src]
     return ELL(jnp.asarray(idx), jnp.asarray(dat, dtype), (nrows, ncols))
 
 
 def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64):
-    s = _as_scipy(a)
+    s = _as_scipy_sorted(a)
     nrows, ncols = s.shape
     counts = np.diff(s.indptr)
     nrows_pad = -(-max(nrows, 1) // C) * C
@@ -115,25 +135,21 @@ def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64):
         win = rows[w0 : w0 + sigma]
         perm[w0 : w0 + len(win)] = win[np.argsort(-counts[win], kind="stable")]
     nslices = nrows_pad // C
-    widths = np.zeros(nslices, np.int64)
-    for sl in range(nslices):
-        rs = perm[sl * C : (sl + 1) * C]
-        widths[sl] = max(1, max((counts[r] for r in rs if r < nrows), default=1))
+    counts_pad = np.concatenate([counts, [0]])  # padding rows contribute 0
+    widths = np.maximum(counts_pad[perm].reshape(nslices, C).max(axis=1), 1)
     sptr = np.zeros(nslices + 1, np.int64)
     np.cumsum(widths, out=sptr[1:])
     total = int(sptr[-1]) * C
     idx = np.full(total, -1, np.int32)
     dat = np.zeros(total, np.float64)
-    for sl in range(nslices):
-        base = int(sptr[sl]) * C
-        for lane in range(C):
-            r = perm[sl * C + lane]
-            if r >= nrows:
-                continue
-            lo, hi = s.indptr[r], s.indptr[r + 1]
-            for j in range(hi - lo):
-                idx[base + j * C + lane] = s.indices[lo + j]
-                dat[base + j * C + lane] = s.data[lo + j]
+    # entry (slice sl, lane, j) of permuted row r lives at (sptr[sl]+j)*C+lane
+    real = np.nonzero(perm < nrows)[0]
+    rows = perm[real]
+    j, k = _row_entry_positions(counts[rows])
+    src = s.indptr[rows[k]] + j
+    tgt = (sptr[real[k] // C] + j) * C + real[k] % C
+    idx[tgt] = s.indices[src]
+    dat[tgt] = s.data[src]
     return SELL(jnp.asarray(sptr, jnp.int32), jnp.asarray(idx), jnp.asarray(dat, dtype),
                 jnp.asarray(perm, jnp.int32), (nrows, ncols), C)
 

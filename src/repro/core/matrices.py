@@ -27,25 +27,42 @@ def tridiag(n: int, seed: int = 0) -> sp.csr_matrix:
 
 def fdm27(nx: int, ny: int, nz: int) -> sp.csr_matrix:
     """HPCG's 27-point stencil on an nx*ny*nz grid: 26 on the diagonal,
-    -1 for each of the up-to-26 neighbours (Dirichlet-style truncation)."""
+    -1 for each of the up-to-26 neighbours (Dirichlet-style truncation).
+    Built vectorised so multigrid hierarchies over large grids are cheap."""
     n = nx * ny * nz
+    k, j, i = np.meshgrid(np.arange(nz), np.arange(ny), np.arange(nx), indexing="ij")
+    i, j, k = i.ravel(), j.ravel(), k.ravel()
+    r = i + nx * (j + ny * k)
     rows, cols, vals = [], [], []
-    def idx(i, j, k):
-        return i + nx * (j + ny * k)
-    for k in range(nz):
-        for j in range(ny):
-            for i in range(nx):
-                r = idx(i, j, k)
-                for dk in (-1, 0, 1):
-                    for dj in (-1, 0, 1):
-                        for di in (-1, 0, 1):
-                            ii, jj, kk = i + di, j + dj, k + dk
-                            if 0 <= ii < nx and 0 <= jj < ny and 0 <= kk < nz:
-                                c = idx(ii, jj, kk)
-                                rows.append(r)
-                                cols.append(c)
-                                vals.append(26.0 if c == r else -1.0)
-    return sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+    for dk in (-1, 0, 1):
+        for dj in (-1, 0, 1):
+            for di in (-1, 0, 1):
+                ii, jj, kk = i + di, j + dj, k + dk
+                ok = ((ii >= 0) & (ii < nx) & (jj >= 0) & (jj < ny)
+                      & (kk >= 0) & (kk < nz))
+                rows.append(r[ok])
+                cols.append((ii + nx * (jj + ny * kk))[ok])
+                vals.append(np.full(int(ok.sum()),
+                                    26.0 if (di, dj, dk) == (0, 0, 0) else -1.0))
+    return sp.csr_matrix((np.concatenate(vals),
+                          (np.concatenate(rows), np.concatenate(cols))),
+                         shape=(n, n))
+
+
+def coarsen_injection(nx: int, ny: int, nz: int) -> np.ndarray:
+    """HPCG's geometric coarsening map: fine grid ids of the coarse points.
+
+    Coarse point (ic, jc, kc) on the (nx//2, ny//2, nz//2) grid is fine point
+    (2ic, 2jc, 2kc); the returned ``f2c`` array (len = coarse n) lists those
+    fine ids, so restriction is ``rc = r[f2c]`` (injection) and prolongation
+    scatters back to the same points. Grid dims must be even.
+    """
+    assert nx % 2 == 0 and ny % 2 == 0 and nz % 2 == 0, (nx, ny, nz)
+    cx, cy, cz = nx // 2, ny // 2, nz // 2
+    kc, jc, ic = np.meshgrid(np.arange(cz), np.arange(cy), np.arange(cx),
+                             indexing="ij")  # ic fastest => coarse-id order
+    fine = 2 * ic.ravel() + nx * (2 * jc.ravel() + ny * 2 * kc.ravel())
+    return fine.astype(np.int64)
 
 
 def random_uniform(n: int, density: float = 0.01, seed: int = 0) -> sp.csr_matrix:

@@ -228,6 +228,14 @@ class SparseOperator:
     def matmat(self, X) -> jnp.ndarray:
         return self @ X
 
+    def masked_matvec(self, x, row_mask) -> jnp.ndarray:
+        """``where(row_mask, A @ x, 0)`` — one color of a multicolor sweep,
+        dispatched through the same (format, backend) table as ``A @ x``."""
+        from .spmv import _dispatch_masked_spmv
+
+        return _dispatch_masked_spmv(self.container, jnp.asarray(x),
+                                     row_mask, self._effective_policy())
+
     # -- auto-tuning --------------------------------------------------------
 
     def tune(self, candidates=None, **kw) -> "SparseOperator":

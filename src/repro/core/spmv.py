@@ -55,6 +55,7 @@ class KernelEntry:
 
 _SPMV: Dict[DispatchKey, KernelEntry] = {}
 _SPMM: Dict[DispatchKey, KernelEntry] = {}
+_SPMV_MASKED: Dict[DispatchKey, KernelEntry] = {}
 
 
 def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
@@ -73,6 +74,18 @@ def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None):
     return deco
 
 
+def register_masked_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
+    """Row-masked SpMV kernel: ``fn(A, x, row_mask) -> y`` with ``y == 0``
+    outside the mask. Formats without one fall back to masking the plain
+    product of the *same* backend, so masked callers (multicolor SymGS)
+    retarget across formats/backends exactly like unmasked SpMV."""
+    def deco(fn):
+        key = DispatchKey(fmt, backend)
+        _SPMV_MASKED[key] = KernelEntry(key, fn, supports)
+        return fn
+    return deco
+
+
 def available_impls(fmt: str):
     """Backends with a registered SpMV kernel for ``fmt``."""
     _ensure_pallas()
@@ -81,7 +94,7 @@ def available_impls(fmt: str):
 
 def dispatch_table(op: str = "spmv") -> Dict[DispatchKey, KernelEntry]:
     _ensure_pallas()
-    return dict(_SPMV if op == "spmv" else _SPMM)
+    return dict({"spmv": _SPMV, "spmm": _SPMM, "masked_spmv": _SPMV_MASKED}[op])
 
 
 _PALLAS_LOADED = False
@@ -146,6 +159,46 @@ def _dispatch_spmm(A, X, policy: ExecutionPolicy) -> jnp.ndarray:
             break
     return jax.vmap(lambda col: _dispatch_spmv(A, col, policy),
                     in_axes=1, out_axes=1)(X)
+
+
+def _dispatch_masked_spmv(A, x, row_mask, policy: ExecutionPolicy) -> jnp.ndarray:
+    """y = mask ⊙ (A @ x): the color-sweep primitive of multicolor SymGS.
+
+    Walks the policy's backend chain; a format with a native masked kernel
+    (predicated early, skipping unmasked rows' work) wins, otherwise the
+    *same backend's* unmasked kernel runs and the mask is applied after —
+    so masked callers inherit every format/backend the dispatch table knows.
+    """
+    if "pallas" in policy.backends:
+        _ensure_pallas()
+    tried: List[str] = []
+    for backend in policy.backends:
+        key = DispatchKey(A.format, backend)
+        entry = _SPMV_MASKED.get(key)
+        if entry is not None and entry.ok(A, policy):
+            return entry.fn(A, x, row_mask)
+        base = _SPMV.get(key)
+        if base is not None and base.ok(A, policy):
+            return jnp.where(row_mask, base.fn(A, x), 0)
+        why = "unregistered" if (entry is None and base is None) else "unsupported"
+        if not policy.allow_fallback:
+            raise BackendUnsupportedError(
+                f"masked SpMV backend {backend!r} {why} for {A.format} matrix of "
+                f"shape {tuple(A.shape)} under {policy} and fallback is disabled")
+        tried.append(f"{backend}: {why}")
+    raise KeyError(
+        f"no masked SpMV for format {A.format!r} under chain {policy.backends}; "
+        f"tried [{'; '.join(tried)}]")
+
+
+def masked_spmv(A, x: jnp.ndarray, row_mask: jnp.ndarray,
+                impl: Optional[str] = None, *,
+                policy: Optional[ExecutionPolicy] = None) -> jnp.ndarray:
+    """Row-masked SpMV: ``where(row_mask, A @ x, 0)`` through the dispatch
+    table. ``row_mask`` is a (nrows,) bool array; ``impl`` mirrors the legacy
+    string spelling of ``spmv``."""
+    A = _unwrap(A)
+    return _dispatch_masked_spmv(A, x, row_mask, _shim_policy(A, impl, policy, _SPMV))
 
 
 # ------------------------------------------------------ back-compat shims ----
@@ -264,6 +317,49 @@ def bsr_spmv_plain(A: BSR, x):
 @register_spmv("dense", "dense")
 def dense_spmv(A: Dense, x):
     return A.data @ x
+
+
+# ---------------------------------------------------------- masked plain ----
+# Native row-masked kernels: the mask predicates entries *before* the reduce,
+# the VPU analogue of running one multicolor-SymGS color as a masked sweep.
+
+@register_masked_spmv("csr", "plain")
+def csr_masked_spmv_plain(A: CSR, x, row_mask):
+    nrows = A.shape[0]
+    rows = A.row_ids()
+    prod = jnp.where(row_mask[rows], A.data * x[A.indices], 0)
+    y = jnp.zeros((nrows + 1,), prod.dtype)
+    return y.at[rows].add(prod)[:nrows]
+
+
+@register_masked_spmv("coo", "plain")
+def coo_masked_spmv_plain(A: COO, x, row_mask):
+    nrows = A.shape[0]
+    keep = row_mask[jnp.minimum(A.row, nrows - 1)] & (A.row < nrows)
+    prod = jnp.where(keep, A.val * x[A.col], 0)
+    y = jnp.zeros((nrows + 1,), prod.dtype)
+    return y.at[A.row].add(prod)[:nrows]
+
+
+@register_masked_spmv("ell", "plain")
+def ell_masked_spmv_plain(A: ELL, x, row_mask):
+    valid = (A.indices >= 0) & row_mask[:, None]
+    xk = x[jnp.where(A.indices >= 0, A.indices, 0)]
+    return jnp.sum(jnp.where(valid, A.data * xk, 0), axis=1)
+
+
+@register_masked_spmv("dia", "plain")
+def dia_masked_spmv_plain(A: DIA, x, row_mask):
+    nrows, ncols = A.shape
+    i = jnp.arange(nrows, dtype=jnp.int32)
+
+    def body(d, y):
+        k = i + A.offsets[d]
+        valid = (k >= 0) & (k < ncols) & row_mask
+        xk = x[jnp.clip(k, 0, ncols - 1)]
+        return y + jnp.where(valid, A.data[d] * xk, 0)
+
+    return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), A.dtype))
 
 
 # ------------------------------------------------------- dense fallback ----

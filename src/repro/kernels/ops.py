@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BSR, COO, DIA, ELL, SELL
-from repro.core.spmv import register_spmm, register_spmv
+from repro.core.spmv import register_masked_spmv, register_spmm, register_spmv
 
 from .bsr_spmm import bsr_spmm
 from .coo_spmv import coo_spmv, scoo_spmv, build_scoo
@@ -75,6 +75,20 @@ def sell_spmv_pallas(A: SELL, x):
     rr, cc, vv, sid = build_scoo(r, c, v, A.shape[0], slice_rows=sr)
     return scoo_spmv(jnp.asarray(rr), jnp.asarray(cc), jnp.asarray(vv),
                      jnp.asarray(sid), x, nrows=A.shape[0], slice_rows=sr)
+
+
+# Row-masked variants (multicolor SymGS colors): the mask is applied to the
+# *operand* — rows zeroed before the kernel contribute exactly zero — so the
+# hand-tiled kernels run unchanged and the masked dispatch stays on-backend.
+
+@register_masked_spmv("dia", "pallas", supports=_dia_fits)
+def dia_masked_spmv_pallas(A: DIA, x, row_mask):
+    return dia_spmv(A.offsets, jnp.where(row_mask[None, :], A.data, 0), x)
+
+
+@register_masked_spmv("ell", "pallas", supports=_ell_fits)
+def ell_masked_spmv_pallas(A: ELL, x, row_mask):
+    return ell_spmv(A.indices, jnp.where(row_mask[:, None], A.data, 0), x)
 
 
 @register_spmm("bsr", "pallas")

@@ -1,0 +1,20 @@
+"""repro.solvers — the HPCG solve pipeline as SparseOperator clients.
+
+    cg     : fixed-iteration + tolerance-stopping (preconditioned) CG
+    symgs  : symmetric Gauss-Seidel smoother (reference triangular sweeps
+             and the multicolor masked-SpMV schedule)
+    mg     : geometric multigrid V-cycle over re-discretised 27-point
+             stencils, with per-level auto-tuned formats
+
+Everything dispatches through the core (format, backend) table, so the whole
+HPCG preconditioner retargets across formats/backends like a single SpMV.
+"""
+from .cg import CGInfo, as_matvec, cg, cg_solve, pcg_solve
+from .symgs import SymGS, greedy_coloring
+from .mg import MGLevel, VCycle, build_mg, coarsenable, injection_operators
+
+__all__ = [
+    "CGInfo", "as_matvec", "cg", "cg_solve", "pcg_solve",
+    "SymGS", "greedy_coloring",
+    "MGLevel", "VCycle", "build_mg", "coarsenable", "injection_operators",
+]

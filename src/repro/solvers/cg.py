@@ -1,0 +1,110 @@
+"""Conjugate-Gradient solvers over ``SparseOperator`` matvecs.
+
+Extracted from ``apps/hpcg.py`` so every HPCG phase shares one CG core:
+
+  - ``cg_solve``  : the original fixed-iteration CG (bit-identical to the
+    pre-refactor loop) — used for the *timed* phases, where a fixed SpMV
+    count keeps runtimes comparable across formats/backends.
+  - ``pcg_solve`` : fixed-iteration preconditioned CG (same loop shape,
+    ``precond`` applied each step).
+  - ``cg``        : residual-tolerance stopping via ``lax.while_loop``,
+    preconditioned or not — the *convergence* entry point (HPCG's
+    "50 iterations to 1e-6" criterion lives here).
+
+All three take a matvec callable (``lambda p: A @ p`` for a SparseOperator),
+so the format/backend dispatch of PR 1 applies to every CG flavour.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def as_matvec(A) -> Callable:
+    """Accept a SparseOperator (or anything with ``@``) or a callable."""
+    return A if callable(A) else (lambda p: A @ p)
+
+
+def cg_solve(spmv_fn: Callable, b: jnp.ndarray, iters: int):
+    """Fixed-iteration CG (no preconditioner). Returns (x, final |r|^2)."""
+
+    def body(_, state):
+        x, r, p, rs = state
+        Ap = spmv_fn(p)
+        alpha = rs / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = jnp.vdot(r, r)
+        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        return x, r, p, rs_new
+
+    x0 = jnp.zeros_like(b)
+    state = (x0, b, b, jnp.vdot(b, b))
+    x, r, p, rs = jax.lax.fori_loop(0, iters, body, state)
+    return x, rs
+
+
+def pcg_solve(spmv_fn: Callable, b: jnp.ndarray, iters: int,
+              precond: Optional[Callable] = None):
+    """Fixed-iteration preconditioned CG. ``precond(r)`` applies M^-1 (must be
+    a symmetric positive-definite linear map — SymGS / the V-cycle are).
+    With ``precond=None`` the recurrence degenerates to ``cg_solve``'s.
+    Returns (x, final |r|^2)."""
+    M = precond if precond is not None else (lambda r: r)
+
+    def body(_, state):
+        x, r, p, rz = state
+        Ap = spmv_fn(p)
+        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = M(r)
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / jnp.maximum(rz, 1e-30)) * p
+        return x, r, p, rz_new
+
+    x0 = jnp.zeros_like(b)
+    z0 = M(b)
+    state = (x0, b, z0, jnp.vdot(b, z0))
+    x, r, p, rz = jax.lax.fori_loop(0, iters, body, state)
+    return x, jnp.vdot(r, r)
+
+
+class CGInfo(NamedTuple):
+    """Result of a tolerance-stopping CG run (jnp scalars; jit-transparent)."""
+
+    x: jnp.ndarray
+    iters: jnp.ndarray    # iterations actually taken
+    rel_res: jnp.ndarray  # final ||r|| / ||b||
+
+
+def cg(A, b: jnp.ndarray, *, tol: float = 1e-6, maxiter: int = 500,
+       precond: Optional[Callable] = None) -> CGInfo:
+    """(P)CG with relative-residual stopping: run until ||r|| <= tol * ||b||
+    or ``maxiter``. ``A`` is a SparseOperator or a matvec callable."""
+    spmv_fn = as_matvec(A)
+    M = precond if precond is not None else (lambda r: r)
+    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
+
+    def cond(state):
+        _, r, _, _, k = state
+        return (jnp.linalg.norm(r) > tol * bnorm) & (k < maxiter)
+
+    def body(state):
+        x, r, p, rz, k = state
+        Ap = spmv_fn(p)
+        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = M(r)
+        rz_new = jnp.vdot(r, z)
+        p = z + (rz_new / jnp.maximum(rz, 1e-30)) * p
+        return x, r, p, rz_new, k + 1
+
+    x0 = jnp.zeros_like(b)
+    z0 = M(b)
+    state = (x0, b, z0, jnp.vdot(b, z0), jnp.int32(0))
+    x, r, _, _, k = jax.lax.while_loop(cond, body, state)
+    return CGInfo(x, k, jnp.linalg.norm(r) / bnorm)

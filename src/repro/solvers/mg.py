@@ -1,0 +1,146 @@
+"""Geometric multigrid V-cycle for the HPCG 27-point stencil.
+
+HPCG's multigrid: at every level, pre-smooth with SymGS, restrict the
+residual by *injection* onto the 2x-coarsened grid, recurse, prolong the
+coarse correction back (injection transpose), post-smooth. Coarse operators
+are re-discretised 27-point stencils (``matrices.fdm27`` at halved dims),
+exactly as the reference benchmark does.
+
+Every linear piece is a ``SparseOperator``: the level matrices (tunable
+per-level, Table III style — each level's sparsity pattern may pick a
+different winning format/backend), and the restriction/prolongation maps
+(COO containers with one unit entry per coarse point). The V-cycle is
+therefore jittable end-to-end and retargets with the dispatch table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+import scipy.sparse as sp
+
+from repro.core import SparseOperator, as_operator
+from repro.core import matrices as M
+from repro.core.autotune import autotune_spmv
+
+from .symgs import SymGS
+
+
+def injection_operators(nx: int, ny: int, nz: int,
+                        dtype=jnp.float32) -> Tuple[SparseOperator, SparseOperator]:
+    """(R, P) for one 2x geometric coarsening step, as COO SparseOperators.
+
+    R is (nc, nf) with R[ic, f2c[ic]] = 1 (injection); P = R^T, so the coarse
+    correction scatters back onto the injected points and the V-cycle stays a
+    symmetric preconditioner.
+    """
+    f2c = M.coarsen_injection(nx, ny, nz)
+    nf, nc = nx * ny * nz, len(f2c)
+    ones = np.ones(nc, np.float64)
+    R = sp.csr_matrix((ones, (np.arange(nc), f2c)), shape=(nc, nf))
+    P = sp.csr_matrix((ones, (f2c, np.arange(nc))), shape=(nf, nc))
+    return as_operator(R, "coo", dtype=dtype), as_operator(P, "coo", dtype=dtype)
+
+
+@dataclass(frozen=True)
+class MGLevel:
+    grid: Tuple[int, int, int]
+    A: SparseOperator
+    smoother: SymGS
+    R: Optional[SparseOperator] = None  # to the next (coarser) level
+    P: Optional[SparseOperator] = None  # back from it
+
+    @property
+    def chosen(self) -> str:
+        pol = self.A.policy
+        backend = pol.backends[0] if pol is not None and pol.backends else "plain"
+        return f"{self.A.format}/{backend}"
+
+
+@dataclass(frozen=True)
+class VCycle:
+    """Recursive V-cycle, ``__call__(r) ~= A^-1 r`` — a symmetric
+    positive-definite preconditioner when pre == post (SymGS is symmetric and
+    P = R^T), so it drops straight into preconditioned CG."""
+
+    levels: Tuple[MGLevel, ...]
+    pre: int = 1
+    post: int = 1
+    coarse_sweeps: int = 4
+
+    @property
+    def depth(self) -> int:
+        return len(self.levels)
+
+    def describe(self) -> str:
+        return " | ".join(f"{'x'.join(map(str, l.grid))}:{l.chosen}"
+                          for l in self.levels)
+
+    def retuned(self, candidates=None) -> "VCycle":
+        """Re-run the auto-tuner on every level and retarget the operators —
+        the per-level format choice of Table III. Schedules (coloring, diag,
+        R/P) are reused; only the SpMV operators change."""
+        levels = []
+        for l in self.levels:
+            op = autotune_spmv(l.A, candidates=candidates).operator
+            levels.append(MGLevel(l.grid, op, l.smoother.with_operator(op),
+                                  l.R, l.P))
+        return VCycle(tuple(levels), self.pre, self.post, self.coarse_sweeps)
+
+    def _apply(self, li: int, r: jnp.ndarray) -> jnp.ndarray:
+        lvl = self.levels[li]
+        x = jnp.zeros_like(r)
+        if li == len(self.levels) - 1:  # coarsest: smooth it out
+            for _ in range(self.coarse_sweeps):
+                x = lvl.smoother.sweep(r, x)
+            return x
+        for _ in range(self.pre):
+            x = lvl.smoother.sweep(r, x)
+        res = r - lvl.A @ x
+        xc = self._apply(li + 1, lvl.R @ res)
+        x = x + lvl.P @ xc
+        for _ in range(self.post):
+            x = lvl.smoother.sweep(r, x)
+        return x
+
+    def __call__(self, r: jnp.ndarray) -> jnp.ndarray:
+        return self._apply(0, r)
+
+
+def coarsenable(grid: Sequence[int], min_dim: int = 4) -> bool:
+    return all(d % 2 == 0 and d // 2 >= min_dim // 2 and d > 2 for d in grid)
+
+
+def build_mg(nx: int, ny: int, nz: int, *, depth: int = 4, pre: int = 1,
+             post: int = 1, coarse_sweeps: int = 4, fmt: str = "csr",
+             method: str = "multicolor", tune: bool = False,
+             candidates=None, dtype=jnp.float32) -> VCycle:
+    """Build the HPCG multigrid hierarchy for an (nx, ny, nz) stencil grid.
+
+    ``depth`` caps the number of levels; coarsening stops early when a dim
+    goes odd or too small. ``tune=True`` runs the run-first auto-tuner on
+    every level's re-discretised matrix and installs the winning
+    (format, backend) operator — the per-level format choice of Table III
+    (equivalent to ``build_mg(...).retuned(candidates)``, which is the cheap
+    way to derive a tuned hierarchy from an already-built one: schedules and
+    transfer operators are shared, not rebuilt).
+    ``fmt`` is the (reference) format when not tuning.
+    """
+    levels = []
+    grid = (nx, ny, nz)
+    for li in range(depth):
+        A_sp = M.fdm27(*grid)
+        op = as_operator(A_sp, fmt).using("plain")
+        smoother = SymGS.build(A_sp, operator=op, method=method, dtype=dtype)
+        last = li == depth - 1 or not coarsenable(grid)
+        R = P = None
+        if not last:
+            R, P = injection_operators(*grid, dtype=dtype)
+        levels.append(MGLevel(grid, op, smoother, R, P))
+        if last:
+            break
+        grid = tuple(d // 2 for d in grid)
+    vc = VCycle(tuple(levels), pre=pre, post=post, coarse_sweeps=coarse_sweeps)
+    return vc.retuned(candidates) if tune else vc

@@ -17,3 +17,13 @@ def run_py(code: str, devices: int = 1, timeout: int = 420):
                        capture_output=True, text=True)
     assert r.returncode == 0, f"subprocess failed:\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr}"
     return r.stdout
+
+
+@pytest.fixture(scope="session")
+def suite_small():
+    """``matrices.suite('small')`` materialised once per session — the
+    generators are deterministic, so every module can share one copy instead
+    of rebuilding (and re-converting) the collection."""
+    from repro.core import matrices as M
+
+    return dict(M.suite("small"))

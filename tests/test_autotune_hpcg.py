@@ -30,6 +30,7 @@ def test_autotuner_structural_guards():
     assert "dia" in skipped2
 
 
+@pytest.mark.slow
 def test_autotuner_prefers_dia_family_for_banded():
     """Fig 3 takeaway: structured/banded matrices leave the CSR default.
     (Timing on CPU; we assert the winner handles the matrix exactly.)"""
@@ -51,6 +52,7 @@ def test_cg_solves_spd_system():
     np.testing.assert_allclose(np.asarray(x), np.ones(n), atol=1e-3)
 
 
+@pytest.mark.slow
 def test_hpcg_end_to_end():
     res = run_hpcg(6, 6, 6, iters=20, reps=1, verbose=False)
     assert res.valid, res.rel_err
@@ -60,6 +62,7 @@ def test_hpcg_end_to_end():
     assert res.speedup > 0.5
 
 
+@pytest.mark.slow
 def test_format_distribution_runs():
     from repro.core import optimal_format_distribution
     dist = optimal_format_distribution(

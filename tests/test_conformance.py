@@ -1,0 +1,104 @@
+"""Conformance grid: every registered format x backend x (spmv, spmm, masked).
+
+Policy (see README): any (format, backend) pair the dispatch table can reach
+must either match the ``to_dense()`` oracle under a *strict* no-fallback
+policy, or appear in ``KNOWN_GAPS`` as an explicit ``xfail(strict=True)``
+cell. Silent skips are banned: registering a new kernel flips its cell from
+xfail to XPASS, which fails the suite until the gap list is updated — so the
+grid always states exactly what runs where.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DispatchKey,
+    ExecutionPolicy,
+    dispatch_table,
+    from_dense,
+    masked_spmv,
+    registered_formats,
+    spmm,
+    spmv,
+)
+from repro.core import matrices as M
+
+FORMATS = sorted(registered_formats())
+BACKENDS = sorted({k.backend for k in dispatch_table("spmv")}
+                  | {k.backend for k in dispatch_table("spmm")})
+OPS = ("spmv", "spmm", "masked_spmv")
+
+# (format, backend) pairs with NO kernel reachable for the op — each is an
+# explicit, strict xfail below. spmm and masked_spmv fall back to the same
+# backend's SpMV (vmapped / post-masked), so their gaps mirror spmv's.
+KNOWN_GAPS = {
+    ("csr", "pallas"): "no Pallas CSR kernel (needs a rowptr-walk kernel; "
+                       "csr runs plain/dense, or convert to sell)",
+    ("dense", "pallas"): "dense containers are the XLA/vendor path; "
+                         "no hand-written Pallas matmul",
+}
+
+_N = 96
+_S = M.banded(_N, 3, seed=0) + M.random_uniform(_N, 0.02, seed=1)
+_X = np.random.default_rng(2).standard_normal(_N).astype(np.float32)
+_XM = np.random.default_rng(3).standard_normal((_N, 5)).astype(np.float32)
+_MASK = np.random.default_rng(4).random(_N) < 0.5
+_CONTAINERS = {}  # fmt -> (container, dense oracle), converted once
+
+
+def _container(fmt):
+    if fmt not in _CONTAINERS:
+        A = from_dense(_S, fmt)
+        _CONTAINERS[fmt] = (A, np.asarray(A.to_dense(), np.float32))
+    return _CONTAINERS[fmt]
+
+
+def _cells():
+    for op in OPS:
+        for fmt in FORMATS:
+            for backend in BACKENDS:
+                marks = ()
+                if (fmt, backend) in KNOWN_GAPS:
+                    marks = (pytest.mark.xfail(
+                        reason=KNOWN_GAPS[(fmt, backend)], strict=True),)
+                yield pytest.param(op, fmt, backend,
+                                   id=f"{op}-{fmt}-{backend}", marks=marks)
+
+
+@pytest.mark.parametrize("op,fmt,backend", list(_cells()))
+def test_conformance_cell(op, fmt, backend):
+    """Strict (no-fallback) dispatch for this cell must match the oracle."""
+    A, dense = _container(fmt)  # oracle: the container's own to_dense() view
+    policy = ExecutionPolicy(backends=(backend,), allow_fallback=False)
+    x = jnp.asarray(_X)
+    tol = dict(rtol=2e-4, atol=2e-4)
+    if op == "spmv":
+        got = np.asarray(spmv(A, x, policy=policy))
+        np.testing.assert_allclose(got, dense @ _X, **tol)
+    elif op == "spmm":
+        got = np.asarray(spmm(A, jnp.asarray(_XM), policy=policy))
+        np.testing.assert_allclose(got, dense @ _XM, **tol)
+    else:
+        got = np.asarray(masked_spmv(A, x, jnp.asarray(_MASK), policy=policy))
+        np.testing.assert_allclose(got, np.where(_MASK, dense @ _X, 0), **tol)
+
+
+def test_grid_covers_every_registered_spmv_entry():
+    """100% coverage: the supported cells of the grid are exactly the
+    registered SpMV dispatch entries — no entry escapes the oracle, no
+    phantom cell claims support."""
+    registered = {(k.format, k.backend) for k in dispatch_table("spmv")}
+    supported = {(f, b) for f in FORMATS for b in BACKENDS
+                 if (f, b) not in KNOWN_GAPS}
+    assert supported == registered, (
+        f"grid/table drift: only-in-grid={supported - registered}, "
+        f"only-in-table={registered - supported} — update KNOWN_GAPS or "
+        f"register the kernel")
+
+
+def test_masked_spmv_entries_are_a_subset():
+    """Native masked kernels may only exist where an unmasked kernel does
+    (the fallback contract of _dispatch_masked_spmv)."""
+    masked = set(dispatch_table("masked_spmv"))
+    unmasked = set(dispatch_table("spmv"))
+    assert masked <= unmasked, masked - unmasked

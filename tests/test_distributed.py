@@ -1,6 +1,7 @@
 """Distribution: sharding rules + divisibility fallback, multi-device
 DistributedSpMV (subprocess with 4 fake devices), gradient compression."""
 import numpy as np
+import pytest
 
 from conftest import run_py
 
@@ -56,6 +57,7 @@ print("OK")
     assert "OK" in run_py(code, devices=512, timeout=600)
 
 
+@pytest.mark.slow
 def test_distributed_spmv_4way():
     code = """
 import jax, numpy as np, jax.numpy as jnp
@@ -104,6 +106,7 @@ print("OK")
     assert "OK" in run_py(code, devices=4)
 
 
+@pytest.mark.slow
 def test_hpcg_distributed_4way():
     code = """
 import jax, numpy as np

@@ -6,13 +6,16 @@ import pytest
 from repro.core import available_impls, convert, from_dense, spmm, spmv
 from repro.core import matrices as M
 
-FORMATS = ["coo", "csr", "dia", "ell", "sell", "bsr", "dense"]
-SUITE = list(M.suite("small"))
+FORMATS = ["coo", "csr", "dia", "ell",
+           # sell roundtrips over the whole suite recompile per shape (~8s);
+           # the conformance grid + property tests keep fast-lane coverage
+           pytest.param("sell", marks=pytest.mark.slow),
+           "bsr", "dense"]
 
 
 @pytest.mark.parametrize("fmt", FORMATS)
-def test_to_dense_roundtrip(fmt):
-    for name, s in SUITE:
+def test_to_dense_roundtrip(fmt, suite_small):
+    for name, s in suite_small.items():
         A = from_dense(s, fmt)
         np.testing.assert_allclose(np.asarray(A.to_dense()),
                                    s.toarray().astype(np.float32),
@@ -20,9 +23,9 @@ def test_to_dense_roundtrip(fmt):
 
 
 @pytest.mark.parametrize("fmt", FORMATS)
-def test_spmv_plain_matches_dense(fmt):
+def test_spmv_plain_matches_dense(fmt, suite_small):
     rng = np.random.default_rng(0)
-    for name, s in SUITE:
+    for name, s in suite_small.items():
         d = s.toarray().astype(np.float32)
         x = jnp.asarray(rng.standard_normal(d.shape[1]).astype(np.float32))
         y = np.asarray(spmv(from_dense(s, fmt), x, "plain"))
@@ -35,7 +38,7 @@ def test_spmv_plain_matches_dense(fmt):
 def test_convert_between_formats():
     s = M.banded(96, 4, seed=1)
     A = from_dense(s, "csr")
-    for fmt in FORMATS:
+    for fmt in ["coo", "csr", "dia", "ell", "sell", "bsr", "dense"]:
         B = convert(A, fmt)
         assert B.format == fmt
         np.testing.assert_allclose(np.asarray(B.to_dense()),
@@ -52,8 +55,8 @@ def test_spmm_matches_dense():
         np.testing.assert_allclose(Y, ref, rtol=1e-3, atol=1e-4, err_msg=fmt)
 
 
-def test_coo_is_row_sorted():
-    for name, s in SUITE:
+def test_coo_is_row_sorted(suite_small):
+    for name, s in suite_small.items():
         A = from_dense(s, "coo")
         rows = np.asarray(A.row)
         assert (np.diff(rows) >= 0).all(), name

@@ -12,6 +12,8 @@ from repro.models import build_model, count_params_struct
 
 ARCHS = list_archs()
 
+pytestmark = pytest.mark.slow  # per-arch sweep: ~70s of the old tier-1 wall time
+
 
 def _batch(cfg, B=2, S=16, seed=0):
     rng = np.random.default_rng(seed)

@@ -78,6 +78,7 @@ def test_shared_experts_added():
     assert float(jnp.abs(y - y0).max()) > 0  # shared path contributes
 
 
+@pytest.mark.slow
 def test_grouped_dispatch_matches_sort():
     """§Perf M1: grouped (per-shard) dispatch is numerically identical to the
     global-sort path at high capacity (the optimisation changes scheduling,

@@ -7,7 +7,7 @@ import scipy.sparse as sp
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import from_dense, spmv
+from repro.core import convert, from_dense, spmv
 
 FORMATS = ["coo", "csr", "dia", "ell", "sell", "bsr"]
 
@@ -76,6 +76,45 @@ def test_coo_sorted_and_padded_consistently(s):
     rows = np.asarray(A.row)
     assert (np.diff(rows) >= 0).all()
     assert int(np.asarray(A.val != 0).sum()) <= s.nnz
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrices(max_n=40), st.integers(1, 4), st.integers(0, 4))
+def test_sell_sigma_permutation_roundtrip(s, c_pow, sigma_pow):
+    """SELL-C-sigma's row permutation is invertible and actually sorts:
+    the real rows of ``perm`` are a bijection on range(nrows), gathering
+    through perm then through its inverse is the identity, and within every
+    sigma window row lengths are non-increasing."""
+    C, sigma = 2 ** c_pow, 2 ** sigma_pow * 8
+    A = from_dense(s, "sell", C=C, sigma=sigma)
+    n = s.shape[0]
+    perm = np.asarray(A.perm)
+    real = perm[perm < n]
+    assert sorted(real.tolist()) == list(range(n))  # bijection on real rows
+    inv = np.argsort(real)
+    x = np.random.default_rng(0).standard_normal(n)
+    np.testing.assert_array_equal(x[real][inv], x)  # round-trip is identity
+    counts = np.diff(s.tocsr().indptr)
+    for w0 in range(0, n, sigma):
+        win = perm[w0:w0 + sigma]
+        win = win[win < n]
+        assert (np.diff(counts[win]) <= 0).all()  # descending nnz per window
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrices(max_n=40))
+def test_csr_ell_sell_conversion_idempotent(s):
+    """CSR -> ELL -> SELL -> CSR preserves the matrix exactly, and
+    converting to a container's own format is the identity object."""
+    A = from_dense(s, "csr")
+    assert convert(A, "csr") is A
+    chain = convert(convert(convert(A, "ell"), "sell"), "csr")
+    np.testing.assert_allclose(np.asarray(chain.to_dense()),
+                               np.asarray(A.to_dense()), rtol=1e-6, atol=1e-6)
+    # and a second lap through the same chain is a fixed point
+    again = convert(convert(convert(chain, "ell"), "sell"), "csr")
+    np.testing.assert_array_equal(np.asarray(again.to_dense()),
+                                  np.asarray(chain.to_dense()))
 
 
 @settings(max_examples=10, deadline=None)

@@ -12,6 +12,7 @@ from repro.resilience.monitor import (HeartbeatMonitor, RestartPolicy,
 from repro.train.trainer import Trainer, TrainerConfig
 
 
+@pytest.mark.slow
 def test_failure_restart_is_bitexact(tmp_path):
     cfg = get_smoke_config("llama3.2-1b")
     t1 = Trainer(cfg, TrainerConfig(n_steps=12, global_batch=2, seq_len=32,
@@ -29,6 +30,7 @@ def test_failure_restart_is_bitexact(tmp_path):
     assert abs(l1[8] - [h["loss"] for h in h2 if h["step"] == 8][-1]) < 1e-6
 
 
+@pytest.mark.slow
 def test_resume_from_checkpoint(tmp_path):
     cfg = get_smoke_config("llama3.2-1b")
     tc = dict(global_batch=2, seq_len=32, ckpt_dir=str(tmp_path),
@@ -42,6 +44,7 @@ def test_resume_from_checkpoint(tmp_path):
     assert min(steps) == 10 and max(steps) == 19   # no recompute of 0-9
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     cfg = get_smoke_config("llama3.2-1b")
     t = Trainer(cfg, TrainerConfig(n_steps=30, global_batch=4, seq_len=64,
@@ -52,6 +55,7 @@ def test_loss_decreases():
     assert last < first - 0.05, (first, last)
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence():
     """grad accumulation over 4 microbatches == single full batch update."""
     from repro.models import build_model

@@ -1,11 +1,24 @@
-"""Fig. 8a analogue: Morpheus-enabled HPCG vs reference over problem sizes.
-(8b/8c distributed scaling runs under tests/test_distributed.py with 4 fake
-devices; here we keep the serial sweep that produced the paper's 5x DIA
-result.) Each grid now runs the *full* HPCG pipeline — preconditioned CG
-with a SymGS-smoothed multigrid V-cycle, every level's SpMV retargeted by
-the per-level auto-tuner — and reports one speedup row per grid plus the
-per-level format choices and convergence stats."""
-from repro.apps.hpcg import run_hpcg
+"""Fig. 8 analogue: Morpheus-enabled HPCG vs reference.
+
+``run`` is the serial sweep (Fig. 8a) that produced the paper's 5x DIA
+result: each grid runs the *full* HPCG pipeline — preconditioned CG with a
+SymGS-smoothed multigrid V-cycle, every level's SpMV retargeted by the
+per-level auto-tuner — and reports one speedup row per grid plus the
+per-level format choices and convergence stats.
+
+``run_distributed`` is the multi-device slice (Fig. 8b/8c): the same
+pipeline on a 1-D mesh over every visible device, rows sharded with
+halo-exchange SpMV and per-rank formats from the per-partition tuner.
+Launch with fake host devices for a single-machine scaling check:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -c \
+        "from benchmarks.fig8_hpcg import run_distributed; print(run_distributed())"
+
+(The 4-device conformance/acceptance runs live in
+``tests/test_distributed_spmv.py``.)
+"""
+from repro.apps.hpcg import run_hpcg, run_hpcg_distributed
 
 
 def run(scale="quick"):
@@ -21,4 +34,25 @@ def run(scale="quick"):
                                  f"rel_res={res.rel_res:.1e} "
                                  f"valid={res.valid} bitwise={res.bitwise} "
                                  f"levels=[{res.mg_levels}]")})
+    return rows
+
+
+def run_distributed(scale="quick"):
+    """One row per grid of the distributed pipeline over all devices.
+
+    On a single device this degenerates to a 1-part mesh (still exercising
+    the shard_map path); with N fake or real devices it is the Fig. 8b/8c
+    scaling configuration.
+    """
+    grids = [(8, 8, 8)] if scale == "quick" else [(8, 8, 8), (16, 16, 16)]
+    rows = []
+    for g in grids:
+        res = run_hpcg_distributed(None, *g, iters=30, reps=2, verbose=False)
+        rows.append({"name": f"fig8/hpcg_dist_{g[0]}x{g[1]}x{g[2]}",
+                     "us_per_call": res.opt_time_s * 1e6,
+                     "derived": (f"speedup={res.speedup:.2f} "
+                                 f"pcg_iters={res.pcg_iters} "
+                                 f"rel_res={res.rel_res:.1e} "
+                                 f"valid={res.valid} bitwise={res.bitwise} "
+                                 f"ranks=[{res.chosen}]")})
     return rows

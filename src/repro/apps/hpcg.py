@@ -14,7 +14,11 @@ drift), and the tuned run must agree within tolerance and converge to
 SpMV/SymGS op counts are identical across implementations.
 
 ``precond=False`` recovers the paper's SpMV-focused slice (plain CG, no
-multigrid), which is what the distributed path still runs.
+multigrid). ``run_hpcg_distributed`` runs the same five phases on an
+N-device mesh: every operator (including each multigrid level and the
+SymGS color sweeps) is a ``DistributedOperator`` with halo-exchange SpMV,
+and validation additionally demands the distributed csr/plain SpMV be
+bit-for-bit identical to the single-device kernel. See ``docs/hpcg.md``.
 """
 from __future__ import annotations
 
@@ -27,7 +31,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DispatchKey, as_operator, autotune_spmv
-from repro.core.distributed import DistributedSpMV, autotune_distributed
 from repro.core import matrices as M
 from repro.solvers import build_mg, cg, cg_solve, pcg_solve  # noqa: F401  (cg_solve re-exported)
 
@@ -143,39 +146,139 @@ def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3, candidates=None,
     return res
 
 
-def run_hpcg_distributed(mesh, nx=16, ny=16, nz=32, iters=50, reps=3,
-                         impl="plain", verbose=True) -> HPCGResult:
-    """Distributed HPCG (Figure 8b/8c analogue): rows sharded over a mesh
-    axis, local/remote split with per-part formats from the run-first tuner
-    (Table III), halo exchange via ppermute. Runs the SpMV-focused slice
-    (plain CG, preconditioner disabled) — distributed SymGS is future work."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+def default_mesh(axis: str = "data"):
+    """A 1-D mesh over every visible device (CI: fake host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    from jax.sharding import Mesh
 
+    devs = np.array(jax.devices())
+    return Mesh(devs.reshape(devs.size), (axis,))
+
+
+def run_hpcg_distributed(mesh=None, nx=16, ny=16, nz=16, iters=50, reps=3,
+                         candidates=None, verbose=True, precond=True,
+                         tol=1e-6, depth=4, timed=True, axis="data",
+                         tune_levels=False) -> HPCGResult:
+    """Distributed HPCG (Figure 8b/8c analogue) — the full pipeline on an
+    N-device mesh.
+
+    Rows (matrix, vectors, multigrid levels) are sharded over ``mesh[axis]``;
+    every SpMV is a ``DistributedOperator`` running local-part SpMV
+    overlapped with the halo exchange + remote-part SpMV, and CG's dot
+    products all-reduce across shards (see ``solvers/cg.py``).
+
+    Phases:
+      1. *setup* — stencil + right-hand side + the multigrid hierarchy,
+         clamped to :func:`repro.solvers.distributable_depth`.
+      2. *reference* — the single-device csr/plain PCG solve (the oracle the
+         distributed runs are judged against).
+      3. *tune* — :func:`repro.distributed_op.tune_partitions` picks each
+         rank's (local, remote) formats (Table III); ``tune_levels=True``
+         additionally retunes every multigrid level per-partition.
+      4. *validate* — two tiers, mirroring the serial pipeline: (a)
+         **bit-for-bit**: the distributed csr/plain SpMV in ``rowblock``
+         mode must equal the single-device csr/plain SpMV exactly — the
+         sharding machinery adds zero numerical drift; (b) *tolerance*: the
+         tuned distributed PCG must converge to ``tol`` and agree with the
+         single-device solution.
+      5. *timed* — fixed-iteration distributed PCG, reference split
+         (csr/csr) vs tuned formats, identical op mix.
+
+    Args:
+        mesh: 1-D mesh (default: every visible device on one ``axis``).
+        nx, ny, nz: stencil grid; ``nx*ny*nz`` must be divisible by the
+            mesh size.
+        iters: fixed iteration count for the timed phase / maxiter for the
+            convergence runs.
+        reps: timing repetitions.
+        candidates: per-partition tuning candidates (DispatchKeys).
+        precond: multigrid-preconditioned (the benchmark) vs plain CG.
+        tol: convergence target (HPCG: 1e-6).
+        depth: max multigrid levels (clamped to what shards evenly).
+        timed: ``False`` runs phases 1-4 only (the test entry point).
+        tune_levels: per-partition tune of every MG level (slower setup).
+
+    Returns:
+        :class:`HPCGResult`; ``bitwise`` is tier (a), ``valid`` ands both
+        tiers with convergence, ``chosen``/``mg_levels`` describe the
+        per-rank and per-level choices.
+    """
+    from repro.distributed_op import DistributedOperator, tune_partitions
+    from repro.solvers import distributable_depth, distribute_vcycle
+
+    if mesh is None:
+        mesh = default_mesh(axis)
+    nparts = int(mesh.shape[axis])
+
+    # Phase 1: problem setup
     A_sp = M.fdm27(nx, ny, nz)
     n = A_sp.shape[0]
-    nparts = mesh.shape["data"]
-    assert n % nparts == 0
-    sh = NamedSharding(mesh, P("data"))
-    b = jax.device_put(np.asarray(A_sp @ np.ones(n), np.float32), sh)
+    if n % nparts:
+        raise ValueError(f"grid {nx}x{ny}x{nz} ({n} rows) is not divisible "
+                         f"by the {nparts}-device mesh")
+    b_host = np.asarray(A_sp @ np.ones(n), np.float32)
+    depth = distributable_depth(nx, ny, nz, nparts, depth=depth) if precond else 0
 
-    # reference: CSR/CSR split, allgather halo (the 'Plain' distributed path)
-    ref_op = DistributedSpMV.build(A_sp, mesh, "data", "csr", "csr", impl, mode="allgather")
-    ref_solve = jax.jit(lambda b: cg_solve(ref_op, b, iters))
-    x_ref, _ = ref_solve(b)
-    t_ref = _time(ref_solve, b, reps=reps)
+    # Phase 2: single-device reference (csr/plain, the oracle)
+    A_ref = as_operator(A_sp, "csr").using("plain")
+    mg_ref = build_mg(nx, ny, nz, depth=depth, fmt="csr") if precond else None
+    b1 = jnp.asarray(b_host)
+    ref = jax.jit(lambda b: cg(lambda p: A_ref @ p, b, tol=tol,
+                               maxiter=iters, precond=mg_ref))(b1)
+    x_ref = np.asarray(ref.x)
 
-    # optimised: run-first tuner over (local, remote) format pairs
-    op, table = autotune_distributed(A_sp, mesh, "data", impl=impl)
-    opt_solve = jax.jit(lambda b: cg_solve(op, b, iters))
-    x_opt, _ = opt_solve(b)
-    rel = float(jnp.linalg.norm(x_opt - x_ref) / jnp.maximum(jnp.linalg.norm(x_ref), 1e-30))
-    t_opt = _time(opt_solve, b, reps=reps)
+    # Phase 3: distributed operators — reference split + per-partition tune
+    D_ref = DistributedOperator.build(A_sp, mesh, axis, local="csr",
+                                      remote="csr", mode="auto")
+    D_opt, table = tune_partitions(A_sp, mesh, axis, candidates=candidates)
+    mg_dist = distribute_vcycle(mg_ref, mesh, axis, tune=tune_levels,
+                                candidates=candidates) if precond else None
+    b_d = D_ref.device_put(b_host)
 
-    res = HPCGResult((nx, ny, nz), n, iters, t_ref, t_opt, t_ref / t_opt,
-                     f"{op.local_fmt}(local)/{op.remote_fmt}(remote)",
-                     rel < 1e-3, rel, {str(k): v for k, v in table.items()})
+    # Phase 4a: bit-for-bit — distributed csr/plain in rowblock (exact) mode
+    # must reproduce the single-device csr/plain SpMV bit by bit.
+    D_chk = DistributedOperator.build(A_sp, mesh, axis, local="csr",
+                                      mode="rowblock")
+    y_single = np.asarray(A_ref @ b1)
+    y_dist = np.asarray(D_chk @ b_d)
+    bitwise = bool(np.array_equal(y_single, y_dist))
+
+    # Phase 4b: tolerance — tuned distributed PCG converges and matches
+    opt_conv = jax.jit(lambda b: cg(lambda p: D_opt @ p, b, tol=tol,
+                                    maxiter=iters, precond=mg_dist))
+    opt = opt_conv(b_d)
+    rel = float(np.linalg.norm(np.asarray(opt.x) - x_ref)
+                / max(float(np.linalg.norm(x_ref)), 1e-30))
+    valid = bitwise and rel < 1e-3 and float(opt.rel_res) <= tol
+
+    # Phase 5: timed fixed-iteration runs (identical op mix)
+    if timed:
+        ref_timed = jax.jit(lambda b: pcg_solve(lambda p: D_ref @ p, b,
+                                                iters, precond=mg_dist))
+        opt_timed = jax.jit(lambda b: pcg_solve(lambda p: D_opt @ p, b,
+                                                iters, precond=mg_dist))
+        t_ref = _time(ref_timed, b_d, reps=reps)
+        t_opt = _time(opt_timed, b_d, reps=reps)
+        speedup = t_ref / t_opt
+    else:
+        t_ref = t_opt = speedup = 0.0
+
+    flat_table = {f"p{p}/{part}": {f"{f}/{i}": t for (f, i), t in tbl.items()}
+                  for (p, part), tbl in table.items()}
+    res = HPCGResult(
+        (nx, ny, nz), n, iters, t_ref, t_opt, speedup,
+        D_opt.describe(), valid, rel, flat_table,
+        precond=precond, pcg_iters=int(opt.iters), rel_res=float(opt.rel_res),
+        bitwise=bitwise,
+        mg_levels=mg_dist.describe() if mg_dist else "")
     if verbose:
-        print(f"HPCG-dist {nx}x{ny}x{nz} parts={nparts}: ref={t_ref*1e3:.1f}ms "
-              f"opt({res.chosen})={t_opt*1e3:.1f}ms speedup={res.speedup:.2f}x "
-              f"valid={res.valid}")
+        kind = "pcg" if precond else "cg"
+        print(f"HPCG-dist {nx}x{ny}x{nz} n={n} parts={nparts}: "
+              f"ref={t_ref*1e3:.1f}ms opt={t_opt*1e3:.1f}ms "
+              f"speedup={speedup:.2f}x {kind}_iters={res.pcg_iters} "
+              f"rel_res={res.rel_res:.2e} valid={valid} bitwise={bitwise} "
+              f"rel={rel:.2e}")
+        print(f"  per-rank: {res.chosen}")
+        if res.mg_levels:
+            print(f"  levels: {res.mg_levels}")
     return res

@@ -9,7 +9,10 @@ Public API:
                args survive as deprecated back-compat shims)
     autotune:  run-first (format, backend) auto-tuner -> SparseOperator
     registry:  LRU handle/workspace cache (ArmPL-style create/optimize/exec)
-    distributed: local/remote-split SpMV over a mesh axis
+    distributed: row partition + local/remote halo-split helpers and the
+               legacy DistributedSpMV; the full multi-device operator
+               (per-rank formats, rowblock exact mode, masked matvec)
+               lives in ``repro.distributed_op``
 """
 from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense, format_class, registered_formats
 from .convert import convert, from_dense, to_bsr, to_coo, to_csr, to_dia, to_ell, to_sell
@@ -36,7 +39,7 @@ from .spmv import (
     spmm,
     spmv,
 )
-from .autotune import TuneResult, autotune_spmv, optimal_format_distribution
+from .autotune import TuneResult, autotune_spmv, optimal_format_distribution, structural_skip
 from .registry import SpmvWorkspace, spmv_cached, workspace
 from .distributed import DistributedSpMV, autotune_distributed, split_local_remote
 
@@ -49,7 +52,7 @@ __all__ = [
     "BackendUnsupportedError", "DispatchKey", "available_impls", "dispatch_table",
     "masked_spmv", "register_masked_spmv",
     "register_spmm", "register_spmv", "select_spmv", "spmm", "spmv",
-    "TuneResult", "autotune_spmv", "optimal_format_distribution",
+    "TuneResult", "autotune_spmv", "optimal_format_distribution", "structural_skip",
     "SpmvWorkspace", "spmv_cached", "workspace",
     "DistributedSpMV", "autotune_distributed", "split_local_remote",
 ]

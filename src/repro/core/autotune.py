@@ -75,6 +75,48 @@ def _normalize_candidates(candidates) -> Tuple[Tuple[str, str], ...]:
     return tuple((fmt, impl) for fmt, impl in candidates)
 
 
+def structural_skip(s, fmt: str, dia_max_diags: int = 512,
+                    ell_max_width_factor: float = 4.0) -> Optional[str]:
+    """Why ``fmt`` should not even be *built* for matrix ``s`` — or ``None``.
+
+    The practical limits Morpheus applies before racing a candidate
+    (paper §V calls out DIA's memory blow-up on the FPGA): DIA is skipped
+    when the matrix has too many distinct diagonals, ELL when the max row
+    width far exceeds the mean (power-law rows pad catastrophically).
+    Shared by the single-matrix tuner below and the per-partition
+    distributed tuner, so every tuning path applies identical guards.
+
+    Args:
+        s: scipy sparse matrix (any layout; converted to CSR).
+        fmt: candidate format name.
+        dia_max_diags: max distinct diagonals before DIA is skipped.
+        ell_max_width_factor: max ``max_row_nnz / mean_row_nnz`` before ELL
+            is skipped.
+
+    Returns:
+        A human-readable skip reason, or ``None`` when the format is fine.
+
+    Example:
+        >>> import scipy.sparse as sp
+        >>> structural_skip(sp.eye(64, format="csr"), "dia") is None
+        True
+    """
+    import scipy.sparse as sp
+
+    s = s.tocsr()
+    if fmt == "dia":
+        coo = s.tocoo()
+        ndiags = len(np.unique(coo.col.astype(np.int64) - coo.row.astype(np.int64)))
+        if ndiags > dia_max_diags:
+            return f"ndiags={ndiags}>{dia_max_diags}"
+    if fmt == "ell":
+        counts = np.diff(s.indptr)
+        mean_w = max(1.0, counts.mean() if len(counts) else 1.0)
+        if len(counts) and counts.max() > ell_max_width_factor * mean_w + 8:
+            return f"max_row={counts.max()} >> mean={mean_w:.1f}"
+    return None
+
+
 def _container_to_scipy(c):
     """Registered container -> scipy CSR without densifying where the format
     allows (COO/CSR carry their triplets directly; pad sentinels dropped).
@@ -126,21 +168,18 @@ def autotune_spmv(
     x = np.random.default_rng(0).standard_normal(n).astype(np.float32)
     x = jax.device_put(x)
 
-    counts = np.diff(s.indptr)
-    mean_w = max(1.0, counts.mean() if len(counts) else 1.0)
-    coo = s.tocoo()
-    ndiags = len(np.unique(coo.col.astype(np.int64) - coo.row.astype(np.int64)))
-
     table: Dict[Tuple[str, str], float] = {}
     skipped: List[Tuple[str, str, str]] = []
     mats = {}
+    skip_cache: Dict[str, Optional[str]] = {}  # structure stats once per fmt
     cand = _normalize_candidates(candidates if candidates is not None else DEFAULT_CANDIDATES)
     for fmt, impl in cand:
-        if fmt == "dia" and ndiags > dia_max_diags:
-            skipped.append((fmt, impl, f"ndiags={ndiags}>{dia_max_diags}"))
-            continue
-        if fmt == "ell" and len(counts) and counts.max() > ell_max_width_factor * mean_w + 8:
-            skipped.append((fmt, impl, f"max_row={counts.max()} >> mean={mean_w:.1f}"))
+        if fmt not in skip_cache:
+            skip_cache[fmt] = structural_skip(s, fmt, dia_max_diags,
+                                              ell_max_width_factor)
+        why = skip_cache[fmt]
+        if why is not None:
+            skipped.append((fmt, impl, why))
             continue
         if impl not in available_impls(fmt):
             skipped.append((fmt, impl, "impl not registered"))

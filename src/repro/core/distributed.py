@@ -35,57 +35,132 @@ from .spmv import spmv
 
 # ------------------------------------------------------------ splitting ----
 
-def partition_rows(n: int, nparts: int) -> List[Tuple[int, int]]:
-    assert n % nparts == 0, f"rows {n} must divide parts {nparts} (pad upstream)"
-    m = n // nparts
-    return [(p * m, (p + 1) * m) for p in range(nparts)]
+def partition_rows(n: int, nparts: int, even: bool = True) -> List[Tuple[int, int]]:
+    """Contiguous row ranges ``[(r0, r1), ...]`` assigning ``n`` rows to
+    ``nparts`` parts.
+
+    Args:
+        n: total number of rows (>= 0).
+        nparts: number of partitions (> 0).
+        even: with the default ``True``, every part must get exactly
+            ``n // nparts`` rows — the stacked-container layout shard_map
+            consumes requires equal shards — and a non-dividing ``n`` raises
+            ``ValueError`` (pad upstream, or pass ``even=False``). With
+            ``even=False`` the split is HPCG-style balanced: the first
+            ``n % nparts`` parts get one extra row, and parts beyond ``n``
+            rows come back empty (``r0 == r1``), so ``nparts > n`` is legal.
+
+    Returns:
+        A list of ``nparts`` half-open ``(r0, r1)`` ranges covering ``[0, n)``
+        in order.
+
+    Example:
+        >>> partition_rows(8, 4)
+        [(0, 2), (2, 4), (4, 6), (6, 8)]
+        >>> partition_rows(7, 3, even=False)
+        [(0, 3), (3, 5), (5, 7)]
+    """
+    if nparts <= 0:
+        raise ValueError(f"nparts must be positive, got {nparts}")
+    if n < 0:
+        raise ValueError(f"row count must be non-negative, got {n}")
+    if even:
+        if n % nparts != 0:
+            raise ValueError(
+                f"rows {n} must be divisible by {nparts} parts for an even "
+                f"partition (pad upstream, or pass even=False for a "
+                f"balanced one)")
+        m = n // nparts
+        return [(p * m, (p + 1) * m) for p in range(nparts)]
+    base, extra = divmod(n, nparts)
+    bounds = [0]
+    for p in range(nparts):
+        bounds.append(bounds[-1] + base + (1 if p < extra else 0))
+    return [(bounds[p], bounds[p + 1]) for p in range(nparts)]
 
 
 def split_local_remote(s: sp.spmatrix, nparts: int, halo="auto"):
-    """Split into per-part local (m x m, own columns) and remote matrices.
+    """Split ``s`` into per-part **local** (own columns) and **remote**
+    matrices — the physical split of the paper's distributed HPCG (§VII-D).
 
-    Returns (locals, remotes, halo) where remotes are (m x (m+2*halo))
-    matrices in *window* coordinates (own range extended by ``halo`` both
-    sides, own columns zeroed) when a finite halo covers all remote entries,
-    else (m x n) global-coordinate matrices and halo=None. Pass halo=None to
-    force global-coordinate remotes (the allgather path).
+    Rows are partitioned evenly into ``nparts`` blocks of ``mr`` rows;
+    columns into blocks of ``mc`` (for the square matrices of SpMV
+    ``mr == mc``; rectangular matrices such as multigrid restriction /
+    prolongation maps are partitioned along both axes independently, so
+    both dims must be divisible by ``nparts``). Part ``p``'s local matrix
+    is its
+    ``(mr, mc)`` own-column block; everything else lands in its remote
+    matrix.
+
+    Args:
+        s: scipy sparse matrix, ``(nr, nc)`` with ``nr % nparts == 0`` and
+            ``nc % nparts == 0``.
+        nparts: number of row partitions.
+        halo: ``"auto"`` measures the maximum column reach of any remote
+            entry and uses window coordinates when a finite halo covers it;
+            ``None`` forces global-coordinate remotes (the allgather path);
+            an ``int`` forces that window half-width.
+
+    Returns:
+        ``(locals, remotes, halo)``. ``locals[p]`` is ``(mr, mc)``. When the
+        returned ``halo`` is an int, ``remotes[p]`` is ``(mr, mc + 2*halo)``
+        in *window* coordinates — part ``p``'s own column range extended by
+        ``halo`` on both sides, own columns zeroed — ready for a
+        nearest-neighbour ``ppermute`` exchange. When it is ``None``,
+        ``remotes[p]`` is ``(mr, nc)`` in global coordinates for use with
+        ``all_gather``.
     """
     s = s.tocsr()
-    n = s.shape[0]
-    parts = partition_rows(n, nparts)
-    m = n // nparts
+    nr, nc = s.shape
+    parts = partition_rows(nr, nparts)
+    cparts = partition_rows(nc, nparts)
+    mc = nc // nparts
 
     coo = s.tocoo()
     max_reach = 0
-    for r0, r1 in parts:
+    for (r0, r1), (c0, c1) in zip(parts, cparts):
         sel = (coo.row >= r0) & (coo.row < r1)
         if not sel.any():
             continue
-        reach = np.abs(coo.col[sel] - np.clip(coo.col[sel], r0, r1 - 1)).max()
+        reach = np.abs(coo.col[sel] - np.clip(coo.col[sel], c0, c1 - 1)).max()
         max_reach = max(max_reach, int(reach))
     if halo == "auto":
-        halo = max_reach if max_reach <= m else None
+        halo = max_reach if max_reach <= mc else None
 
     locals_, remotes = [], []
-    for r0, r1 in parts:
+    for (r0, r1), (c0, c1) in zip(parts, cparts):
+        mr = r1 - r0
         blk = s[r0:r1]
-        local = blk[:, r0:r1].tocsr()
+        local = blk[:, c0:c1].tocsr()
         rem = blk.tolil(copy=True)
-        rem[:, r0:r1] = 0
+        rem[:, c0:c1] = 0
         rem = rem.tocsr()
         rem.eliminate_zeros()
         if halo is not None:
-            w0 = r0 - halo
-            win = sp.lil_matrix((m, m + 2 * halo), dtype=s.dtype)
+            w0 = c0 - halo
+            win = sp.lil_matrix((mr, mc + 2 * halo), dtype=s.dtype)
             rc = rem.tocoo()
             cols = rc.col - w0
-            keep = (cols >= 0) & (cols < m + 2 * halo)
+            keep = (cols >= 0) & (cols < mc + 2 * halo)
             assert keep.all(), "halo window does not cover remote entries"
             win[rc.row, cols] = rc.data
             rem = win.tocsr()
         remotes.append(rem)
         locals_.append(local)
     return locals_, remotes, halo
+
+
+def split_rowblocks(s: sp.spmatrix, nparts: int) -> List[sp.csr_matrix]:
+    """Per-part full row blocks ``s[r0:r1, :]`` — **no** column split.
+
+    The exact-arithmetic layout: every row keeps all its entries in the
+    global CSR order, so a per-part plain-CSR SpMV against the allgathered
+    ``x`` accumulates each row in exactly the same order as the
+    single-device kernel — the bit-for-bit validation mode of the
+    distributed pipeline (``DistributedOperator`` ``mode="rowblock"``).
+    """
+    s = s.tocsr()
+    return [s[r0:r1] for r0, r1 in partition_rows(s.shape[0], nparts)]
 
 
 # ------------------------------------------------------- container stack ----

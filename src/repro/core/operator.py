@@ -137,6 +137,17 @@ class SparseOperator:
     (COO/CSR/DIA/...), ``policy`` (pytree aux data) decides which kernel runs.
     ``_cache`` memoises format conversions and is shared across the operators
     an ``asformat`` chain produces; it is dropped at jit boundaries.
+
+    Example:
+        >>> import numpy as np, scipy.sparse as sp
+        >>> A = as_operator(sp.eye(4, format="csr") * 2.0)
+        >>> A.format, A.shape, A.nnz
+        ('csr', (4, 4), 4)
+        >>> y = A @ np.ones(4, np.float32)          # SpMV
+        >>> [float(v) for v in y]
+        [2.0, 2.0, 2.0, 2.0]
+        >>> A.asformat("dia").format                # runtime format switch
+        'dia'
     """
 
     container: Any
@@ -194,7 +205,28 @@ class SparseOperator:
     # -- format switching (Morpheus convert / DynamicMatrix) ----------------
 
     def asformat(self, fmt: str, **kw) -> "SparseOperator":
-        """Cached conversion: repeated switches to the same format are free."""
+        """Switch storage format at runtime (Morpheus ``DynamicMatrix``).
+
+        Args:
+            fmt: a registered format name (``registered_formats()``).
+            **kw: format-specific build options (e.g. ``C=8`` for SELL,
+                ``width=`` for ELL).
+
+        Returns:
+            An operator over the converted container, sharing this
+            operator's policy and conversion cache — repeated switches to
+            the same format are free.
+
+        Raises:
+            ValueError: for an unregistered format name.
+
+        Example:
+            >>> import scipy.sparse as sp
+            >>> A = as_operator(sp.eye(8, format="csr"))
+            >>> B = A.asformat("ell")
+            >>> B.format, B.shape == A.shape
+            ('ell', True)
+        """
         if fmt == self.format and not kw:
             return self
         if fmt not in registered_formats():
@@ -223,14 +255,34 @@ class SparseOperator:
         return _dispatch_spmm(self.container, other, self._effective_policy())
 
     def matvec(self, x) -> jnp.ndarray:
+        """``A @ x`` for a 1-D ``x`` — alias of the ``@`` operator."""
         return self @ x
 
     def matmat(self, X) -> jnp.ndarray:
+        """``A @ X`` for a 2-D ``X`` (SpMM) — alias of the ``@`` operator."""
         return self @ X
 
     def masked_matvec(self, x, row_mask) -> jnp.ndarray:
-        """``where(row_mask, A @ x, 0)`` — one color of a multicolor sweep,
-        dispatched through the same (format, backend) table as ``A @ x``."""
+        """Row-masked SpMV: ``where(row_mask, A @ x, 0)``.
+
+        One color of a multicolor Gauss-Seidel sweep, dispatched through
+        the same (format, backend) table as ``A @ x`` (native masked
+        kernels predicate before the reduce; others mask after).
+
+        Args:
+            x: ``(ncols,)`` dense vector.
+            row_mask: ``(nrows,)`` bool array selecting output rows.
+
+        Returns:
+            ``(nrows,)`` result, exactly zero outside the mask.
+
+        Example:
+            >>> import numpy as np, scipy.sparse as sp
+            >>> A = as_operator(sp.eye(3, format="csr") * 2.0)
+            >>> m = np.array([True, False, True])
+            >>> [float(v) for v in A.masked_matvec(np.ones(3, np.float32), m)]
+            [2.0, 0.0, 2.0]
+        """
         from .spmv import _dispatch_masked_spmv
 
         return _dispatch_masked_spmv(self.container, jnp.asarray(x),
@@ -239,11 +291,22 @@ class SparseOperator:
     # -- auto-tuning --------------------------------------------------------
 
     def tune(self, candidates=None, **kw) -> "SparseOperator":
-        """Run-first auto-tune (paper §VII-D) and return the retargeted
-        operator: winning format, policy preferring the winning backend.
-        The operator's own limits (VMEM budget, fallback rules) are kept —
-        only the backend chain is retargeted, and candidates are measured
-        under those same limits."""
+        """Run-first auto-tune (paper §VII-D): race candidate formats and
+        backends, return the retargeted operator.
+
+        Args:
+            candidates: ``DispatchKey``s (or ``(fmt, backend)`` pairs) to
+                race; defaults to ``autotune.DEFAULT_CANDIDATES``.
+            **kw: forwarded to ``autotune_spmv`` (``iters``, ``warmup``,
+                structural-guard limits, ...).
+
+        Returns:
+            A ``SparseOperator`` over the winning container with a policy
+            preferring the winning backend. The operator's own limits
+            (VMEM budget, fallback rules) are kept — only the backend
+            chain is retargeted, and candidates are measured under those
+            same limits.
+        """
         from .autotune import autotune_spmv
 
         return autotune_spmv(self, candidates=candidates,
@@ -261,9 +324,21 @@ def as_operator(a, fmt: Optional[str] = None, policy: Optional[ExecutionPolicy] 
                 **kw) -> SparseOperator:
     """Wrap anything matrix-like into a SparseOperator.
 
-    Accepts a SparseOperator (retargeted to ``fmt``/``policy`` if given), a
-    registered container, a scipy sparse matrix, or a dense array (converted
-    to ``fmt``, default csr).
+    Args:
+        a: a ``SparseOperator`` (retargeted to ``fmt``/``policy`` if given),
+            a registered container, a scipy sparse matrix, or a dense array.
+        fmt: target format for scipy/dense inputs (default ``"csr"``), or a
+            conversion request for operator/container inputs.
+        policy: optional ``ExecutionPolicy`` to attach.
+        **kw: forwarded to the format conversion.
+
+    Returns:
+        A ``SparseOperator`` ready for ``@`` / ``.tune()`` / ``.asformat``.
+
+    Example:
+        >>> import numpy as np
+        >>> as_operator(np.eye(4), "dia").format
+        'dia'
     """
     import scipy.sparse as sp
 

@@ -59,6 +59,33 @@ _SPMV_MASKED: Dict[DispatchKey, KernelEntry] = {}
 
 
 def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
+    """Decorator registering an SpMV kernel under ``DispatchKey(fmt, backend)``.
+
+    Args:
+        fmt: container format name (``"coo"``, ``"csr"``, ...) — must match
+            the container class's ``format`` tag.
+        backend: backend name the policy chain selects (``"plain"``,
+            ``"pallas"``, ``"dense"``, ...).
+        supports: optional ``(A, policy) -> bool`` capability predicate (the
+            declarative device-fit guard); ``None`` means always supported.
+
+    Returns:
+        The decorator; the wrapped ``fn(A, x) -> y`` is returned unchanged.
+
+    Registering a kernel makes it reachable by every dispatch path (operator
+    ``@``, the auto-tuner, the distributed format groups) **and** adds a
+    cell to the conformance grid — see the gap policy in
+    ``docs/architecture.md``: a previously-xfailed (fmt, backend) cell will
+    XPASS and fail the suite until ``KNOWN_GAPS`` is updated.
+
+    Example:
+        >>> @register_spmv("coo", "demo-backend")
+        ... def coo_spmv_demo(A, x):
+        ...     return coo_spmv_plain(A, x)
+        >>> "demo-backend" in available_impls("coo")
+        True
+        >>> _ = _SPMV.pop(DispatchKey("coo", "demo-backend"))  # tidy up
+    """
     def deco(fn):
         key = DispatchKey(fmt, backend)
         _SPMV[key] = KernelEntry(key, fn, supports)
@@ -67,6 +94,13 @@ def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
 
 
 def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None):
+    """Decorator registering a *native* SpMM kernel ``fn(A, X) -> Y``.
+
+    Same key space and ``supports`` semantics as :func:`register_spmv`.
+    Formats without a native SpMM fall back to the same backend's SpMV
+    vmapped over columns, so registration is only worthwhile when a fused
+    kernel beats that (e.g. BSR's MXU block matmul).
+    """
     def deco(fn):
         key = DispatchKey(fmt, backend)
         _SPMM[key] = KernelEntry(key, fn, supports)
@@ -75,10 +109,18 @@ def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None):
 
 
 def register_masked_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
-    """Row-masked SpMV kernel: ``fn(A, x, row_mask) -> y`` with ``y == 0``
-    outside the mask. Formats without one fall back to masking the plain
-    product of the *same* backend, so masked callers (multicolor SymGS)
-    retarget across formats/backends exactly like unmasked SpMV."""
+    """Decorator registering a row-masked SpMV kernel.
+
+    Args:
+        fmt / backend / supports: as :func:`register_spmv`.
+
+    The wrapped ``fn(A, x, row_mask) -> y`` must return ``y == 0`` outside
+    the mask, ideally predicating entries *before* the reduction (that is
+    the point of a native masked kernel — one multicolor-SymGS color skips
+    the other colors' work). Formats without one fall back to masking the
+    plain product of the *same* backend, so masked callers retarget across
+    formats/backends exactly like unmasked SpMV.
+    """
     def deco(fn):
         key = DispatchKey(fmt, backend)
         _SPMV_MASKED[key] = KernelEntry(key, fn, supports)
@@ -87,12 +129,26 @@ def register_masked_spmv(fmt: str, backend: str, supports: Optional[Callable] = 
 
 
 def available_impls(fmt: str):
-    """Backends with a registered SpMV kernel for ``fmt``."""
+    """Backends with a registered SpMV kernel for ``fmt``.
+
+    Example:
+        >>> "plain" in available_impls("csr")
+        True
+    """
     _ensure_pallas()
     return tuple(sorted(k.backend for k in _SPMV if k.format == fmt))
 
 
 def dispatch_table(op: str = "spmv") -> Dict[DispatchKey, KernelEntry]:
+    """A snapshot of one dispatch table.
+
+    Args:
+        op: ``"spmv"`` | ``"spmm"`` | ``"masked_spmv"``.
+
+    Returns:
+        ``{DispatchKey: KernelEntry}`` copy (mutating it does not register
+        kernels — use the ``register_*`` decorators).
+    """
     _ensure_pallas()
     return dict({"spmv": _SPMV, "spmm": _SPMM, "masked_spmv": _SPMV_MASKED}[op])
 
@@ -230,10 +286,25 @@ def _shim_policy(A, impl: Optional[str], policy: Optional[ExecutionPolicy],
 
 def spmv(A, x: jnp.ndarray, impl: Optional[str] = None, *,
          policy: Optional[ExecutionPolicy] = None) -> jnp.ndarray:
-    """y = A @ x. Shape: (ncols,) -> (nrows,).
+    """Sparse matrix-vector product ``y = A @ x``.
 
-    ``impl`` is the deprecated string spelling; prefer ``SparseOperator``
-    with an ``ExecutionPolicy`` (or the ``use_backend`` context manager).
+    Args:
+        A: a registered container or a ``SparseOperator`` (unwrapped).
+        x: ``(ncols,)`` dense vector.
+        impl: deprecated string spelling of the backend; prefer
+            ``SparseOperator`` with an ``ExecutionPolicy`` (or the
+            ``use_backend`` context manager).
+        policy: explicit ``ExecutionPolicy`` (wins over ``impl``).
+
+    Returns:
+        ``(nrows,)`` dense result.
+
+    Example:
+        >>> import numpy as np
+        >>> from repro.core import from_dense
+        >>> A = from_dense(np.eye(3, dtype=np.float32) * 3, "csr")
+        >>> [float(v) for v in spmv(A, np.ones(3, np.float32))]
+        [3.0, 3.0, 3.0]
     """
     A = _unwrap(A)
     return _dispatch_spmv(A, x, _shim_policy(A, impl, policy, _SPMV))
@@ -241,7 +312,12 @@ def spmv(A, x: jnp.ndarray, impl: Optional[str] = None, *,
 
 def spmm(A, X: jnp.ndarray, impl: Optional[str] = None, *,
          policy: Optional[ExecutionPolicy] = None) -> jnp.ndarray:
-    """Sparse @ dense-matrix; ``impl`` is the deprecated string spelling."""
+    """Sparse @ dense-matrix product ``Y = A @ X`` (``X`` is ``(ncols, k)``).
+
+    Uses a native SpMM kernel when one is registered along the policy's
+    backend chain, else the same backend's SpMV vmapped over columns.
+    ``impl`` is the deprecated string spelling, as in :func:`spmv`.
+    """
     A = _unwrap(A)
     return _dispatch_spmm(A, X, _shim_policy(A, impl, policy, _SPMM))
 

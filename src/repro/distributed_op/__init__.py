@@ -1,0 +1,33 @@
+"""repro.distributed_op — multi-device sparse operators (halo-exchange SpMV).
+
+The distribution layer over the core format/dispatch abstraction:
+
+    DistributedOperator : row-sharded sparse operator under ``shard_map`` —
+        local-part SpMV overlapped with a halo gather + remote-part SpMV,
+        per-rank (format, backend) choices via format groups, a ``rowblock``
+        exact mode for bit-for-bit validation, and ``masked_matvec`` so the
+        multicolor SymGS smoother distributes unchanged.
+    distribute          : convenience constructor.
+    tune_partitions     : per-partition run-first auto-tuner (Table III).
+
+See ``docs/architecture.md`` for the layer diagram and the SpMV
+halo-overlap schedule.
+"""
+from .operator import (
+    STACKABLE_FORMATS,
+    DistributedOperator,
+    FormatGroup,
+    as_dispatch_key,
+    distribute,
+)
+from .tune import DISTRIBUTED_CANDIDATES, tune_partitions
+
+__all__ = [
+    "STACKABLE_FORMATS",
+    "DistributedOperator",
+    "FormatGroup",
+    "as_dispatch_key",
+    "distribute",
+    "DISTRIBUTED_CANDIDATES",
+    "tune_partitions",
+]

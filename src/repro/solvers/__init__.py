@@ -7,14 +7,26 @@
              stencils, with per-level auto-tuned formats
 
 Everything dispatches through the core (format, backend) table, so the whole
-HPCG preconditioner retargets across formats/backends like a single SpMV.
+HPCG preconditioner retargets across formats/backends like a single SpMV —
+and, via ``distribute_vcycle`` / ``SymGS.distribute`` and the sharding-
+transparent CG reductions (``pdot``/``pnorm``/``axpy``), across devices.
 """
-from .cg import CGInfo, as_matvec, cg, cg_solve, pcg_solve
+from .cg import CGInfo, as_matvec, axpy, cg, cg_solve, pcg_solve, pdot, pnorm
 from .symgs import SymGS, greedy_coloring
-from .mg import MGLevel, VCycle, build_mg, coarsenable, injection_operators
+from .mg import (
+    MGLevel,
+    VCycle,
+    build_mg,
+    coarsenable,
+    distributable_depth,
+    distribute_vcycle,
+    injection_operators,
+)
 
 __all__ = [
-    "CGInfo", "as_matvec", "cg", "cg_solve", "pcg_solve",
+    "CGInfo", "as_matvec", "axpy", "cg", "cg_solve", "pcg_solve",
+    "pdot", "pnorm",
     "SymGS", "greedy_coloring",
-    "MGLevel", "VCycle", "build_mg", "coarsenable", "injection_operators",
+    "MGLevel", "VCycle", "build_mg", "coarsenable", "distributable_depth",
+    "distribute_vcycle", "injection_operators",
 ]

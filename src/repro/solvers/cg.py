@@ -13,6 +13,15 @@ Extracted from ``apps/hpcg.py`` so every HPCG phase shares one CG core:
 
 All three take a matvec callable (``lambda p: A @ p`` for a SparseOperator),
 so the format/backend dispatch of PR 1 applies to every CG flavour.
+
+**Distributed runs.** The loops use the :func:`pdot` / :func:`pnorm` /
+:func:`axpy` primitives below. On one device these are exactly
+``jnp.vdot`` / ``jnp.linalg.norm`` / ``a*x + y``; when the vectors are
+sharded over a mesh axis (a ``DistributedOperator`` matvec keeps them so),
+XLA's SPMD partitioner lowers each dot product to a per-shard partial
+reduction followed by an ``all-reduce`` — HPCG's ``MPI_Allreduce`` — and
+the AXPYs stay purely local. The *same* solver source therefore runs
+single- and multi-device, which is the point of the abstraction.
 """
 from __future__ import annotations
 
@@ -23,53 +32,128 @@ import jax.numpy as jnp
 
 
 def as_matvec(A) -> Callable:
-    """Accept a SparseOperator (or anything with ``@``) or a callable."""
+    """Normalise ``A`` into a matvec callable.
+
+    Args:
+        A: a ``SparseOperator`` / ``DistributedOperator`` (anything
+            supporting ``A @ p``) or an already-callable matvec.
+
+    Returns:
+        ``lambda p: A @ p`` (or ``A`` itself when callable).
+
+    Example:
+        >>> import numpy as np
+        >>> mv = as_matvec(lambda p: 2.0 * p)
+        >>> float(mv(np.ones(3))[0])
+        2.0
+    """
     return A if callable(A) else (lambda p: A @ p)
 
 
+def pdot(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Global dot product ``<x, y>`` — the distributed reduction of CG.
+
+    Single-device this is ``jnp.vdot``; over sharded operands XLA inserts
+    the per-shard partial sum + all-reduce (the ``MPI_Allreduce`` of HPCG's
+    ``ComputeDotProduct``). Keeping it as a named primitive makes the
+    solver's communication points explicit.
+
+    Example:
+        >>> import numpy as np
+        >>> float(pdot(np.ones(4, np.float32), np.full(4, 2.0, np.float32)))
+        8.0
+    """
+    return jnp.vdot(x, y)
+
+
+def pnorm(x: jnp.ndarray) -> jnp.ndarray:
+    """Global 2-norm ``||x||`` (sharding-transparent, like :func:`pdot`).
+
+    Example:
+        >>> import numpy as np
+        >>> float(pnorm(np.asarray([3.0, 4.0], np.float32)))
+        5.0
+    """
+    return jnp.linalg.norm(x)
+
+
+def axpy(a, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """``a*x + y`` — the (communication-free) vector update of CG.
+
+    Elementwise, so under sharding it is purely rank-local: no collective
+    is emitted. Named to mirror HPCG's ``ComputeWAXPBY``.
+
+    Example:
+        >>> import numpy as np
+        >>> [float(v) for v in axpy(2.0, np.ones(2, np.float32),
+        ...                         np.ones(2, np.float32))]
+        [3.0, 3.0]
+    """
+    return a * x + y
+
+
 def cg_solve(spmv_fn: Callable, b: jnp.ndarray, iters: int):
-    """Fixed-iteration CG (no preconditioner). Returns (x, final |r|^2)."""
+    """Fixed-iteration CG (no preconditioner).
+
+    Args:
+        spmv_fn: the matvec ``p -> A @ p``.
+        b: right-hand side; the iterate inherits its sharding.
+        iters: exact number of iterations to run (the *timed* HPCG phases
+            fix this so every format/backend executes the same op mix).
+
+    Returns:
+        ``(x, rs)`` — the final iterate and final squared residual norm.
+    """
 
     def body(_, state):
         x, r, p, rs = state
         Ap = spmv_fn(p)
-        alpha = rs / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        rs_new = jnp.vdot(r, r)
-        p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
+        alpha = rs / jnp.maximum(pdot(p, Ap), 1e-30)
+        x = axpy(alpha, p, x)
+        r = axpy(-alpha, Ap, r)
+        rs_new = pdot(r, r)
+        p = axpy(rs_new / jnp.maximum(rs, 1e-30), p, r)
         return x, r, p, rs_new
 
     x0 = jnp.zeros_like(b)
-    state = (x0, b, b, jnp.vdot(b, b))
+    state = (x0, b, b, pdot(b, b))
     x, r, p, rs = jax.lax.fori_loop(0, iters, body, state)
     return x, rs
 
 
 def pcg_solve(spmv_fn: Callable, b: jnp.ndarray, iters: int,
               precond: Optional[Callable] = None):
-    """Fixed-iteration preconditioned CG. ``precond(r)`` applies M^-1 (must be
-    a symmetric positive-definite linear map — SymGS / the V-cycle are).
-    With ``precond=None`` the recurrence degenerates to ``cg_solve``'s.
-    Returns (x, final |r|^2)."""
+    """Fixed-iteration preconditioned CG.
+
+    Args:
+        spmv_fn: the matvec ``p -> A @ p``.
+        b: right-hand side.
+        iters: exact iteration count (see :func:`cg_solve`).
+        precond: ``r -> M^-1 r``; must be a symmetric positive-definite
+            linear map (SymGS and the multigrid V-cycle are). ``None``
+            degenerates to the :func:`cg_solve` recurrence.
+
+    Returns:
+        ``(x, rs)`` — final iterate and final squared residual norm.
+    """
     M = precond if precond is not None else (lambda r: r)
 
     def body(_, state):
         x, r, p, rz = state
         Ap = spmv_fn(p)
-        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
-        x = x + alpha * p
-        r = r - alpha * Ap
+        alpha = rz / jnp.maximum(pdot(p, Ap), 1e-30)
+        x = axpy(alpha, p, x)
+        r = axpy(-alpha, Ap, r)
         z = M(r)
-        rz_new = jnp.vdot(r, z)
-        p = z + (rz_new / jnp.maximum(rz, 1e-30)) * p
+        rz_new = pdot(r, z)
+        p = axpy(rz_new / jnp.maximum(rz, 1e-30), p, z)
         return x, r, p, rz_new
 
     x0 = jnp.zeros_like(b)
     z0 = M(b)
-    state = (x0, b, z0, jnp.vdot(b, z0))
+    state = (x0, b, z0, pdot(b, z0))
     x, r, p, rz = jax.lax.fori_loop(0, iters, body, state)
-    return x, jnp.vdot(r, r)
+    return x, pdot(r, r)
 
 
 class CGInfo(NamedTuple):
@@ -82,29 +166,52 @@ class CGInfo(NamedTuple):
 
 def cg(A, b: jnp.ndarray, *, tol: float = 1e-6, maxiter: int = 500,
        precond: Optional[Callable] = None) -> CGInfo:
-    """(P)CG with relative-residual stopping: run until ||r|| <= tol * ||b||
-    or ``maxiter``. ``A`` is a SparseOperator or a matvec callable."""
+    """(P)CG with relative-residual stopping.
+
+    Runs until ``||r|| <= tol * ||b||`` or ``maxiter`` — HPCG's convergence
+    criterion. Works unchanged on sharded operands (see module docstring).
+
+    Args:
+        A: a ``SparseOperator`` / ``DistributedOperator`` or a matvec
+            callable.
+        b: right-hand side; the solution inherits its sharding.
+        tol: relative residual target.
+        maxiter: iteration cap.
+        precond: optional SPD preconditioner ``r -> M^-1 r``.
+
+    Returns:
+        :class:`CGInfo` with the solution, iterations taken, and final
+        relative residual.
+
+    Example:
+        >>> import numpy as np, scipy.sparse as sp
+        >>> from repro.core import as_operator
+        >>> A = as_operator(sp.eye(8, format="csr") * 4.0)
+        >>> info = cg(A, np.ones(8, np.float32), tol=1e-8)
+        >>> int(info.iters), round(float(info.x[0]), 6)
+        (1, 0.25)
+    """
     spmv_fn = as_matvec(A)
     M = precond if precond is not None else (lambda r: r)
-    bnorm = jnp.maximum(jnp.linalg.norm(b), 1e-30)
+    bnorm = jnp.maximum(pnorm(b), 1e-30)
 
     def cond(state):
         _, r, _, _, k = state
-        return (jnp.linalg.norm(r) > tol * bnorm) & (k < maxiter)
+        return (pnorm(r) > tol * bnorm) & (k < maxiter)
 
     def body(state):
         x, r, p, rz, k = state
         Ap = spmv_fn(p)
-        alpha = rz / jnp.maximum(jnp.vdot(p, Ap), 1e-30)
-        x = x + alpha * p
-        r = r - alpha * Ap
+        alpha = rz / jnp.maximum(pdot(p, Ap), 1e-30)
+        x = axpy(alpha, p, x)
+        r = axpy(-alpha, Ap, r)
         z = M(r)
-        rz_new = jnp.vdot(r, z)
-        p = z + (rz_new / jnp.maximum(rz, 1e-30)) * p
+        rz_new = pdot(r, z)
+        p = axpy(rz_new / jnp.maximum(rz, 1e-30), p, z)
         return x, r, p, rz_new, k + 1
 
     x0 = jnp.zeros_like(b)
     z0 = M(b)
-    state = (x0, b, z0, jnp.vdot(b, z0), jnp.int32(0))
+    state = (x0, b, z0, pdot(b, z0), jnp.int32(0))
     x, r, _, _, k = jax.lax.while_loop(cond, body, state)
-    return CGInfo(x, k, jnp.linalg.norm(r) / bnorm)
+    return CGInfo(x, k, pnorm(r) / bnorm)

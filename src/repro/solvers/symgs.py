@@ -116,8 +116,44 @@ class SymGS:
         return 0 if self.masks is None else int(self.masks.shape[0])
 
     def with_operator(self, op: SparseOperator) -> "SymGS":
-        """Same schedule, retargeted SpMV operator (per-level tuning hook)."""
+        """Same schedule, retargeted SpMV operator (per-level tuning hook).
+
+        ``op`` may be any object with the ``masked_matvec(x, mask)``
+        protocol — a ``SparseOperator`` or a ``DistributedOperator``.
+        """
         return replace(self, A=op)
+
+    def distribute(self, op) -> "SymGS":
+        """This smoother retargeted onto a ``DistributedOperator``.
+
+        Only the ``multicolor`` schedule distributes: each color update is
+        one row-masked SpMV (``op.masked_matvec``), which the distributed
+        operator runs as local+remote masked SpMV with a fresh halo
+        exchange per color — exactly HPCG's multicolored distributed SymGS.
+        The schedule itself (coloring, diagonal) is global host data and is
+        re-placed with the operator's row sharding; semantics are identical
+        to the single-device multicolor sweep because the color ordering is
+        unchanged.
+
+        Args:
+            op: a ``DistributedOperator`` over the same matrix (its
+                ``sharding()``/``mesh`` decide the placement).
+
+        Returns:
+            A new ``SymGS`` whose sweeps take and return sharded vectors.
+        """
+        if self.method != "multicolor":
+            raise ValueError(
+                "only the multicolor schedule distributes (the reference "
+                "triangular sweep is a sequential scan over global rows)")
+        import jax as _jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        row = op.sharding()
+        mask_sh = NamedSharding(op.mesh, P(None, op.axis))
+        return replace(self, A=op,
+                       diag=_jax.device_put(self.diag, row),
+                       masks=_jax.device_put(self.masks, mask_sh))
 
     # -- sweeps (jittable) ---------------------------------------------------
 

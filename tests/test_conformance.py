@@ -1,11 +1,12 @@
 """Conformance grid: every registered format x backend x (spmv, spmm, masked).
 
-Policy (see README): any (format, backend) pair the dispatch table can reach
-must either match the ``to_dense()`` oracle under a *strict* no-fallback
-policy, or appear in ``KNOWN_GAPS`` as an explicit ``xfail(strict=True)``
-cell. Silent skips are banned: registering a new kernel flips its cell from
-xfail to XPASS, which fails the suite until the gap list is updated — so the
-grid always states exactly what runs where.
+Policy (documented in docs/architecture.md, "Conformance-grid gap policy"):
+any (format, backend) pair the dispatch table can reach must either match
+the ``to_dense()`` oracle under a *strict* no-fallback policy, or appear in
+``KNOWN_GAPS`` as an explicit ``xfail(strict=True)`` cell. Silent skips are
+banned: registering a new kernel flips its cell from xfail to XPASS, which
+fails the suite until the gap list is updated — so the grid always states
+exactly what runs where.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -28,14 +29,20 @@ BACKENDS = sorted({k.backend for k in dispatch_table("spmv")}
                   | {k.backend for k in dispatch_table("spmm")})
 OPS = ("spmv", "spmm", "masked_spmv")
 
-# (format, backend) pairs with NO kernel reachable for the op — each is an
-# explicit, strict xfail below. spmm and masked_spmv fall back to the same
-# backend's SpMV (vmapped / post-masked), so their gaps mirror spmv's.
+# (format, backend) pairs with NO SpMV kernel registered — each is an
+# explicit, strict xfail for all three ops: spmm and masked_spmv reach a
+# backend only through that backend's SpMV entry (native or fallback), so a
+# missing SpMV registration blanks the whole (format, backend) column. The
+# workflow when adding/removing kernels is documented in
+# docs/architecture.md ("Conformance-grid gap policy").
 KNOWN_GAPS = {
-    ("csr", "pallas"): "no Pallas CSR kernel (needs a rowptr-walk kernel; "
-                       "csr runs plain/dense, or convert to sell)",
-    ("dense", "pallas"): "dense containers are the XLA/vendor path; "
-                         "no hand-written Pallas matmul",
+    ("csr", "pallas"): "no Pallas CSR SpMV is registered: per-row "
+                       "variable-length gathers need a rowptr-walk kernel; "
+                       "run csr under plain/dense, or asformat('sell') for "
+                       "the Pallas sliced-ELL kernel",
+    ("dense", "pallas"): "dense containers are deliberately the XLA/vendor "
+                         "path (the ArmPL analogue); a hand-written Pallas "
+                         "matmul would duplicate XLA's",
 }
 
 _N = 96

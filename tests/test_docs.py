@@ -1,0 +1,84 @@
+"""Docs health: the docstring examples actually run (doctest) and the
+docs/ tree + README markdown links resolve. CI's docs job runs exactly this
+file; it is cheap enough for the fast lane too."""
+import doctest
+import importlib
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# every module whose public API carries doctest-able examples
+DOCTEST_MODULES = [
+    "repro.core.operator",
+    "repro.core.spmv",
+    "repro.core.autotune",
+    "repro.core.distributed",
+    "repro.solvers.cg",
+    "repro.solvers.mg",
+    "repro.distributed_op.operator",
+    "repro.distributed_op.tune",
+]
+
+REQUIRED_DOCS = ["architecture.md", "formats.md", "hpcg.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+@pytest.mark.parametrize("modname", DOCTEST_MODULES)
+def test_doctests(modname):
+    mod = importlib.import_module(modname)
+    res = doctest.testmod(mod, verbose=False, raise_on_error=False,
+                          optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert res.failed == 0, f"{modname}: {res.failed} doctest failures"
+
+
+def test_doctest_examples_exist():
+    """The docstring pass is load-bearing: the public modules must actually
+    carry runnable examples, not zero-test placeholders."""
+    total = 0
+    for modname in DOCTEST_MODULES:
+        mod = importlib.import_module(modname)
+        res = doctest.testmod(mod, verbose=False)
+        total += res.attempted
+    assert total >= 20, f"only {total} doctest examples across public APIs"
+
+
+def _md_files():
+    out = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for name in sorted(os.listdir(docs)):
+        if name.endswith(".md"):
+            out.append(os.path.join(docs, name))
+    return out
+
+
+def test_docs_tree_exists():
+    for name in REQUIRED_DOCS:
+        assert os.path.isfile(os.path.join(REPO, "docs", name)), name
+
+
+def test_readme_links_into_docs():
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for name in REQUIRED_DOCS:
+        assert f"docs/{name}" in readme, f"README does not link docs/{name}"
+
+
+@pytest.mark.parametrize("path", _md_files(),
+                         ids=[os.path.relpath(p, REPO) for p in _md_files()])
+def test_markdown_links_resolve(path):
+    """Every relative markdown link points at a real file."""
+    with open(path) as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    bad = []
+    for target in _LINK.findall(text):
+        if re.match(r"^[a-z]+://", target) or target.startswith("#"):
+            continue  # external URL / in-page anchor
+        rel = target.split("#", 1)[0]
+        if not os.path.exists(os.path.join(base, rel)):
+            bad.append(target)
+    assert not bad, f"{os.path.relpath(path, REPO)}: broken links {bad}"

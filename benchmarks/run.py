@@ -1,9 +1,17 @@
-"""Run every paper-table/figure benchmark. Prints name,us_per_call,derived CSV.
+"""Run every paper-table/figure benchmark. Prints name,us_per_call,derived CSV
+and writes the machine-readable SpMV perf trajectory to BENCH_spmv.json at the
+repo root (per format x backend x size: median/p10 seconds, GFLOP/s, and a
+fallback-vs-native flag — the cross-PR perf record).
 
   PYTHONPATH=src python -m benchmarks.run [--scale quick|bench] [--only fig4]
+  PYTHONPATH=src python -m benchmarks.run --smoke   # CI: spmv grid only;
+      exits non-zero if any expected-native cell silently fell back
 """
 import argparse
 import importlib
+import json
+import os
+import platform
 import sys
 import traceback
 
@@ -15,27 +23,78 @@ MODULES = [
     "fig8_hpcg",
     "moe_dispatch",
     "roofline_table",
+    "spmv_bench",
 ]
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_spmv.json")
+
+
+def _write_json(path: str, scale: str, entries) -> None:
+    import jax
+
+    doc = {
+        "schema": 1,
+        "scale": scale,
+        "jax_backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "python": platform.python_version(),
+        "entries": entries,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {len(entries)} entries to {path}", file=sys.stderr)
+
+
+def _check_native(entries) -> int:
+    """Expected-native cells that silently fell back (the smoke gate)."""
+    bad = [e for e in entries if e["expect_native"] and e["fallback"]]
+    for e in bad:
+        print(f"FALLBACK: {e['matrix']} {e['format']}x{e['backend']} "
+              f"selected={e['selected_backend']}", file=sys.stderr)
+    return len(bad)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="quick", choices=["quick", "bench"])
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="where to write the SpMV trajectory (BENCH_spmv.json)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="spmv grid only at smoke scale; fail on unexpected "
+                         "fallback (the CI benchmark gate)")
     args = ap.parse_args()
+
+    if args.smoke:
+        from benchmarks import spmv_bench
+
+        rows, entries = spmv_bench.collect("smoke")
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        _write_json(args.json, "smoke", entries)
+        sys.exit(1 if _check_native(entries) else 0)
 
     mods = [m for m in MODULES if args.only is None or args.only in m]
     print("name,us_per_call,derived")
     failed = 0
+    entries = None
     for m in mods:
         try:
             mod = importlib.import_module(f"benchmarks.{m}")
-            for row in mod.run(args.scale):
+            if m == "spmv_bench":
+                rows, entries = mod.collect(args.scale)
+            else:
+                rows = mod.run(args.scale)
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
         except Exception:
             failed += 1
             print(f"{m},0.00,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if entries is not None:
+        _write_json(args.json, args.scale, entries)
     if failed:
         sys.exit(1)
 

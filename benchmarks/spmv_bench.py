@@ -1,0 +1,111 @@
+"""SpMV perf trajectory: format x backend x size grid -> BENCH_spmv.json.
+
+The machine-readable counterpart of the figure benchmarks: every entry
+records median/p10 seconds, GFLOP/s, which backend the dispatcher actually
+selected, and whether that was a *fallback* from the requested backend — so
+the per-PR perf trajectory (and any silent fallback regression) is tracked
+in one artifact at the repo root.
+
+The per-scale resident cap is chosen so the largest size exceeds it: those
+entries exercise the column-tiled Pallas kernels (``mode: "tiled"``), the
+smaller sizes the resident ones. ``expect_native`` marks the cells this
+repo claims a native Pallas kernel for; ``benchmarks.run --smoke`` fails CI
+when such a cell silently fell back.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExecutionPolicy, from_dense, select_spmv, spmv, structural_skip
+from repro.core import matrices as M
+from repro.kernels.ops import pallas_strategy
+
+FORMATS = ("coo", "csr", "dia", "ell", "sell")
+
+#: scale -> (resident-cols cap, [(size_tag, n)], iters, warmup). The last
+#: size always exceeds the cap, forcing the tiled strategies.
+SCALES: Dict[str, Tuple[int, List[Tuple[str, int]], int, int]] = {
+    "smoke": (128, [("s", 96), ("l", 384)], 3, 1),
+    "quick": (1024, [("s", 1024), ("l", 4096)], 10, 3),
+    "bench": (2048, [("s", 4096), ("l", 16384)], 20, 5),
+}
+
+
+def _suite(n: int):
+    """One band matrix (every format, incl. DIA) + one uniform-random
+    (the gather formats; DIA would blow up and is skipped structurally).
+    The band gets a far off-diagonal pair at ±n/2 so its offset *extent* is
+    O(n): without it DIA's extent-tightened resident test keeps even the
+    large size resident and the tiled DIA kernel would never be measured."""
+    import scipy.sparse as sp
+
+    wings = sp.diags([np.ones(n - n // 2)] * 2, [-(n // 2), n // 2], shape=(n, n))
+    return [(f"banded_w_{n}", (M.banded(n, 9, seed=0) + wings).tocsr()),
+            (f"random_{n}", M.random_uniform(n, min(0.5, 16.0 / n), seed=1))]
+
+
+def _times_s(fn, *args, iters: int, warmup: int) -> List[float]:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter_ns() - t0) / 1e9)
+    return ts
+
+
+def collect(scale: str = "quick"):
+    """Returns (csv_rows, json_entries)."""
+    cap, sizes, iters, warmup = SCALES[scale]
+    base = ExecutionPolicy(max_resident_cols=cap)
+    rows, entries = [], []
+    for tag, n in sizes:
+        for mat_name, s in _suite(n):
+            s = s.tocsr()
+            x = jnp.asarray(np.random.default_rng(2).standard_normal(n), jnp.float32)
+            nnz = int(s.nnz)
+            for fmt in FORMATS:
+                why = structural_skip(s, fmt)
+                if why is not None:
+                    continue
+                A = from_dense(s, fmt, col_tile=base.col_tile(n))
+                for backend in ("plain", "pallas"):
+                    pol = base.replace(backends=(backend, "plain"))
+                    selected = select_spmv(A, pol).key.backend
+                    fn = jax.jit(lambda A, x, pol=pol: spmv(A, x, policy=pol))
+                    ts = _times_s(fn, A, x, iters=iters, warmup=warmup)
+                    med = float(np.median(ts))
+                    # the strategy the dispatch predicates actually pick, not
+                    # a size heuristic — the trajectory must not misreport
+                    # which kernel was measured
+                    mode = pallas_strategy(A, pol)
+                    entry = {
+                        "matrix": mat_name, "size_tag": tag,
+                        "nrows": int(s.shape[0]), "ncols": int(s.shape[1]),
+                        "nnz": nnz, "format": fmt, "backend": backend,
+                        "selected_backend": selected,
+                        "fallback": selected != backend,
+                        "expect_native": backend == "pallas",
+                        "mode": (mode or "fallback") if backend == "pallas" else "n/a",
+                        "median_s": med, "p10_s": float(np.percentile(ts, 10)),
+                        "gflops": 2.0 * nnz / med / 1e9,
+                    }
+                    entries.append(entry)
+                    rows.append({
+                        "name": f"spmv/{mat_name}/{fmt}/{backend}",
+                        "us_per_call": med * 1e6,
+                        "derived": (f"gflops={entry['gflops']:.3f} "
+                                    f"mode={entry['mode']} "
+                                    f"fallback={entry['fallback']}"),
+                    })
+    return rows, entries
+
+
+def run(scale: str = "quick"):
+    return collect(scale)[0]

@@ -14,7 +14,9 @@ Public API:
                (per-rank formats, rowblock exact mode, masked matvec)
                lives in ``repro.distributed_op``
 """
-from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense, format_class, registered_formats
+from .formats import (
+    BSR, COO, CSR, DIA, ELL, SELL, Dense, KernelPlan, format_class, registered_formats,
+)
 from .convert import convert, from_dense, to_bsr, to_coo, to_csr, to_dia, to_ell, to_sell
 from .operator import (
     DEFAULT_POLICY,
@@ -44,7 +46,7 @@ from .registry import SpmvWorkspace, spmv_cached, workspace
 from .distributed import DistributedSpMV, autotune_distributed, split_local_remote
 
 __all__ = [
-    "BSR", "COO", "CSR", "DIA", "ELL", "SELL", "Dense",
+    "BSR", "COO", "CSR", "DIA", "ELL", "SELL", "Dense", "KernelPlan",
     "format_class", "registered_formats",
     "convert", "from_dense", "to_bsr", "to_coo", "to_csr", "to_dia", "to_ell", "to_sell",
     "DEFAULT_POLICY", "ExecutionPolicy", "SparseOperator", "as_operator",

@@ -20,18 +20,23 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from .convert import col_tile_for_policy as _col_tile_for_policy
+from .convert import container_to_scipy as _container_to_scipy
 from .convert import from_dense as _from_dense
 from .operator import DEFAULT_POLICY, ExecutionPolicy, SparseOperator
 from .spmv import DispatchKey, available_impls, spmv
 
 DEFAULT_CANDIDATES: Tuple[DispatchKey, ...] = (
     DispatchKey("coo", "plain"), DispatchKey("coo", "pallas"),
-    DispatchKey("csr", "plain"),
+    DispatchKey("csr", "plain"), DispatchKey("csr", "pallas"),
     DispatchKey("dia", "plain"), DispatchKey("dia", "pallas"),
     DispatchKey("ell", "plain"), DispatchKey("ell", "pallas"),
     DispatchKey("sell", "plain"), DispatchKey("sell", "pallas"),
     DispatchKey("dense", "dense"),
 )
+
+#: Formats whose converters take a ``col_tile`` argument (tiled Pallas plans).
+_COL_TILED_FORMATS = ("coo", "csr", "dia", "ell", "sell")
 
 
 @dataclass
@@ -117,26 +122,6 @@ def structural_skip(s, fmt: str, dia_max_diags: int = 512,
     return None
 
 
-def _container_to_scipy(c):
-    """Registered container -> scipy CSR without densifying where the format
-    allows (COO/CSR carry their triplets directly; pad sentinels dropped).
-    Other formats go via to_dense — the same exactness-only route convert.py
-    uses."""
-    import scipy.sparse as sp
-
-    nrows, ncols = (int(d) for d in c.shape)
-    if c.format == "coo":
-        row, col, val = (np.asarray(x) for x in (c.row, c.col, c.val))
-        keep = row < nrows  # drop (row=nrows, col=0, val=0) pad sentinels
-        return sp.csr_matrix((val[keep], (row[keep], col[keep])), shape=(nrows, ncols))
-    if c.format == "csr":
-        indptr = np.asarray(c.indptr)
-        nnz = int(indptr[-1])  # trailing entries past indptr[-1] are padding
-        return sp.csr_matrix((np.asarray(c.data)[:nnz], np.asarray(c.indices)[:nnz],
-                              indptr), shape=(nrows, ncols))
-    return sp.csr_matrix(np.asarray(c.to_dense()))
-
-
 def autotune_spmv(
     a_dense,
     candidates: Optional[Sequence] = None,
@@ -186,6 +171,13 @@ def autotune_spmv(
             continue
         if fmt not in mats:
             kw = {"dtype": dtype} if dtype is not None else {}
+            if fmt in _COL_TILED_FORMATS:
+                # candidates are measured under the caller's VMEM budget:
+                # large-n matrices get the matching column-tile plan built
+                # in, resident-under-this-policy ones skip it (or keep the
+                # single-tile SCS layout csr/sell always need)
+                base = policy if policy is not None else DEFAULT_POLICY
+                kw["col_tile"] = _col_tile_for_policy(fmt, n, base.col_tile(n))
             mats[fmt] = _from_dense(s, fmt, **kw)
         A = mats[fmt]
         pol = (policy if policy is not None else DEFAULT_POLICY).preferring(impl)

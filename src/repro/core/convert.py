@@ -7,13 +7,38 @@ device-side SpMV runs on the converted container.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
 import scipy.sparse as sp
 
+from . import tiling
 from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense
+
+#: ``col_tile`` convert argument: ``None`` = auto (tile only when the column
+#: count exceeds the default resident budget), an int = force that tile
+#: width, ``False``/``0`` = never build a column-tile plan.
+ColTile = Union[None, int, bool]
+
+
+def _resolve_col_tile(ncols: int, col_tile: ColTile) -> Optional[int]:
+    if col_tile is None:
+        return tiling.select_col_tile(ncols)
+    if not col_tile:  # False / 0: plans disabled (e.g. stacked distributed parts)
+        return None
+    return int(col_tile)
+
+
+def col_tile_for_policy(fmt: str, ncols: int, ct: Optional[int]) -> ColTile:
+    """Map a policy's ``col_tile(ncols)`` decision onto the converter's
+    ``col_tile`` argument, so a build honours *that policy's* budget instead
+    of the module default: ``None`` from the policy means "resident here",
+    which for csr/sell is a single-tile SCS plan (the resident kernel's
+    layout) and for the other formats no tiled plan at all."""
+    if ct is not None:
+        return ct
+    return max(1, ncols) if fmt in ("csr", "sell") else False
 
 
 def _as_scipy(a) -> sp.csr_matrix:
@@ -47,11 +72,42 @@ def from_dense(a, fmt: str, dtype=jnp.float32, **kw):
     return builders[fmt](a, dtype=dtype, **kw)
 
 
+def container_to_scipy(c) -> sp.csr_matrix:
+    """Registered container -> scipy CSR without densifying where the format
+    allows (COO/CSR carry their triplets directly; pad sentinels dropped).
+    Other formats go via ``to_dense`` — the exactness-only route."""
+    nrows, ncols = (int(d) for d in c.shape)
+    if c.format == "coo":
+        row, col, val = (np.asarray(x) for x in (c.row, c.col, c.val))
+        keep = row < nrows  # drop (row=nrows, col=0, val=0) pad sentinels
+        return sp.csr_matrix((val[keep], (row[keep], col[keep])), shape=(nrows, ncols))
+    if c.format == "csr":
+        indptr = np.asarray(c.indptr)
+        nnz = int(indptr[-1])  # trailing entries past indptr[-1] are padding
+        return sp.csr_matrix((np.asarray(c.data)[:nnz], np.asarray(c.indices)[:nnz],
+                              indptr), shape=(nrows, ncols))
+    return sp.csr_matrix(np.asarray(c.to_dense()))
+
+
 def convert(A, fmt: str, **kw):
-    """Convert between any two containers (via dense on host; exactness only)."""
+    """Convert between any two containers (exactness only; COO/CSR sources
+    stay sparse on host, the rest round-trip through dense).
+
+    A same-format conversion *with* build options (``width=``, ``col_tile=``,
+    ...) is a rebuild, not a no-op — e.g. re-tiling a container for a
+    smaller VMEM budget. Rebuilds keep the instance's recoverable build
+    parameters (SELL ``C``, ELL ``width``, BSR ``bs``/``bwidth``) unless
+    overridden; SELL's ``sigma`` is not stored on the container and resets
+    to the builder default."""
     if A.format == fmt:
-        return A
-    return from_dense(np.asarray(A.to_dense()), fmt, dtype=A.dtype, **kw)
+        if not kw:
+            return A
+        keep = {"sell": lambda: {"C": A.C},
+                "ell": lambda: {"width": A.width},
+                "bsr": lambda: {"bs": A.bs, "bwidth": A.bwidth}}.get(fmt)
+        if keep is not None:
+            kw = {**keep(), **kw}
+    return from_dense(container_to_scipy(A), fmt, dtype=A.dtype, **kw)
 
 
 def to_densefmt(a, dtype=jnp.float32):
@@ -59,10 +115,16 @@ def to_densefmt(a, dtype=jnp.float32):
     return Dense(jnp.asarray(a, dtype), tuple(a.shape))
 
 
-def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None):
+def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None,
+           col_tile: ColTile = None):
     s = _as_scipy(a).tocoo()
     order = np.lexsort((s.col, s.row))  # row-major sort (Morpheus sorts too)
     row, col, val = s.row[order], s.col[order], s.data[order]
+    ct = _resolve_col_tile(s.shape[1], col_tile)
+    plan = None
+    if ct is not None:
+        plan = tiling.build_coo_col_plan(row, col, val.astype(np.dtype(dtype)),
+                                         tuple(s.shape), ct).jaxify()
     if len(row) == 0:  # degenerate: keep one zero sentinel entry
         row = np.array([s.shape[0]], np.int32)
         col = np.array([0], np.int32)
@@ -73,20 +135,28 @@ def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None):
         col = np.concatenate([col, np.zeros(pad, np.int32)])
         val = np.concatenate([val, np.zeros(pad, val.dtype)])
     return COO(jnp.asarray(row, jnp.int32), jnp.asarray(col, jnp.int32),
-               jnp.asarray(val, dtype), tuple(s.shape))
+               jnp.asarray(val, dtype), tuple(s.shape), plan)
 
 
-def to_csr(a, dtype=jnp.float32):
+def to_csr(a, dtype=jnp.float32, col_tile: ColTile = None, plan: bool = True):
+    """CSR container; with ``plan=True`` (default) a cached SELL-C-σ view
+    (the ``"scs"`` KernelPlan) rides along so ``csr``×``pallas`` dispatches a
+    native kernel, jit-safely, instead of being a dispatch-table hole."""
     s = _as_scipy_sorted(a)
+    scs = None
+    if plan and col_tile is not False and col_tile != 0:
+        ct = _resolve_col_tile(s.shape[1], col_tile)
+        scs = tiling.build_scs_plan(s, col_tile=ct,
+                                    dtype=np.dtype(dtype)).jaxify()
     indices, data = s.indices, s.data
     if len(data) == 0:  # degenerate: one pad entry past indptr[-1] (sentinel row)
         indices = np.array([0], np.int32)
         data = np.array([0.0], np.float64)
     return CSR(jnp.asarray(s.indptr, jnp.int32), jnp.asarray(indices, jnp.int32),
-               jnp.asarray(data, dtype), tuple(s.shape))
+               jnp.asarray(data, dtype), tuple(s.shape), scs)
 
 
-def to_dia(a, dtype=jnp.float32):
+def to_dia(a, dtype=jnp.float32, col_tile: ColTile = None):
     s = _as_scipy(a).tocoo()
     nrows, ncols = s.shape
     offs = np.unique(s.col.astype(np.int64) - s.row.astype(np.int64))
@@ -96,7 +166,13 @@ def to_dia(a, dtype=jnp.float32):
     dmap = {int(o): i for i, o in enumerate(offs)}
     for r, c, v in zip(s.row, s.col, s.data):
         data[dmap[int(c) - int(r)], r] += v
-    return DIA(jnp.asarray(offs, jnp.int32), jnp.asarray(data, dtype), (nrows, ncols))
+    ct = _resolve_col_tile(ncols, col_tile)
+    plan = None
+    if ct is not None:
+        plan = tiling.build_dia_col_plan(
+            offs, data.astype(np.dtype(dtype)), (nrows, ncols), ct).jaxify()
+    return DIA(jnp.asarray(offs, jnp.int32), jnp.asarray(data, dtype),
+               (nrows, ncols), plan, extent=int(np.abs(offs).max()))
 
 
 def _row_entry_positions(take: np.ndarray):
@@ -109,7 +185,8 @@ def _row_entry_positions(take: np.ndarray):
     return j, k
 
 
-def to_ell(a, dtype=jnp.float32, width: Optional[int] = None):
+def to_ell(a, dtype=jnp.float32, width: Optional[int] = None,
+           col_tile: ColTile = None):
     s = _as_scipy_sorted(a)
     nrows, ncols = s.shape
     counts = np.diff(s.indptr)
@@ -121,10 +198,27 @@ def to_ell(a, dtype=jnp.float32, width: Optional[int] = None):
     src = s.indptr[k] + j
     idx[k, j] = s.indices[src]
     dat[k, j] = s.data[src]
-    return ELL(jnp.asarray(idx), jnp.asarray(dat, dtype), (nrows, ncols))
+    ct = _resolve_col_tile(ncols, col_tile)
+    plan = None
+    if ct is not None:
+        sp_plan = s
+        if len(counts) and counts.max() > w:  # width= truncated rows: the plan
+            keep = np.zeros(len(s.data), bool)  # must describe the same matrix
+            keep[src] = True
+            sp_plan = sp.csr_matrix(
+                (s.data[keep], s.indices[keep],
+                 np.concatenate([[0], np.cumsum(np.minimum(counts, w))])),
+                shape=s.shape)
+        plan = tiling.build_ell_col_plan(sp_plan, ct, np.dtype(dtype)).jaxify()
+    return ELL(jnp.asarray(idx), jnp.asarray(dat, dtype), (nrows, ncols), plan)
 
 
-def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64):
+def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64,
+            col_tile: ColTile = None, plan: bool = True):
+    """SELL-C-σ container. With ``plan=True`` (default) the Pallas ``"scs"``
+    stream is precomputed here — construction is exactly where the layout is
+    concrete, so ``sell``×``pallas`` no longer needs a trace-time rebuild
+    (the old ``_sell_concrete`` jit restriction)."""
     s = _as_scipy_sorted(a)
     nrows, ncols = s.shape
     counts = np.diff(s.indptr)
@@ -150,8 +244,13 @@ def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64):
     tgt = (sptr[real[k] // C] + j) * C + real[k] % C
     idx[tgt] = s.indices[src]
     dat[tgt] = s.data[src]
+    scs = None
+    if plan and col_tile is not False and col_tile != 0:
+        scs = tiling.build_scs_plan(
+            s, col_tile=_resolve_col_tile(ncols, col_tile), C=C, sigma=sigma,
+            dtype=np.dtype(dtype)).jaxify()
     return SELL(jnp.asarray(sptr, jnp.int32), jnp.asarray(idx), jnp.asarray(dat, dtype),
-                jnp.asarray(perm, jnp.int32), (nrows, ncols), C)
+                jnp.asarray(perm, jnp.int32), (nrows, ncols), C, scs)
 
 
 def to_bsr(a, dtype=jnp.float32, bs: int = 32, bwidth: Optional[int] = None):

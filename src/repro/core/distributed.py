@@ -17,6 +17,7 @@ JAX mapping (per the brief: jax-native collectives, not MPI emulation):
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from functools import partial
 from typing import List, Optional, Sequence, Tuple
@@ -166,22 +167,31 @@ def split_rowblocks(s: sp.spmatrix, nparts: int) -> List[sp.csr_matrix]:
 # ------------------------------------------------------- container stack ----
 
 def build_stacked(mats: Sequence[sp.spmatrix], fmt: str, dtype=jnp.float32):
-    """Convert each part to ``fmt`` with common padded sizes, stack leaves."""
+    """Convert each part to ``fmt`` with common padded sizes, stack leaves.
+
+    Column-tile ``KernelPlan``s are disabled (``col_tile=False``): per-part
+    plan arrays have data-dependent shapes that do not stack, so a per-rank
+    ``(fmt, "pallas")`` choice that needs one falls back down the group's
+    policy chain instead (see docs/architecture.md).
+    """
     mats = [m.tocsr() for m in mats]
     if fmt == "coo":
         nnz = max(1, max(int(m.nnz) for m in mats))
-        cs = [to_coo(m, dtype=dtype, pad_to=None) for m in mats]
+        cs = [to_coo(m, dtype=dtype, pad_to=None, col_tile=False) for m in mats]
         cs = [_pad_coo(c, nnz) for c in cs]
     elif fmt == "csr":
         nnz = max(1, max(int(m.nnz) for m in mats))
-        cs = [_pad_csr(to_csr(m, dtype=dtype), nnz) for m in mats]
+        cs = [_pad_csr(to_csr(m, dtype=dtype, plan=False), nnz) for m in mats]
     elif fmt == "dia":
-        cs = [to_dia(m, dtype=dtype) for m in mats]
+        cs = [to_dia(m, dtype=dtype, col_tile=False) for m in mats]
         nd = max(c.ndiags for c in cs)
-        cs = [_pad_dia(c, nd) for c in cs]
+        # extent is static aux data: parts must share one value to stack, and
+        # the max across parts is a valid (if loose) bound for each
+        ext = max((c.extent or 0) for c in cs)
+        cs = [dataclasses.replace(_pad_dia(c, nd), extent=ext) for c in cs]
     elif fmt == "ell":
         w = max(1, max(int(np.diff(m.indptr).max() if m.nnz else 1) for m in mats))
-        cs = [to_ell(m, dtype=dtype, width=w) for m in mats]
+        cs = [to_ell(m, dtype=dtype, width=w, col_tile=False) for m in mats]
     else:
         raise ValueError(f"unsupported distributed format {fmt!r}")
     return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *cs)

@@ -28,6 +28,48 @@ Shape = Tuple[int, int]
 _REGISTERED_FORMATS: dict = {}
 
 
+@dataclass(frozen=True)
+class KernelPlan:
+    """A precomputed Pallas execution layout attached to a container.
+
+    Built host-side at convert time (``core.tiling``), carried as an optional
+    ``plan`` leaf on the container so tiled/streamed kernels stay jit-safe:
+    ``arrays`` are ordinary pytree leaves (dense per-column-tile index/data
+    panels, scalar-prefetch steering arrays), while ``kind`` and the ``meta``
+    geometry tuple are static aux data the ``supports(A, policy)`` predicates
+    can test under trace.
+
+    Kinds (array/meta layouts are documented on their builders in
+    ``core.tiling``): ``"ell-cols"``, ``"dia-cols"``, ``"coo-cols"``,
+    ``"scs"`` (the SELL-C-σ stream shared by the csr and sell kernels).
+    ``meta[0]`` is always the column-tile width ``ct``.
+    """
+
+    kind: str
+    arrays: Tuple[Any, ...]
+    meta: Tuple[int, ...]
+
+    @property
+    def ct(self) -> int:
+        return int(self.meta[0])
+
+    @property
+    def ntiles(self) -> int:
+        return int(self.meta[1])
+
+    def jaxify(self) -> "KernelPlan":
+        """Numpy-built arrays moved to device (index arrays stay int32)."""
+        return KernelPlan(self.kind, tuple(jnp.asarray(a) for a in self.arrays),
+                          self.meta)
+
+
+jax.tree_util.register_pytree_node(
+    KernelPlan,
+    lambda p: (p.arrays, (p.kind, p.meta)),
+    lambda aux, leaves: KernelPlan(aux[0], tuple(leaves), aux[1]),
+)
+
+
 def _register(cls):
     """Register a sparse container class as a JAX pytree node."""
     fields = [f.name for f in dataclasses.fields(cls) if f.metadata.get("leaf", True)]
@@ -73,6 +115,7 @@ class COO:
     col: jnp.ndarray  # (nnz,) int32
     val: jnp.ndarray  # (nnz,) float
     shape: Shape = _aux()
+    plan: Any = None  # optional KernelPlan ("coo-cols" column-tiled stream)
 
     format: ClassVar[str] = "coo"
 
@@ -100,6 +143,7 @@ class CSR:
     indices: jnp.ndarray  # (nnz,) int32 column ids
     data: jnp.ndarray     # (nnz,) float
     shape: Shape = _aux()
+    plan: Any = None  # optional KernelPlan ("scs": cached SELL-C-σ view)
 
     format: ClassVar[str] = "csr"
 
@@ -137,6 +181,12 @@ class DIA:
     offsets: jnp.ndarray  # (ndiags,) int32, sorted
     data: jnp.ndarray     # (ndiags, nrows) float, 0 where out of range
     shape: Shape = _aux()
+    plan: Any = None  # optional KernelPlan ("dia-cols" per-tile diagonals)
+    #: static upper bound on max|offset| (set by ``to_dia``) — lets the
+    #: Pallas fit predicate and x padding stay tight *under jit tracing*,
+    #: where the offsets array itself is abstract; None = unknown (the
+    #: conservative shape-based bound applies)
+    extent: Any = _aux(default=None)
 
     format: ClassVar[str] = "dia"
 
@@ -180,6 +230,7 @@ class ELL:
     indices: jnp.ndarray  # (nrows, width) int32, -1 = padding
     data: jnp.ndarray     # (nrows, width) float, 0 at padding
     shape: Shape = _aux()
+    plan: Any = None  # optional KernelPlan ("ell-cols" per-tile ELL blocks)
 
     format: ClassVar[str] = "ell"
 
@@ -223,6 +274,7 @@ class SELL:
     perm: jnp.ndarray     # (nrows_padded,) int32 row permutation (padded rows = nrows)
     shape: Shape = _aux()
     C: int = _aux(default=8)
+    plan: Any = None  # optional KernelPlan ("scs" stream, built at convert)
 
     format: ClassVar[str] = "sell"
 

@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .convert import convert, from_dense
+from . import tiling
+from .convert import col_tile_for_policy, convert, from_dense
 from .formats import registered_formats
 
 # ----------------------------------------------------------------- policy ----
@@ -50,15 +51,37 @@ class ExecutionPolicy:
     of Morpheus's FPGA backend (paper §V): resident-x Pallas strategies keep
     x plus a couple of tiles in VMEM, the COO one-hot kernel materialises an
     (nrows, tile) window.
+
+    The VMEM-budget model (``vmem_budget_bytes`` with the derived
+    :meth:`resident_cols` / :meth:`col_tile`) decides between the two Pallas
+    strategies: matrices whose x fits ``resident_cols()`` run resident-x
+    kernels; larger ones run the column-tiled kernels over the container's
+    convert-time :class:`~repro.core.formats.KernelPlan` (see
+    docs/formats.md, "Kernel strategy").
     """
 
     backends: Tuple[str, ...] = ("plain",)
-    max_resident_cols: int = 1 << 20   # VMEM guard for resident-x kernels
+    # VMEM guard for resident-x kernels; default sourced from core.tiling so
+    # the convert-time auto-tiling and the policy share one set of limits
+    max_resident_cols: int = tiling.DEFAULT_MAX_RESIDENT_COLS
     max_onehot_rows: int = 8192        # COO full-window one-hot row limit
     allow_fallback: bool = True        # walk down the chain on unsupported
+    # per-core VMEM the kernels may assume (default: one TPU core)
+    vmem_budget_bytes: int = tiling.DEFAULT_VMEM_BUDGET_BYTES
 
     def replace(self, **kw) -> "ExecutionPolicy":
         return dataclasses.replace(self, **kw)
+
+    def resident_cols(self) -> int:
+        """Columns of f32 x that may stay VMEM-resident (min of the explicit
+        cap and a quarter of the VMEM budget — see ``tiling.resident_cols``)."""
+        return tiling.resident_cols(self.max_resident_cols, self.vmem_budget_bytes)
+
+    def col_tile(self, ncols: int) -> Optional[int]:
+        """Column-tile width the tiled kernels should use for ``ncols``, or
+        ``None`` when x fits resident under this policy."""
+        return tiling.select_col_tile(ncols, self.max_resident_cols,
+                                      self.vmem_budget_bytes)
 
     def preferring(self, impl: str) -> "ExecutionPolicy":
         """This policy retargeted to prefer ``impl``, keeping the silent
@@ -349,7 +372,20 @@ def as_operator(a, fmt: Optional[str] = None, policy: Optional[ExecutionPolicy] 
     # scipy first: on older scipy versions spmatrix.format is a plain class
     # attribute ('csr', ...), which would shadow the container check below
     if sp.issparse(a) or isinstance(a, (np.ndarray, jnp.ndarray)) or hasattr(a, "__array__"):
-        return SparseOperator(from_dense(a, fmt or "csr", **kw), policy)
+        tgt = fmt or "csr"
+        shape = getattr(a, "shape", None)
+        if (policy is not None and "col_tile" not in kw
+                and tgt in ("coo", "csr", "dia", "ell", "sell")
+                and shape is not None and len(shape) == 2):
+            # build the container to the attached policy's VMEM budget: a
+            # large-n operator lands on the column-tiled Pallas plan its
+            # policy accepts, a resident-under-this-policy one skips the
+            # unused tiled plan (csr/sell keep a single-tile SCS layout —
+            # that *is* their resident kernel)
+            ncols = int(shape[1])
+            kw = {**kw, "col_tile": col_tile_for_policy(
+                tgt, ncols, policy.col_tile(ncols))}
+        return SparseOperator(from_dense(a, tgt, **kw), policy)
     if getattr(type(a), "format", None) in registered_formats():
         op = SparseOperator(a, policy)
         return op.asformat(fmt, **kw) if fmt is not None else op

@@ -48,9 +48,17 @@ class KernelEntry:
     key: DispatchKey
     fn: Callable
     supports: Optional[Callable] = None  # (A, policy) -> bool; None = always
+    needs_policy: bool = False  # fn takes the policy (multi-strategy kernels)
 
     def ok(self, A, policy: ExecutionPolicy) -> bool:
         return self.supports is None or bool(self.supports(A, policy))
+
+    def call(self, A, *operands, policy: ExecutionPolicy):
+        """Invoke the kernel; strategy-picking kernels (resident vs column-
+        tiled) receive the policy as a trailing argument."""
+        if self.needs_policy:
+            return self.fn(A, *operands, policy)
+        return self.fn(A, *operands)
 
 
 _SPMV: Dict[DispatchKey, KernelEntry] = {}
@@ -58,7 +66,8 @@ _SPMM: Dict[DispatchKey, KernelEntry] = {}
 _SPMV_MASKED: Dict[DispatchKey, KernelEntry] = {}
 
 
-def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
+def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None,
+                  needs_policy: bool = False):
     """Decorator registering an SpMV kernel under ``DispatchKey(fmt, backend)``.
 
     Args:
@@ -68,6 +77,9 @@ def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
             ``"pallas"``, ``"dense"``, ...).
         supports: optional ``(A, policy) -> bool`` capability predicate (the
             declarative device-fit guard); ``None`` means always supported.
+        needs_policy: when True the kernel is called ``fn(A, x, policy)`` so
+            it can pick an execution strategy (resident vs column-tiled)
+            from the policy's VMEM budget.
 
     Returns:
         The decorator; the wrapped ``fn(A, x) -> y`` is returned unchanged.
@@ -88,12 +100,13 @@ def register_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
     """
     def deco(fn):
         key = DispatchKey(fmt, backend)
-        _SPMV[key] = KernelEntry(key, fn, supports)
+        _SPMV[key] = KernelEntry(key, fn, supports, needs_policy)
         return fn
     return deco
 
 
-def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None):
+def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None,
+                  needs_policy: bool = False):
     """Decorator registering a *native* SpMM kernel ``fn(A, X) -> Y``.
 
     Same key space and ``supports`` semantics as :func:`register_spmv`.
@@ -103,12 +116,13 @@ def register_spmm(fmt: str, backend: str, supports: Optional[Callable] = None):
     """
     def deco(fn):
         key = DispatchKey(fmt, backend)
-        _SPMM[key] = KernelEntry(key, fn, supports)
+        _SPMM[key] = KernelEntry(key, fn, supports, needs_policy)
         return fn
     return deco
 
 
-def register_masked_spmv(fmt: str, backend: str, supports: Optional[Callable] = None):
+def register_masked_spmv(fmt: str, backend: str, supports: Optional[Callable] = None,
+                         needs_policy: bool = False):
     """Decorator registering a row-masked SpMV kernel.
 
     Args:
@@ -123,7 +137,7 @@ def register_masked_spmv(fmt: str, backend: str, supports: Optional[Callable] = 
     """
     def deco(fn):
         key = DispatchKey(fmt, backend)
-        _SPMV_MASKED[key] = KernelEntry(key, fn, supports)
+        _SPMV_MASKED[key] = KernelEntry(key, fn, supports, needs_policy)
         return fn
     return deco
 
@@ -192,7 +206,7 @@ def select_spmv(A, policy: ExecutionPolicy) -> KernelEntry:
 
 
 def _dispatch_spmv(A, x, policy: ExecutionPolicy) -> jnp.ndarray:
-    return select_spmv(A, policy).fn(A, x)
+    return select_spmv(A, policy).call(A, x, policy=policy)
 
 
 def _dispatch_spmm(A, X, policy: ExecutionPolicy) -> jnp.ndarray:
@@ -204,7 +218,7 @@ def _dispatch_spmm(A, X, policy: ExecutionPolicy) -> jnp.ndarray:
         entry = _SPMM.get(DispatchKey(A.format, backend))
         if entry is not None:
             if entry.ok(A, policy):
-                return entry.fn(A, X)
+                return entry.call(A, X, policy=policy)
             if not policy.allow_fallback:
                 raise BackendUnsupportedError(
                     f"SpMM backend {backend!r} rejected {A.format} matrix of shape "
@@ -232,10 +246,10 @@ def _dispatch_masked_spmv(A, x, row_mask, policy: ExecutionPolicy) -> jnp.ndarra
         key = DispatchKey(A.format, backend)
         entry = _SPMV_MASKED.get(key)
         if entry is not None and entry.ok(A, policy):
-            return entry.fn(A, x, row_mask)
+            return entry.call(A, x, row_mask, policy=policy)
         base = _SPMV.get(key)
         if base is not None and base.ok(A, policy):
-            return jnp.where(row_mask, base.fn(A, x), 0)
+            return jnp.where(row_mask, base.call(A, x, policy=policy), 0)
         why = "unregistered" if (entry is None and base is None) else "unsupported"
         if not policy.allow_fallback:
             raise BackendUnsupportedError(

@@ -25,7 +25,12 @@ from .operator import STACKABLE_FORMATS, DistributedOperator
 
 #: Default distributed candidates: every stackable format on the plain
 #: backend. Pallas candidates can be passed explicitly where the mesh's
-#: devices support them.
+#: devices support them — note that stacked group containers carry no
+#: column-tile ``KernelPlan`` (``build_stacked`` disables them: per-part
+#: plan shapes don't stack), so plan-requiring pallas kernels (csr/sell,
+#: and any column-tiled mode) fall back down the group's policy chain at
+#: execution even if they won the unstacked race; the resident dia/ell/coo
+#: pallas kernels run as raced.
 DISTRIBUTED_CANDIDATES: Tuple[DispatchKey, ...] = (
     DispatchKey("csr", "plain"),
     DispatchKey("dia", "plain"),

@@ -16,11 +16,17 @@ first row (rows are sorted, Morpheus guarantees sortedness before SpMV);
 cross-tile carries are safe because the TPU grid is sequential per core, so
 the read-modify-write on the resident y block never races.
 
-Two windowing modes (ops.py picks):
+Three windowing modes (ops.py picks):
   - full  : RW = nrows_pad (jit-friendly: no value-dependent shapes) — for
             matrices up to a few thousand rows the whole y fits VMEM.
   - sliced: entries pre-bucketed per row-slice (SCOO layout) so RW is the
             static slice height; used by the workspace/handle path.
+  - tiled : SCOO additionally bucketed per *column tile*
+            (``core.tiling.build_coo_col_plan``): each block's scalar-
+            prefetched ``ctile`` steers a (ct,) x-tile block spec so x never
+            needs to be VMEM-resident; blocks are row-slice-major so the
+            resident y window still sees contiguous runs and "slice changed"
+            stays the init signal.
 """
 from __future__ import annotations
 
@@ -159,4 +165,66 @@ def scoo_spmv(row, col, val, slice_ids, x, nrows: int, slice_rows: int = 512,
         out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
         interpret=interpret,
     )(slice_ids, x, row, col, val)
+    return y[:nrows].astype(val.dtype)
+
+
+def _kernel_tiled(slice_ids_ref, ctile_ref, x_ref, row_ref, col_ref, val_ref,
+                  y_ref, *, tile: int, rw: int):
+    rows = row_ref[...]
+    cols = col_ref[...]           # tile-local column ids
+    vals = val_ref[...].astype(jnp.float32)
+    t = pl.program_id(0)
+    w0 = slice_ids_ref[t] * rw
+    x = x_ref[...]                # this block's (ct,) x tile
+    prod = vals * jnp.take(x, cols, axis=0).astype(jnp.float32)
+    local = rows - w0
+    onehot = (local[:, None] == jax.lax.broadcasted_iota(jnp.int32, (tile, rw), 1))
+    contrib = jnp.einsum("tr,t->r", onehot.astype(jnp.float32), prod)
+
+    prev = slice_ids_ref[jnp.maximum(t - 1, 0)]
+    fresh = (t == 0) | (prev != slice_ids_ref[t])
+
+    @pl.when(fresh)
+    def _init():
+        y_ref[...] = contrib.astype(y_ref.dtype)
+
+    @pl.when(jnp.logical_not(fresh))
+    def _acc():
+        y_ref[...] += contrib.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nrows", "slice_rows", "tile",
+                                             "col_tile", "ntiles", "interpret"))
+def scoo_spmv_tiled(row, col, val, slice_ids, ctile, x, nrows: int,
+                    col_tile: int, ntiles: int, slice_rows: int = 512,
+                    tile: int = 512, interpret: bool | None = None) -> jnp.ndarray:
+    """Column-tiled sliced mode over a ``build_coo_col_plan`` layout.
+
+    ``col`` holds tile-local ids; ``ctile`` (one per block) steers which
+    (ct,) x tile the block's spec fetches — the grid pipeline streams and
+    double-buffers those tiles, so x residency never bounds the matrix.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = slice_ids.shape[0]
+    rw = slice_rows
+    nrows_pad = -(-nrows // rw) * rw
+    x_pad = jnp.zeros((ntiles * col_tile,), x.dtype).at[: x.shape[0]].set(x)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel_tiled, tile=tile, rw=rw),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(grid,),
+            in_specs=[
+                pl.BlockSpec((col_tile,), lambda t, sid, ct: (ct[t],)),
+                pl.BlockSpec((tile,), lambda t, sid, ct: (t,)),
+                pl.BlockSpec((tile,), lambda t, sid, ct: (t,)),
+                pl.BlockSpec((tile,), lambda t, sid, ct: (t,)),
+            ],
+            out_specs=pl.BlockSpec((rw,), lambda t, sid, ct: (sid[t],)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
+        interpret=interpret,
+    )(slice_ids, ctile, x_pad, row, col, val)
     return y[:nrows].astype(val.dtype)

@@ -1,22 +1,35 @@
-"""DIA SpMV Pallas kernel — the paper's SVE outer-loop vectorisation on TPU.
+"""DIA SpMV Pallas kernels — the paper's SVE outer-loop vectorisation on TPU.
 
 Paper (§IV): vectorise the *row* loop (lanes = consecutive rows), iterate
 diagonals sequentially, because (i) ``av`` is contiguous along rows for a
 fixed diagonal and (ii) no horizontal reduction is needed. That maps 1:1 to
 the TPU VPU: a grid over row-blocks, each block holding ``block_rows`` lanes;
 the diagonal loop is a ``fori_loop`` whose ``x`` access is a *dense shifted
-load* ``x_pad[row0 + off + pre : ... + block_rows]`` — the gather the SVE
-version needed (``svld1_gather_index``) disappears entirely because x is
-pre-padded so every shift is in-bounds (per-lane predication becomes "pad
-with zeros"; the zero data entries contribute nothing).
+load* — the gather the SVE version needed (``svld1_gather_index``) disappears
+entirely because x is pre-padded so every shift is in-bounds (per-lane
+predication becomes "pad with zeros"; the zero data entries contribute
+nothing).
 
-VMEM budget (defaults): data block ndiags x block_rows f32 = 512x512x4 = 1 MiB,
-x_pad resident = (ncols + 2*pad) x 4 — callers cap ncols (ops.py falls back
-to the windowed plain path for huge n); y block 2 KiB.
+Two execution modes:
+
+  - ``dia_spmv``       : resident-x. The pre/post x padding is sized by the
+    *actual* offset extent ``max|offset|`` when given (much tighter than the
+    old worst-case ``nrows_pad`` pad for wide-but-thin band matrices).
+  - ``dia_spmv_tiled`` : column-tiled. Diagonals are pre-split per column
+    tile (``core.tiling.build_dia_col_plan``) with data pre-masked to the
+    rows whose column falls in the tile; each grid step loads one haloed
+    (ct + 2*block_rows,) x window — streamed/double-buffered by the grid
+    pipeline — and accumulates partial y across the sequential column-tile
+    grid axis. Window starts are clamped; a clamp can only trigger when the
+    (pre-masked) data in that block is all-zero, so it never changes y.
 
 Scalar prefetch: ``offsets`` live in SMEM (PrefetchScalarGridSpec) because
 they steer the dynamic-slice *addresses* — the Mosaic-native way to index
 from data (same mechanism megablox uses for expert ids).
+
+VMEM budget (defaults): data block ndiags x block_rows f32 = 512x512x4 = 1 MiB,
+x_pad resident = (ncols + 2*extent) x 4 — callers cap ncols via the policy
+(ops.py falls back to the tiled plan or plain path); y block 2 KiB.
 """
 from __future__ import annotations
 
@@ -41,13 +54,16 @@ def _kernel(offs_ref, x_ref, data_ref, y_ref, *, block_rows: int, ndiags: int, p
     y_ref[:] = acc.astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "extent", "interpret"))
 def dia_spmv(offsets: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray,
-             block_rows: int = 512, interpret: bool | None = None) -> jnp.ndarray:
+             block_rows: int = 512, extent: int | None = None,
+             interpret: bool | None = None) -> jnp.ndarray:
     """y = A @ x for DIA arrays. data: (ndiags, nrows), x: (ncols,).
 
     Returns (nrows,). Assumes ``data`` is 0 where the diagonal exits the
-    matrix (guaranteed by ``repro.core.convert.to_dia``).
+    matrix (guaranteed by ``repro.core.convert.to_dia``). ``extent`` is a
+    static bound on ``max|offset|``; when given, the x padding shrinks from
+    the worst case (every offset possible) to just the band actually used.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -58,9 +74,13 @@ def dia_spmv(offsets: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray,
     grid = nrows_pad // br
 
     # pre/post padding so every shifted window row0+off+pre .. +br is in-bounds:
-    # off in [-(nrows-1), ncols-1], row0 in [0, nrows_pad-br]
-    pre = nrows_pad
-    post = nrows_pad + br
+    # off in [-extent, extent] (worst case nrows_pad), row0 in [0, nrows_pad-br]
+    if extent is None:
+        pre = nrows_pad
+        post = nrows_pad + br
+    else:
+        pre = min(int(extent), nrows_pad)
+        post = max(0, nrows_pad + min(int(extent), ncols) - ncols)
     x_pad = jnp.zeros((pre + ncols + post,), x.dtype).at[pre : pre + ncols].set(x)
     data_pad = jnp.zeros((ndiags, nrows_pad), data.dtype).at[:, :nrows].set(data)
 
@@ -79,3 +99,79 @@ def dia_spmv(offsets: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray,
         interpret=interpret,
     )(offsets, x_pad, data_pad)
     return y[:nrows].astype(data.dtype)
+
+
+def _kernel_tiled(offs_ref, x_ref, dat_ref, y_ref, *, block_rows: int,
+                  max_d: int, col_tile: int, halo: int):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    row0 = i * block_rows
+
+    def body(d, acc):
+        off = offs_ref[t, d]
+        # row i of diagonal (t, d) sits at position i + off - t*ct in BOTH
+        # haloed windows (data and x), so one clamped start serves both; the
+        # clamp only fires when this (tile, diagonal, row-block) triple has
+        # all-zero pre-masked data, and the halo regions are zero-filled
+        p = jnp.clip(row0 + off - t * col_tile + halo,
+                     0, col_tile + 2 * halo - block_rows)
+        dw = dat_ref[0, d, pl.ds(p, block_rows)]
+        xw = x_ref[0, pl.ds(p, block_rows)]
+        return acc + dw * xw
+
+    acc = jax.lax.fori_loop(0, max_d, body, jnp.zeros((block_rows,), jnp.float32))
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = acc.astype(y_ref.dtype)
+
+    @pl.when(t != 0)
+    def _acc():
+        y_ref[...] += acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nrows", "col_tile", "block_rows",
+                                             "interpret"))
+def dia_spmv_tiled(offs_t: jnp.ndarray, dat_w: jnp.ndarray, x: jnp.ndarray,
+                   nrows: int, col_tile: int, block_rows: int = 512,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x over per-column-tile diagonal windows.
+
+    offs_t: (ntiles, max_d) int32 global offsets (0-padded with zero data),
+    dat_w: (ntiles, max_d, ct) per-tile diagonal *windows* (see
+    ``build_dia_col_plan``), x: (ncols,). Both the x tile and the data
+    windows carry a ``block_rows`` halo of zeros on each side so any
+    diagonal's shifted window intersecting the tile stays in-bounds.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ntiles, max_d, _ = dat_w.shape
+    ncols = x.shape[0]
+    br = min(block_rows, max(8, nrows))
+    h = br
+    nrows_pad = -(-nrows // br) * br
+    grid = nrows_pad // br
+
+    dat_pad = jnp.zeros((ntiles, max_d, col_tile + 2 * h),
+                        dat_w.dtype).at[:, :, h : h + col_tile].set(dat_w)
+    xx = jnp.zeros((h + ntiles * col_tile + h,), x.dtype).at[h : h + ncols].set(x)
+    win = (jnp.arange(col_tile + 2 * h, dtype=jnp.int32)[None, :]
+           + col_tile * jnp.arange(ntiles, dtype=jnp.int32)[:, None])
+    x_tiles = xx[win]  # (ntiles, ct + 2h): tile t spans columns [t*ct-h, t*ct+ct+h)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel_tiled, block_rows=br, max_d=max_d,
+                          col_tile=col_tile, halo=h),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(grid, ntiles),
+            in_specs=[
+                pl.BlockSpec((1, col_tile + 2 * h), lambda i, t, offs: (t, 0)),
+                pl.BlockSpec((1, max_d, col_tile + 2 * h), lambda i, t, offs: (t, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((br,), lambda i, t, offs: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
+        interpret=interpret,
+    )(offs_t, x_tiles, dat_pad)
+    return y[:nrows].astype(dat_w.dtype)

@@ -1,4 +1,4 @@
-"""ELL SpMV Pallas kernel — regularised CSR for 8x128 lanes.
+"""ELL SpMV Pallas kernels — regularised CSR for 8x128 lanes.
 
 CSR's indptr walk (Algorithm 2) cannot fill TPU lanes; the Morpheus answer on
 TPU is to *convert* (CSR -> ELL / SELL) and run a rectangular kernel, the
@@ -8,6 +8,17 @@ its internal layout. Each grid step owns a (block_rows x width) tile of
 ``jnp.take`` — Mosaic lowers VMEM-local takes to dynamic-gather ops; padding
 lanes carry index -1 and are predicated off with a mask (SVE ``pg``
 analogue).
+
+Two execution modes:
+
+  - ``ell_spmv``       : resident-x (x fits the policy's VMEM budget).
+  - ``ell_spmv_tiled`` : column-tiled for large n — the grid grows a trailing
+    *sequential* column-tile dimension; each step gathers from one (ct,) x
+    tile streamed through VMEM (Pallas's grid pipeline double-buffers the
+    copies) and accumulates partial y in the resident (block_rows,) output
+    block, initialised at tile 0. The per-tile (indices, data) blocks come
+    pre-split by ``core.tiling.build_ell_col_plan`` so index arrays stay
+    dense and tile-local.
 """
 from __future__ import annotations
 
@@ -55,3 +66,59 @@ def ell_spmv(indices: jnp.ndarray, data: jnp.ndarray, x: jnp.ndarray,
         interpret=interpret,
     )(x, idx_pad, dat_pad)
     return y[:nrows].astype(data.dtype)
+
+
+def _kernel_tiled(x_ref, idx_ref, dat_ref, y_ref):
+    t = pl.program_id(1)
+    idx = idx_ref[0]
+    dat = dat_ref[0]
+    valid = idx >= 0
+    x = x_ref[...]
+    gathered = jnp.take(x, jnp.where(valid, idx, 0).astype(jnp.int32), axis=0)
+    acc = jnp.sum(
+        jnp.where(valid, dat.astype(jnp.float32) * gathered.astype(jnp.float32), 0.0),
+        axis=1)
+
+    @pl.when(t == 0)
+    def _init():
+        y_ref[...] = acc.astype(y_ref.dtype)
+
+    @pl.when(t != 0)
+    def _acc():
+        y_ref[...] += acc.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("col_tile", "block_rows", "interpret"))
+def ell_spmv_tiled(idx_t: jnp.ndarray, dat_t: jnp.ndarray, x: jnp.ndarray,
+                   col_tile: int, block_rows: int = 256,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x over per-column-tile ELL blocks.
+
+    idx_t/dat_t: (ntiles, nrows, W) with *tile-local* column ids (-1 pad),
+    x: (ncols,). The column-tile grid axis is last, hence sequential on TPU:
+    the (block_rows,) y block stays resident while partials accumulate.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ntiles, nrows, width = idx_t.shape
+    br = min(block_rows, max(8, nrows))
+    nrows_pad = -(-nrows // br) * br
+    grid = nrows_pad // br
+
+    idx_pad = jnp.full((ntiles, nrows_pad, width), -1, jnp.int32).at[:, :nrows].set(idx_t)
+    dat_pad = jnp.zeros((ntiles, nrows_pad, width), dat_t.dtype).at[:, :nrows].set(dat_t)
+    x_pad = jnp.zeros((ntiles * col_tile,), x.dtype).at[: x.shape[0]].set(x)
+
+    y = pl.pallas_call(
+        _kernel_tiled,
+        grid=(grid, ntiles),
+        in_specs=[
+            pl.BlockSpec((col_tile,), lambda i, t: (t,)),
+            pl.BlockSpec((1, br, width), lambda i, t: (t, i, 0)),
+            pl.BlockSpec((1, br, width), lambda i, t: (t, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i, t: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nrows_pad,), jnp.float32),
+        interpret=interpret,
+    )(x_pad, idx_pad, dat_pad)
+    return y[:nrows].astype(dat_t.dtype)

@@ -6,89 +6,197 @@ Device-fit rules mirror the checks Morpheus's FPGA backend applies
 each registration carries a ``supports(A, policy)`` capability predicate
 consulted by ``core.spmv`` dispatch, which falls back down the policy's
 backend chain (normally to ``plain``) instead of each kernel hiding an
-ad-hoc guard. The thresholds come from the ``ExecutionPolicy`` — resident-x
-strategies keep x (f32) plus a couple of tiles in VMEM, the COO one-hot
-kernel materialises an (nrows, tile) window.
+ad-hoc guard.
+
+Every format now has two Pallas strategies and the wrapper picks per call
+(``needs_policy=True`` registrations receive the policy):
+
+  - **resident**: x stays in VMEM for the whole kernel; chosen when the
+    format's resident footprint fits ``policy.resident_cols()``.
+  - **column-tiled**: the container carries a :class:`~repro.core.formats.
+    KernelPlan` (built at convert time) whose per-tile arrays stream x
+    through VMEM tile by tile — the plan's presence and geometry are static
+    aux data, so the predicates stay trace-safe and the kernels jit cleanly.
+
+``csr`` dispatches through its cached SELL-C-σ view (the ``"scs"`` plan) —
+the paper's baseline format no longer falls off the Pallas backend.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.formats import BSR, COO, DIA, ELL, SELL
+from repro.core.formats import BSR, COO, CSR, DIA, ELL, SELL
 from repro.core.spmv import register_masked_spmv, register_spmm, register_spmv
 
 from .bsr_spmm import bsr_spmm
-from .coo_spmv import coo_spmv, scoo_spmv, build_scoo
-from .dia_spmv import dia_spmv
-from .ell_spmv import ell_spmv
+from .coo_spmv import coo_spmv, scoo_spmv_tiled
+from .dia_spmv import dia_spmv, dia_spmv_tiled
+from .ell_spmv import ell_spmv, ell_spmv_tiled
+from .sell_spmv import scs_spmv_from_plan
 
 
 # --------------------------------------------------- capability predicates ----
 
-def _dia_fits(A: DIA, policy) -> bool:
-    # x + per-diagonal shifted windows resident in VMEM
-    return A.shape[1] + 2 * A.shape[0] <= 4 * policy.max_resident_cols
+
+def _plan_ok(A, policy, kind: str) -> bool:
+    """A column-tile plan of ``kind`` whose tile fits the policy's budget.
+    Static metadata only — safe under jit tracing."""
+    p = A.plan
+    return p is not None and p.kind == kind and p.ct <= policy.resident_cols()
 
 
-def _ell_fits(A: ELL, policy) -> bool:
-    return A.shape[1] <= policy.max_resident_cols
+def _dia_extent(A: DIA) -> int | None:
+    """Static ``max|offset|``: the aux-metadata bound ``to_dia`` records
+    (trace-safe — dispatch stays identical inside and outside jit), else
+    computed from concrete offsets; ``None`` when neither is available and
+    the conservative shape bound applies."""
+    if A.extent is not None:
+        return int(A.extent)
+    offs = A.offsets
+    if isinstance(offs, jax.core.Tracer):
+        return None
+    o = np.asarray(offs)
+    return int(np.abs(o).max()) if o.size else 0
 
 
-def _coo_fits(A: COO, policy) -> bool:
+def _dia_resident(A: DIA, policy) -> bool:
+    # x + the shifted-window padding resident in VMEM; the padding is the
+    # actual offset extent when known (wide-but-thin band matrices fit),
+    # the worst-case row count when traced
+    ext = _dia_extent(A)
+    pad = A.shape[0] if ext is None else ext
+    return A.shape[1] + 2 * pad <= 4 * policy.resident_cols()
+
+
+def _dia_ok(A: DIA, policy) -> bool:
+    return _dia_resident(A, policy) or _plan_ok(A, policy, "dia-cols")
+
+
+def _ell_resident(A: ELL, policy) -> bool:
+    return A.shape[1] <= policy.resident_cols()
+
+
+def _ell_ok(A: ELL, policy) -> bool:
+    return _ell_resident(A, policy) or _plan_ok(A, policy, "ell-cols")
+
+
+def _coo_resident(A: COO, policy) -> bool:
     # full-window mode: one-hot window = all rows; jit-friendly but VMEM-bound
-    return A.shape[0] <= policy.max_onehot_rows and A.shape[1] <= policy.max_resident_cols
+    return (A.shape[0] <= policy.max_onehot_rows
+            and A.shape[1] <= policy.resident_cols())
 
 
-def _sell_concrete(A: SELL, policy) -> bool:
-    # SCOO rebuild needs concrete arrays (the handle path); reject under trace
-    return not isinstance(A.data, jax.core.Tracer)
+def _coo_ok(A: COO, policy) -> bool:
+    return _coo_resident(A, policy) or _plan_ok(A, policy, "coo-cols")
+
+
+def _scs_ok(A, policy) -> bool:
+    # sell/csr run the native SELL-C-σ stream cached at convert time; the
+    # static plan check replaces the old concrete-arrays-only restriction,
+    # so the kernel now runs under jit
+    return _plan_ok(A, policy, "scs")
+
+
+def pallas_strategy(A, policy) -> str | None:
+    """Which Pallas strategy dispatch would run for ``A`` under ``policy``:
+    ``"resident"``, ``"tiled"``, or ``None`` (predicate rejects — dispatch
+    falls down the chain). The introspection twin of the wrappers below;
+    ``benchmarks/spmv_bench.py`` records it per entry."""
+    fmt = A.format
+    if fmt == "dia":
+        if _dia_resident(A, policy):
+            return "resident"
+        return "tiled" if _plan_ok(A, policy, "dia-cols") else None
+    if fmt == "ell":
+        if _ell_resident(A, policy):
+            return "resident"
+        return "tiled" if _plan_ok(A, policy, "ell-cols") else None
+    if fmt == "coo":
+        if _coo_resident(A, policy):
+            return "resident"
+        return "tiled" if _plan_ok(A, policy, "coo-cols") else None
+    if fmt in ("csr", "sell"):
+        if not _scs_ok(A, policy):
+            return None
+        return "tiled" if A.plan.ntiles > 1 else "resident"
+    return None
 
 
 # ------------------------------------------------------------ registrations ----
 
-@register_spmv("dia", "pallas", supports=_dia_fits)
-def dia_spmv_pallas(A: DIA, x):
-    return dia_spmv(A.offsets, A.data, x)
+
+# The needs_policy wrappers branch on pallas_strategy — the same function the
+# benchmark trajectory records — so the dispatched strategy and the reported
+# one cannot drift apart.
 
 
-@register_spmv("ell", "pallas", supports=_ell_fits)
-def ell_spmv_pallas(A: ELL, x):
-    return ell_spmv(A.indices, A.data, x)
+@register_spmv("dia", "pallas", supports=_dia_ok, needs_policy=True)
+def dia_spmv_pallas(A: DIA, x, policy):
+    if pallas_strategy(A, policy) == "resident":
+        return dia_spmv(A.offsets, A.data, x, extent=_dia_extent(A))
+    offs_t, dat_w = A.plan.arrays
+    return dia_spmv_tiled(offs_t, dat_w, x, nrows=A.shape[0], col_tile=A.plan.ct)
 
 
-@register_spmv("coo", "pallas", supports=_coo_fits)
-def coo_spmv_pallas(A: COO, x):
-    return coo_spmv(A.row, A.col, A.val, x, nrows=A.shape[0])
+@register_spmv("ell", "pallas", supports=_ell_ok, needs_policy=True)
+def ell_spmv_pallas(A: ELL, x, policy):
+    if pallas_strategy(A, policy) == "resident":
+        return ell_spmv(A.indices, A.data, x)
+    idx_t, dat_t = A.plan.arrays
+    return ell_spmv_tiled(idx_t, dat_t, x, col_tile=A.plan.ct)
 
 
-@register_spmv("sell", "pallas", supports=_sell_concrete)
+@register_spmv("coo", "pallas", supports=_coo_ok, needs_policy=True)
+def coo_spmv_pallas(A: COO, x, policy):
+    if pallas_strategy(A, policy) == "resident":
+        return coo_spmv(A.row, A.col, A.val, x, nrows=A.shape[0])
+    row, col, val, sid, ctile = A.plan.arrays
+    ct, ntiles, slice_rows, tile = (int(v) for v in A.plan.meta)
+    return scoo_spmv_tiled(row, col, val, sid, ctile, x, nrows=A.shape[0],
+                           col_tile=ct, ntiles=ntiles,
+                           slice_rows=slice_rows, tile=tile)
+
+
+@register_spmv("sell", "pallas", supports=_scs_ok)
 def sell_spmv_pallas(A: SELL, x):
-    """SELL runs through the sliced-COO kernel: same slice-major layout idea
-    (C-row slices), expressed as SCOO tiles."""
-    import numpy as np
+    """Native SELL-C-σ kernel over the convert-time ``"scs"`` stream (row-
+    sorted slices, scalar-prefetched tile/window steering)."""
+    return scs_spmv_from_plan(A.plan, x, nrows=A.shape[0])
 
-    rows = np.asarray(A.entry_rows())
-    valid = np.asarray(A.indices) >= 0
-    r, c, v = rows[valid], np.asarray(A.indices)[valid], np.asarray(A.data)[valid]
-    sr = 512
-    rr, cc, vv, sid = build_scoo(r, c, v, A.shape[0], slice_rows=sr)
-    return scoo_spmv(jnp.asarray(rr), jnp.asarray(cc), jnp.asarray(vv),
-                     jnp.asarray(sid), x, nrows=A.shape[0], slice_rows=sr)
+
+@register_spmv("csr", "pallas", supports=_scs_ok)
+def csr_spmv_pallas(A: CSR, x):
+    """CSR runs the same native SELL-C-σ kernel via its cached SCS view —
+    convert-time regularisation instead of a rowptr-walk kernel."""
+    return scs_spmv_from_plan(A.plan, x, nrows=A.shape[0])
 
 
 # Row-masked variants (multicolor SymGS colors): the mask is applied to the
 # *operand* — rows zeroed before the kernel contribute exactly zero — so the
 # hand-tiled kernels run unchanged and the masked dispatch stays on-backend.
 
-@register_masked_spmv("dia", "pallas", supports=_dia_fits)
-def dia_masked_spmv_pallas(A: DIA, x, row_mask):
-    return dia_spmv(A.offsets, jnp.where(row_mask[None, :], A.data, 0), x)
+
+@register_masked_spmv("dia", "pallas", supports=_dia_ok, needs_policy=True)
+def dia_masked_spmv_pallas(A: DIA, x, row_mask, policy):
+    if pallas_strategy(A, policy) == "resident":
+        return dia_spmv(A.offsets, jnp.where(row_mask[None, :], A.data, 0), x,
+                        extent=_dia_extent(A))
+    # tiled windows live in column coordinates, so rows can't be zeroed on
+    # the operand; mask the accumulated y instead (same contract, on-backend)
+    offs_t, dat_w = A.plan.arrays
+    y = dia_spmv_tiled(offs_t, dat_w, x, nrows=A.shape[0], col_tile=A.plan.ct)
+    return jnp.where(row_mask, y, 0)
 
 
-@register_masked_spmv("ell", "pallas", supports=_ell_fits)
-def ell_masked_spmv_pallas(A: ELL, x, row_mask):
-    return ell_spmv(A.indices, jnp.where(row_mask[:, None], A.data, 0), x)
+@register_masked_spmv("ell", "pallas", supports=_ell_ok, needs_policy=True)
+def ell_masked_spmv_pallas(A: ELL, x, row_mask, policy):
+    if pallas_strategy(A, policy) == "resident":
+        return ell_spmv(A.indices, jnp.where(row_mask[:, None], A.data, 0), x)
+    idx_t, dat_t = A.plan.arrays
+    return ell_spmv_tiled(idx_t, jnp.where(row_mask[None, :, None], dat_t, 0),
+                          x, col_tile=A.plan.ct)
 
 
 @register_spmm("bsr", "pallas")

@@ -1,0 +1,112 @@
+"""Native SELL-C-σ SpMV Pallas kernel — the CSR fast path on wide vectors.
+
+Kreutzer et al.'s SELL-C-σ (PAPERS.md) regularises CSR for wide SIMD: rows
+are sorted by nnz inside σ-windows and grouped into slices of C lanes, so a
+slice's entries form dense C-wide *j-steps* (one vector per within-row
+position) with almost no padding. This kernel runs that layout directly:
+
+  - the grid walks blocks of ``jb`` j-steps; each block's (jb, C) index/data
+    panels are dense (``core.tiling.build_scs_plan`` pads per bucket);
+  - scalar-prefetched ``btile``/``bwin`` arrays steer the *block specs*: which
+    (ct,) column tile of x the block gathers from, and which (sw, C) window
+    of the permuted output it accumulates into — the PrefetchScalarGridSpec
+    mechanism ``dia_spmv`` already uses, applied to both sides;
+  - same-window products are combined on the MXU with a (jb, sw) one-hot
+    local-slice contraction (the COO kernel's ``svcmpeq`` translation, at
+    slice rather than row granularity);
+  - blocks are window-major, column-tile-minor, so output windows see
+    contiguous runs: "window changed" initialises, otherwise accumulate.
+    Column tiling therefore costs nothing extra here — a resident matrix is
+    simply the ``ntiles == 1`` special case of the same kernel.
+
+``csr``×``pallas`` dispatches through this kernel via the ``"scs"``
+KernelPlan cached on the CSR container at convert time (its SELL-C-σ view),
+which is what closes the paper's baseline-format gap in the dispatch table.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(btile_ref, bwin_ref, lsl_ref, x_ref, idx_ref, dat_ref, y_ref,
+            *, jb: int, sw: int, C: int):
+    b = pl.program_id(0)
+    idx = idx_ref[...]            # (jb, C) tile-local columns, -1 = padding
+    dat = dat_ref[...]
+    lsl = lsl_ref[...]            # (jb,) window-local slice of each j-step
+    valid = idx >= 0
+    x = x_ref[...]                # this block's (ct,) x tile
+    gathered = jnp.take(x, jnp.where(valid, idx, 0).astype(jnp.int32), axis=0)
+    prod = jnp.where(valid, dat.astype(jnp.float32) * gathered.astype(jnp.float32),
+                     0.0)         # (jb, C)
+    onehot = (lsl[:, None] == jax.lax.broadcasted_iota(jnp.int32, (jb, sw), 1))
+    contrib = jnp.einsum("js,jc->sc", onehot.astype(jnp.float32), prod)  # (sw, C)
+
+    prev = bwin_ref[jnp.maximum(b - 1, 0)]
+    fresh = (b == 0) | (prev != bwin_ref[b])
+
+    @pl.when(fresh)
+    def _init():
+        y_ref[...] = contrib.astype(y_ref.dtype)
+
+    @pl.when(jnp.logical_not(fresh))
+    def _acc():
+        y_ref[...] += contrib.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("nrows", "col_tile", "ntiles",
+                                             "C", "sw", "jb", "nwin", "interpret"))
+def scs_spmv(btile, bwin, lsl, idx2, dat2, perm, x, *, nrows: int,
+             col_tile: int, ntiles: int, C: int, sw: int, jb: int, nwin: int,
+             interpret: bool | None = None) -> jnp.ndarray:
+    """y = A @ x over a ``build_scs_plan`` SELL-C-σ stream.
+
+    Args:
+        btile/bwin: (B,) int32 per-block column tile / output window.
+        lsl: (B*jb,) int32 window-local slice id per j-step.
+        idx2/dat2: (B*jb, C) tile-local columns (-1 pad) / values.
+        perm: (nrows_pad,) σ-sorted row permutation (pad rows = nrows).
+        x: (ncols,) dense vector.
+
+    Returns (nrows,) in original row order.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    nblocks = btile.shape[0]
+    x_pad = jnp.zeros((ntiles * col_tile,), x.dtype).at[: x.shape[0]].set(x)
+
+    y2 = pl.pallas_call(
+        functools.partial(_kernel, jb=jb, sw=sw, C=C),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(nblocks,),
+            in_specs=[
+                pl.BlockSpec((jb,), lambda b, bt, bw: (b,)),
+                pl.BlockSpec((col_tile,), lambda b, bt, bw: (bt[b],)),
+                pl.BlockSpec((jb, C), lambda b, bt, bw: (b, 0)),
+                pl.BlockSpec((jb, C), lambda b, bt, bw: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((sw, C), lambda b, bt, bw: (bw[b], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nwin * sw, C), jnp.float32),
+        interpret=interpret,
+    )(btile, bwin, lsl, x_pad, idx2, dat2)
+
+    # un-permute: y2.reshape(-1)[p] is the σ-sorted row at position p
+    yp = y2.reshape(-1)[: perm.shape[0]]
+    y = jnp.zeros((nrows + 1,), jnp.float32).at[jnp.minimum(perm, nrows)].set(yp)
+    return y[:nrows].astype(dat2.dtype)
+
+
+def scs_spmv_from_plan(plan, x, nrows: int, interpret: bool | None = None):
+    """Dispatch-table adapter: run :func:`scs_spmv` from a ``"scs"`` plan."""
+    btile, bwin, lsl, idx2, dat2, perm = plan.arrays
+    ct, ntiles, C, sw, jb, nwin = (int(v) for v in plan.meta)
+    return scs_spmv(btile, bwin, lsl, idx2, dat2, perm, x, nrows=nrows,
+                    col_tile=ct, ntiles=ntiles, C=C, sw=sw, jb=jb, nwin=nwin,
+                    interpret=interpret)

@@ -36,10 +36,6 @@ OPS = ("spmv", "spmm", "masked_spmv")
 # workflow when adding/removing kernels is documented in
 # docs/architecture.md ("Conformance-grid gap policy").
 KNOWN_GAPS = {
-    ("csr", "pallas"): "no Pallas CSR SpMV is registered: per-row "
-                       "variable-length gathers need a rowptr-walk kernel; "
-                       "run csr under plain/dense, or asformat('sell') for "
-                       "the Pallas sliced-ELL kernel",
     ("dense", "pallas"): "dense containers are deliberately the XLA/vendor "
                          "path (the ArmPL analogue); a hand-written Pallas "
                          "matmul would duplicate XLA's",

@@ -1,0 +1,152 @@
+"""Column-tiled ("large matrix") Pallas lane: policies with a tiny
+``max_resident_cols`` force the tiled strategies on small matrices, so the
+whole large-n machinery — convert-time KernelPlans, strict tiled dispatch,
+VMEM-budget tile selection, jit safety — runs in the fast suite against the
+``to_dense`` oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (
+    DispatchKey,
+    ExecutionPolicy,
+    from_dense,
+    masked_spmv,
+    select_spmv,
+    spmm,
+    spmv,
+)
+from repro.core import matrices as M
+from repro.core.tiling import select_col_tile
+
+FORMATS = ["coo", "csr", "dia", "ell", "sell"]
+
+#: every format's resident predicate rejects ncols=224 under this cap
+TILED = ExecutionPolicy(backends=("pallas", "plain"), max_resident_cols=48)
+STRICT = TILED.replace(backends=("pallas",), allow_fallback=False)
+COL_TILE = 32
+
+
+def _matrix(n=160, m=224, seed=0):
+    """Rectangular band + random mix: diagonals for DIA, scattered entries
+    for the gather formats, rows of uneven length for ELL/SELL padding."""
+    rng = np.random.default_rng(seed)
+    s = sp.random(n, m, density=0.05, random_state=rng, format="csr")
+    s.data = rng.standard_normal(len(s.data))
+    band = sp.diags(
+        [rng.standard_normal(max(0, min(n, m - o)) if o >= 0 else min(n + o, m))
+         for o in (-2, 0, 3)], [-2, 0, 3], shape=(n, m))
+    return (s + band).tocsr()
+
+
+S = _matrix()
+X = np.random.default_rng(1).standard_normal(S.shape[1]).astype(np.float32)
+XM = np.random.default_rng(2).standard_normal((S.shape[1], 3)).astype(np.float32)
+MASK = np.random.default_rng(3).random(S.shape[0]) < 0.5
+
+
+def _tiled_container(fmt):
+    A = from_dense(S, fmt, col_tile=COL_TILE)
+    assert A.plan is not None and A.plan.ct == COL_TILE
+    return A, np.asarray(A.to_dense(), np.float32)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_tiled_strict_matches_oracle(fmt):
+    """ncols > max_resident_cols: the *strict* pallas policy must run the
+    column-tiled kernel and match the container's dense oracle."""
+    A, dense = _tiled_container(fmt)
+    got = np.asarray(spmv(A, jnp.asarray(X), policy=STRICT))
+    np.testing.assert_allclose(got, dense @ X, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_dispatcher_selects_native_not_fallback(fmt):
+    """Under the fallback-allowed chain the selected entry is still the
+    Pallas kernel — the old silent fall-back-to-plain hole is closed."""
+    A, _ = _tiled_container(fmt)
+    assert select_spmv(A, TILED).key == DispatchKey(fmt, "pallas")
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_tiled_spmm_and_masked(fmt):
+    A, dense = _tiled_container(fmt)
+    Y = np.asarray(spmm(A, jnp.asarray(XM), policy=STRICT))
+    np.testing.assert_allclose(Y, dense @ XM, rtol=2e-4, atol=2e-4)
+    ym = np.asarray(masked_spmv(A, jnp.asarray(X), jnp.asarray(MASK), policy=STRICT))
+    np.testing.assert_allclose(ym, np.where(MASK, dense @ X, 0), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("fmt", ["csr", "sell", "ell"])
+def test_tiled_dispatch_is_jit_safe(fmt):
+    """KernelPlans are pytree leaves + static geometry: strict tiled dispatch
+    works *inside* jit (the old sell x pallas SCOO rebuild could not)."""
+    A, dense = _tiled_container(fmt)
+    f = jax.jit(lambda A, x: spmv(A, x, policy=STRICT))
+    got = np.asarray(f(A, jnp.asarray(X)))
+    np.testing.assert_allclose(got, dense @ X, rtol=2e-4, atol=2e-4)
+
+
+def test_sell_pallas_runs_under_jit_default_policy():
+    """The _sell_concrete regression: sell x pallas used to silently fall
+    back to plain under trace because the SCOO layout was rebuilt from
+    concrete arrays per call. The plan is cached at construction now."""
+    A = from_dense(S, "sell")
+    strict = ExecutionPolicy(backends=("pallas",), allow_fallback=False)
+    got = np.asarray(jax.jit(lambda A, x: spmv(A, x, policy=strict))(A, jnp.asarray(X)))
+    dense = np.asarray(A.to_dense(), np.float32)
+    np.testing.assert_allclose(got, dense @ X, rtol=2e-4, atol=2e-4)
+
+
+def test_csr_pallas_is_not_a_known_gap():
+    """The conformance grid must exercise csr x pallas as a real cell."""
+    from tests.test_conformance import KNOWN_GAPS
+
+    assert ("csr", "pallas") not in KNOWN_GAPS
+
+
+def test_dia_extent_accepts_wide_thin_bands():
+    """The tightened _dia_fits: a band matrix whose worst-case bound
+    (ncols + 2*nrows) busts the budget but whose actual offset extent is
+    tiny must stay on the resident Pallas path."""
+    n = 3000
+    s = sp.diags([np.ones(n - 1), 2 * np.ones(n), np.ones(n - 1)],
+                 [-1, 0, 1], shape=(n, n)).tocsr()
+    A = from_dense(s, "dia")
+    pol = ExecutionPolicy(backends=("pallas", "plain"), max_resident_cols=1024)
+    # old bound: 3000 + 2*3000 = 9000 > 4*1024 -> plain; extent=1 fits
+    assert select_spmv(A, pol).key == DispatchKey("dia", "pallas")
+    x = np.random.default_rng(4).standard_normal(n).astype(np.float32)
+    got = np.asarray(spmv(A, jnp.asarray(x), policy=pol.replace(
+        backends=("pallas",), allow_fallback=False)))
+    np.testing.assert_allclose(got, s @ x, rtol=2e-4, atol=2e-4)
+
+
+def test_policy_col_tile_model():
+    """Tile selection: resident matrices need no tile; larger ones get an
+    8-lane-aligned tile no bigger than half the resident budget."""
+    pol = ExecutionPolicy(max_resident_cols=100)
+    assert pol.col_tile(80) is None
+    t = pol.col_tile(1000)
+    assert t is not None and t % 8 == 0 and t <= 50 + 8
+    # the module-level default agrees with the default policy
+    assert select_col_tile(80, max_resident_cols=100) is None
+    # vmem budget caps resident cols even when max_resident_cols is loose
+    tight = ExecutionPolicy(vmem_budget_bytes=16 * 1024)
+    assert tight.resident_cols() == 1024
+    assert tight.col_tile(4096) is not None
+
+
+def test_autotune_builds_tiled_candidates():
+    """tune() under a small-budget policy races *tiled* pallas candidates
+    (the plan is built to the policy's tile) instead of skipping them."""
+    from repro.core.autotune import autotune_spmv
+
+    res = autotune_spmv(S, candidates=[("ell", "pallas"), ("csr", "pallas")],
+                        iters=2, warmup=1, policy=STRICT)
+    assert res.table, res.skipped
+    got = np.asarray(spmv(res.matrix, jnp.asarray(X), policy=STRICT))
+    dense = np.asarray(res.matrix.to_dense(), np.float32)
+    np.testing.assert_allclose(got, dense @ X, rtol=2e-4, atol=2e-4)

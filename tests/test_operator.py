@@ -101,23 +101,26 @@ def test_policy_no_fallback_raises():
     with pytest.raises(BackendUnsupportedError):
         select_spmv(A.container, strict)
     # uniform strictness: an *unregistered* preferred backend raises too
-    # (csr has no pallas SpMV), instead of silently walking the chain
-    csr = as_operator(S, "csr")
+    # (dense deliberately has no pallas SpMV), instead of silently walking
+    # the chain
+    dn = as_operator(S, "dense")
     strict2 = ExecutionPolicy(backends=("pallas", "plain"), allow_fallback=False)
     with pytest.raises(BackendUnsupportedError):
-        select_spmv(csr.container, strict2)
-    # ...and SpMM honours allow_fallback through the vmapped-SpMV path
+        select_spmv(dn.container, strict2)
+    # ...and a *registered-but-unsupported* one raises through the SpMM
+    # vmapped-SpMV path (csr without its SCS plan rejects pallas)
+    csr_noplan = as_operator(from_dense(S, "csr", plan=False))
     Xm = jnp.ones((128, 3), jnp.float32)
     with pytest.raises(BackendUnsupportedError):
-        csr.with_policy(strict2) @ Xm
+        csr_noplan.with_policy(strict2) @ Xm
     # using(..., fallback=False) is strict too: both knobs move together
-    strict_op = csr.using("pallas", fallback=False)
+    strict_op = csr_noplan.using("pallas", fallback=False)
     assert strict_op.policy.allow_fallback is False
     with pytest.raises(BackendUnsupportedError):
         strict_op @ X1
     with pytest.raises(BackendUnsupportedError):
         with use_backend("pallas", fallback=False):
-            csr @ X1
+            csr_noplan @ X1
 
 
 def test_tune_preserves_policy_limits():
@@ -130,7 +133,7 @@ def test_tune_preserves_policy_limits():
 
 
 def test_unregistered_chain_raises_keyerror():
-    A = as_operator(S, "csr")
+    A = as_operator(S, "dense")  # dense x pallas is deliberately unregistered
     with pytest.raises(KeyError):
         A.with_policy(ExecutionPolicy(backends=("pallas",))) @ X1
 
@@ -188,7 +191,7 @@ def test_shim_accepts_operator_and_rejects_unknown_impl():
     y = np.asarray(spmv(A, X1, "plain"))  # operators pass through the shim
     np.testing.assert_allclose(y, REF, rtol=1e-4, atol=1e-4)
     with pytest.raises(KeyError):
-        spmv(A, X1, "pallas")  # never registered for csr — legacy strictness
+        spmv(as_operator(S, "dense"), X1, "pallas")  # never registered — legacy strictness
 
 
 def test_shim_guard_fallback_matches_declarative_dispatch():

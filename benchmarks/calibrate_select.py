@@ -1,0 +1,141 @@
+"""Calibrate the zero-run selector's CPU cost table from measurements.
+
+``repro.core.select`` ranks (format, backend) candidates with the cost
+model ``est_us = a + b*krows + c*kentries + d*krows*kentries``
+(``krows = nrows/1000``, ``kentries = stored_entries/1000``) per
+(format, backend, strategy) cell. This script *fits* those coefficients on
+the current machine: it measures run-first autotune tables over the small
+synthetic suite plus larger banded/random matrices (resident and
+column-tiled Pallas strategies both exercised), solves a non-negative least
+squares per cell, reports the fitted model's predicted-vs-measured winner
+accuracy, and prints a ready-to-paste ``COST["cpu"]`` literal.
+
+  PYTHONPATH=src python -m benchmarks.calibrate_select [--fast]
+
+Regenerate after kernel or strategy changes; the selector regression test
+(tests/test_select.py) will tell you when the table has drifted from
+reality.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import DEFAULT_POLICY, ExecutionPolicy, autotune_spmv
+from repro.core import matrices as M
+from repro.core import select
+from repro.core.features import extract_features
+
+#: larger-size calibration matrices, measured under a small resident cap so
+#: the >cap sizes exercise the column-tiled Pallas strategies
+LARGE_CAP = 1024
+LARGE_SIZES = (512, 1024, 4096)
+
+
+def _large_suite(n: int):
+    from benchmarks.spmv_bench import _suite
+
+    return _suite(n)
+
+
+#: tiny resident cap: forces the column-tiled Pallas strategies on the small
+#: suite, so the tiled fit has low-end anchor points too (policies with small
+#: VMEM budgets are legitimate selector inputs — tests use them)
+TINY_CAP = 48
+
+
+def collect(iters: int = 5, warmup: int = 2, fast: bool = False):
+    """[(matrix, policy_name, features, {(fmt, impl): t_us})] measurements."""
+    cells = []
+    pol_tiny = ExecutionPolicy(max_resident_cols=TINY_CAP)
+    for name, s in M.suite("small"):
+        f = extract_features(s)
+        res = autotune_spmv(s, iters=iters, warmup=warmup)
+        cells.append((name, "default", DEFAULT_POLICY, f, dict(res.table)))
+        if name.startswith(("banded_b3", "random_d01", "powerlaw")):
+            res = autotune_spmv(s, iters=iters, warmup=warmup, policy=pol_tiny)
+            cells.append((name, f"cap{TINY_CAP}", pol_tiny, f, dict(res.table)))
+    pol = ExecutionPolicy(max_resident_cols=LARGE_CAP)
+    sizes = LARGE_SIZES[:2] if fast else LARGE_SIZES
+    for n in sizes:
+        for name, s in _large_suite(n):
+            f = extract_features(s)
+            res = autotune_spmv(s, iters=max(3, iters - 2), warmup=warmup,
+                                policy=pol)
+            cells.append((name, f"cap{LARGE_CAP}", pol, f, dict(res.table)))
+    return cells
+
+
+def fit(cells) -> Dict[Tuple[str, str, str], Tuple[float, float, float, float]]:
+    """Per-(fmt, impl, strategy) NNLS of
+    t ~ a + b*krows + c*kentries + d*krows*kentries."""
+    from scipy.optimize import nnls
+
+    groups: Dict[Tuple[str, str, str], List[Tuple[float, float, float]]] = (
+        collections.defaultdict(list))
+    for _name, _pname, pol, f, table in cells:
+        for (fmt, impl), t in table.items():
+            strat = (select.pallas_strategy_for(f, pol, fmt)
+                     if impl == "pallas" else "")
+            groups[(fmt, impl, strat)].append(
+                (f.nrows / 1e3, select.storage_entries(f, fmt) / 1e3, t))
+    out = {}
+    for key, pts in sorted(groups.items()):
+        rows = np.array([p[0] for p in pts])
+        ents = np.array([p[1] for p in pts])
+        ts = np.array([p[2] for p in pts])
+        A = np.stack([np.ones_like(rows), rows, ents, rows * ents], axis=1)
+        # weight by 1/t: the fit must order the fast cells correctly, the
+        # slow cells only need to be *large*
+        w = 1.0 / np.maximum(ts, 1.0)
+        coef, _ = nnls(A * w[:, None], ts * w)
+        out[key] = tuple(round(float(x), 3) for x in coef)
+    return out
+
+
+def evaluate(cells, table) -> Dict[int, float]:
+    """Top-k coverage of the measured winner under a fitted cost table."""
+    cover = collections.defaultdict(int)
+    misses = []
+    for name, _pname, pol, f, measured in cells:
+        best = min(measured.items(), key=lambda kv: kv[1])[0]
+        old = select.COST["cpu"]
+        select.COST["cpu"] = table
+        try:
+            preds = select.rank(f, policy=pol, platform="cpu",
+                                candidates=list(measured))
+        finally:
+            select.COST["cpu"] = old
+        order = [(p.key.format, p.key.backend) for p in preds]
+        pos = order.index(best) if best in order else len(order)
+        for k in (1, 2, 3, 4, 5):
+            cover[k] += pos < k
+        if pos != 0:
+            misses.append((name, best, order[:3]))
+    n = len(cells)
+    for name, best, top3 in misses:
+        print(f"  miss: {name:22s} measured={best} predicted_top3={top3}")
+    return {k: v / n for k, v in cover.items()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the 4096 (tiled) calibration points")
+    args = ap.parse_args()
+    cells = collect(fast=args.fast)
+    table = fit(cells)
+    print("COST['cpu'] = {")
+    for key, coef in sorted(table.items()):
+        print(f"    {key!r}: {coef!r},")
+    print("}")
+    cov = evaluate(cells, table)
+    print("top-k coverage of the measured winner: "
+          + "  ".join(f"k={k}: {v:.0%}" for k, v in sorted(cov.items())))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,18 @@
 """Run every paper-table/figure benchmark. Prints name,us_per_call,derived CSV
 and writes the machine-readable SpMV perf trajectory to BENCH_spmv.json at the
-repo root (per format x backend x size: median/p10 seconds, GFLOP/s, and a
-fallback-vs-native flag — the cross-PR perf record).
+repo root (per format x backend x size: median/p10 seconds, GFLOP/s, a
+fallback-vs-native flag, and the zero-run selector's predicted
+format/backend per matrix with a predicted-vs-measured accuracy summary —
+the cross-PR perf + prediction record).
 
   PYTHONPATH=src python -m benchmarks.run [--scale quick|bench] [--only fig4]
   PYTHONPATH=src python -m benchmarks.run --smoke   # CI: spmv grid only;
       exits non-zero if any expected-native cell silently fell back
+  PYTHONPATH=src python -m benchmarks.run --corpus DIR [--accuracy-floor F]
+      # Matrix Market corpus sweep: per matrix, the selector's zero-run
+      # prediction vs the run-first autotune winner, recorded into the
+      # "corpus" section of BENCH_spmv.json; exits non-zero when prediction
+      # accuracy falls below the floor (the CI corpus-smoke gate)
 """
 import argparse
 import importlib
@@ -30,20 +37,40 @@ REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_spmv.json")
 
 
+def _load_doc(path: str) -> dict:
+    """Existing BENCH json (so one mode's write keeps the other's section),
+    or a fresh doc when missing/corrupt."""
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            pass
+    return {}
+
+
 def _write_json(path: str, scale: str, entries) -> None:
     import jax
 
-    doc = {
-        "schema": 1,
+    from benchmarks.spmv_bench import prediction_summary
+
+    doc = _load_doc(path)  # keep sections other modes recorded (corpus)
+    doc.update({
+        "schema": 2,
         "scale": scale,
         "jax_backend": jax.default_backend(),
         "interpret": jax.default_backend() != "tpu",
         "python": platform.python_version(),
         "entries": entries,
-    }
+        "prediction": prediction_summary(entries),
+    })
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
-    print(f"# wrote {len(entries)} entries to {path}", file=sys.stderr)
+    acc = doc["prediction"]
+    print(f"# wrote {len(entries)} entries to {path} "
+          f"(prediction accuracy {acc['accuracy']:.0%} strict, "
+          f"{acc['accuracy_near']:.0%} near, {acc['matrices']} matrices)",
+          file=sys.stderr)
 
 
 def _check_native(entries) -> int:
@@ -55,6 +82,75 @@ def _check_native(entries) -> int:
     return len(bad)
 
 
+def run_corpus(corpus_dir: str, json_path: str, iters: int = 5,
+               warmup: int = 2) -> dict:
+    """Predicted-vs-measured winner per Matrix Market file in ``corpus_dir``.
+
+    Each matrix gets one record: its structural features, the zero-run
+    selector's top prediction, the run-first autotune winner and table, and
+    whether they agree (strict, and 'near' — predicted cell measured within
+    25% of the winner, a statistical tie at CPU timer noise). The summary
+    lands in the ``corpus`` section of BENCH_spmv.json, next to (not
+    replacing) the synthetic-grid ``entries``.
+    """
+    from repro.core import autotune_spmv, extract_features, rank_formats
+    from repro.io import iter_corpus
+
+    records = []
+    n = agree = near = 0
+    for name, s in iter_corpus(corpus_dir):
+        feats = extract_features(s)
+        preds = rank_formats(feats)
+        if not preds:
+            continue
+        top = preds[0]
+        res = autotune_spmv(s, iters=iters, warmup=warmup)
+        pred_key = (top.key.format, top.key.backend)
+        ok = pred_key == (res.format, res.impl)
+        t_pred = res.table.get(pred_key)
+        ok_near = ok or (t_pred is not None and t_pred <= 1.25 * res.time_us)
+        n += 1
+        agree += ok
+        near += ok_near
+        records.append({
+            "matrix": name,
+            "nrows": feats.nrows, "ncols": feats.ncols, "nnz": feats.nnz,
+            "ndiags": feats.ndiags, "band_extent": feats.band_extent,
+            "rownnz_max": feats.rownnz_max,
+            "predicted_format": top.key.format,
+            "predicted_backend": top.key.backend,
+            "predicted_est_us": top.est_us,
+            "measured_format": res.format,
+            "measured_backend": res.impl,
+            "measured_us": res.time_us,
+            "table": {f"{f}/{i}": t for (f, i), t in res.table.items()},
+            "agree": bool(ok), "agree_near": bool(ok_near),
+        })
+        print(f"corpus/{name},{res.time_us:.2f},"
+              f"predicted={top.key.format}/{top.key.backend} "
+              f"measured={res.format}/{res.impl} agree={ok}")
+    # repo-relative when inside the repo: the committed BENCH_spmv.json must
+    # not churn with the machine (CI checkout path vs local clone)
+    abs_dir = os.path.abspath(corpus_dir)
+    rel = os.path.relpath(abs_dir, REPO_ROOT)
+    summary = {
+        "dir": rel.replace(os.sep, "/") if not rel.startswith("..") else abs_dir,
+        "matrices": n,
+        "accuracy": agree / n if n else 0.0,
+        "accuracy_near": near / n if n else 0.0,
+        "records": records,
+    }
+    doc = _load_doc(json_path)
+    doc["schema"] = 2
+    doc["corpus"] = summary
+    with open(json_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# corpus: {n} matrices, accuracy {summary['accuracy']:.0%} strict "
+          f"/ {summary['accuracy_near']:.0%} near -> {json_path}",
+          file=sys.stderr)
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="quick", choices=["quick", "bench"])
@@ -64,7 +160,24 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="spmv grid only at smoke scale; fail on unexpected "
                          "fallback (the CI benchmark gate)")
+    ap.add_argument("--corpus", default=None, metavar="DIR",
+                    help="Matrix Market corpus sweep: record the zero-run "
+                         "selector's predicted winner vs the run-first "
+                         "autotune winner per .mtx file")
+    ap.add_argument("--accuracy-floor", type=float, default=None,
+                    help="with --corpus: exit non-zero when 'near' prediction "
+                         "accuracy drops below this fraction (CI gate)")
     args = ap.parse_args()
+
+    if args.corpus:
+        summary = run_corpus(args.corpus, args.json)
+        if args.accuracy_floor is not None \
+                and summary["accuracy_near"] < args.accuracy_floor:
+            print(f"FAIL: corpus prediction accuracy "
+                  f"{summary['accuracy_near']:.0%} < floor "
+                  f"{args.accuracy_floor:.0%}", file=sys.stderr)
+            sys.exit(1)
+        return
 
     if args.smoke:
         from benchmarks import spmv_bench

@@ -21,7 +21,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExecutionPolicy, from_dense, select_spmv, spmv, structural_skip
+from repro.core import (
+    DispatchKey, ExecutionPolicy, extract_features, from_dense, rank_formats,
+    select_spmv, spmv, structural_skip,
+)
 from repro.core import matrices as M
 from repro.kernels.ops import pallas_strategy
 
@@ -70,6 +73,16 @@ def collect(scale: str = "quick"):
             s = s.tocsr()
             x = jnp.asarray(np.random.default_rng(2).standard_normal(n), jnp.float32)
             nnz = int(s.nnz)
+            # zero-run prediction over exactly the cells this grid measures —
+            # the per-matrix predicted-vs-measured record in BENCH_spmv.json
+            grid = [DispatchKey(f, b) for f in FORMATS
+                    if structural_skip(s, f) is None
+                    for b in ("plain", "pallas")]
+            preds = rank_formats(extract_features(s), policy=base,
+                                 candidates=grid)
+            pred_fmt, pred_backend = ((preds[0].key.format, preds[0].key.backend)
+                                      if preds else (None, None))
+            matrix_entries = []
             for fmt in FORMATS:
                 why = structural_skip(s, fmt)
                 if why is not None:
@@ -95,8 +108,10 @@ def collect(scale: str = "quick"):
                         "mode": (mode or "fallback") if backend == "pallas" else "n/a",
                         "median_s": med, "p10_s": float(np.percentile(ts, 10)),
                         "gflops": 2.0 * nnz / med / 1e9,
+                        "predicted_format": pred_fmt,
+                        "predicted_backend": pred_backend,
                     }
-                    entries.append(entry)
+                    matrix_entries.append(entry)
                     rows.append({
                         "name": f"spmv/{mat_name}/{fmt}/{backend}",
                         "us_per_call": med * 1e6,
@@ -104,7 +119,60 @@ def collect(scale: str = "quick"):
                                     f"mode={entry['mode']} "
                                     f"fallback={entry['fallback']}"),
                     })
+            # annotate the matrix's measured winner on its entries so the
+            # trajectory records predicted-vs-measured per matrix
+            if matrix_entries:
+                win = _winner(matrix_entries)
+                for e in matrix_entries:
+                    e["winner_format"] = win["format"]
+                    e["winner_backend"] = win["backend"]
+                entries.extend(matrix_entries)
     return rows, entries
+
+
+def _winner(group):
+    """Fastest *honestly-labeled* entry: cells that silently fell back
+    measured some other backend's kernel, so they cannot claim the win for
+    the requested one."""
+    honest = [e for e in group if not e.get("fallback")]
+    return min(honest or group, key=lambda e: e["median_s"])
+
+
+def prediction_summary(entries):
+    """Per-matrix predicted-vs-measured winner accuracy over ``entries``.
+
+    ``accuracy`` counts exact winner matches; ``accuracy_near`` also counts
+    predictions whose measured time is within 25% of the winner's (CPU
+    timer noise makes such cells statistical ties).
+    """
+    by_matrix = {}
+    for e in entries:
+        by_matrix.setdefault(e["matrix"], []).append(e)
+    n = agree = near = 0
+    per_matrix = {}
+    for name, group in sorted(by_matrix.items()):
+        win = _winner(group)
+        pred = (win["predicted_format"], win["predicted_backend"])
+        ok = pred == (win["format"], win["backend"])
+        t_pred = min((e["median_s"] for e in group
+                      if (e["format"], e["backend"]) == pred
+                      and not e.get("fallback")), default=None)
+        ok_near = ok or (t_pred is not None
+                         and t_pred <= 1.25 * win["median_s"])
+        n += 1
+        agree += ok
+        near += ok_near
+        per_matrix[name] = {
+            "predicted": f"{pred[0]}/{pred[1]}",
+            "measured": f"{win['format']}/{win['backend']}",
+            "agree": bool(ok), "agree_near": bool(ok_near),
+        }
+    return {
+        "matrices": n,
+        "accuracy": agree / n if n else 0.0,
+        "accuracy_near": near / n if n else 0.0,
+        "per_matrix": per_matrix,
+    }
 
 
 def run(scale: str = "quick"):

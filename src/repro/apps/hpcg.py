@@ -78,12 +78,21 @@ def _solver_pair(A_op, mg, iters, tol):
 
 def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3, candidates=None,
              verbose=True, precond=True, tol=1e-6, depth=4,
-             timed=True) -> HPCGResult:
+             timed=True, tune_mode="run") -> HPCGResult:
     """Serial HPCG phases 1-5 (Figure 8a analogue), full pipeline.
 
     ``timed=False`` runs phases 1-4 only (setup/reference/tune/validate) and
     reports zero times — the convergence-and-validation entry point tests use.
+
+    ``tune_mode="predict"`` swaps phase 3's run-first races (main operator
+    and every multigrid level) for the zero-run feature selector
+    (``core/select.py``): setup executes no candidate kernels at all — the
+    optimisation-setup fast path for large hierarchies. Validation phases
+    are identical either way, so a bad prediction shows up as a failed
+    tolerance check, not silent corruption.
     """
+    if tune_mode not in ("run", "predict"):
+        raise ValueError(f"tune_mode {tune_mode!r}: expected 'run' or 'predict'")
     # Phase 1: problem setup (stencil + multigrid hierarchy)
     A_sp = M.fdm27(nx, ny, nz)
     n = A_sp.shape[0]
@@ -96,12 +105,22 @@ def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3, candidates=None,
     ref = ref_conv(b)
     x_ref = ref.x
 
-    # Phase 3: optimisation setup (run-first auto-tuner, per-level formats).
+    # Phase 3: optimisation setup (per-level formats, Table III style).
     # Tuned hierarchies are derived from the reference one — schedules and
     # transfer operators are shared, only the SpMV operators retarget.
-    tune = autotune_spmv(A_sp, candidates=candidates)
-    A_opt, impl = tune.operator, tune.impl
-    mg_opt = mg_ref.retuned(candidates) if precond else None
+    # "run" races candidates (run-first auto-tuner); "predict" asks the
+    # zero-run feature selector and never executes a candidate kernel.
+    if tune_mode == "predict":
+        A_opt = as_operator(A_sp, "csr").tune(candidates=candidates,
+                                              mode="predict")
+        impl = A_opt.policy.backends[0]
+        chosen, tune_table = f"{A_opt.format}/{impl}", {}
+    else:
+        tune = autotune_spmv(A_sp, candidates=candidates)
+        A_opt, impl = tune.operator, tune.impl
+        chosen = f"{tune.format}/{impl}"
+        tune_table = {f"{f}/{i}": t for (f, i), t in tune.table.items()}
+    mg_opt = (mg_ref.retuned(candidates, mode=tune_mode) if precond else None)
     opt_timed, opt_conv = _solver_pair(A_opt, mg_opt, iters, tol)
 
     # Phase 4: validation
@@ -131,8 +150,7 @@ def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3, candidates=None,
 
     res = HPCGResult(
         (nx, ny, nz), n, iters, t_ref, t_opt, speedup,
-        f"{tune.format}/{impl}", valid, rel,
-        {f"{f}/{i}": t for (f, i), t in tune.table.items()},
+        chosen, valid, rel, tune_table,
         precond=precond, pcg_iters=int(opt.iters), rel_res=float(opt.rel_res),
         bitwise=bitwise, mg_levels=mg_opt.describe() if mg_opt else "")
     if verbose:

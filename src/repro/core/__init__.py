@@ -8,6 +8,9 @@ Public API:
     spmv/spmm: policy-dispatched sparse mat-vec / mat-mat (string ``impl``
                args survive as deprecated back-compat shims)
     autotune:  run-first (format, backend) auto-tuner -> SparseOperator
+    features:  structural MatrixFeatures extraction (host-side, jit-free)
+    select:    zero-run feature-driven (format, backend) ranking —
+               `tune(mode="predict")` and `autotune_spmv(prune=k)` run on it
     registry:  LRU handle/workspace cache (ArmPL-style create/optimize/exec)
     distributed: row partition + local/remote halo-split helpers and the
                legacy DistributedSpMV; the full multi-device operator
@@ -42,6 +45,8 @@ from .spmv import (
     spmv,
 )
 from .autotune import TuneResult, autotune_spmv, optimal_format_distribution, structural_skip
+from .features import MatrixFeatures, extract_features
+from .select import Prediction, predict_format, prune_candidates, rank_formats
 from .registry import SpmvWorkspace, spmv_cached, workspace
 from .distributed import DistributedSpMV, autotune_distributed, split_local_remote
 
@@ -55,6 +60,8 @@ __all__ = [
     "masked_spmv", "register_masked_spmv",
     "register_spmm", "register_spmv", "select_spmv", "spmm", "spmv",
     "TuneResult", "autotune_spmv", "optimal_format_distribution", "structural_skip",
+    "MatrixFeatures", "extract_features",
+    "Prediction", "predict_format", "prune_candidates", "rank_formats",
     "SpmvWorkspace", "spmv_cached", "workspace",
     "DistributedSpMV", "autotune_distributed", "split_local_remote",
 ]

@@ -109,6 +109,12 @@ def structural_skip(s, fmt: str, dia_max_diags: int = 512,
     import scipy.sparse as sp
 
     s = s.tocsr()
+    if s.nnz and not s.data.all():
+        # guard on *logical* nonzeros, exactly like the feature-level mirror
+        # (select.infeasible) — explicit stored zeros must not make the two
+        # disagree, or prune could drop a candidate the race would keep
+        s = s.copy()
+        s.eliminate_zeros()
     if fmt == "dia":
         coo = s.tocoo()
         ndiags = len(np.unique(coo.col.astype(np.int64) - coo.row.astype(np.int64)))
@@ -131,6 +137,8 @@ def autotune_spmv(
     ell_max_width_factor: float = 4.0,
     dtype=None,
     policy: Optional[ExecutionPolicy] = None,
+    prune: Optional[int] = None,
+    time_fn=None,
 ) -> TuneResult:
     """Pick the fastest (format, backend) for ``a_dense`` on this backend.
 
@@ -140,6 +148,14 @@ def autotune_spmv(
     limits: DIA is not built when the matrix has too many distinct diagonals
     (memory blow-up — the paper's FPGA section calls out exactly this), ELL
     when max row width far exceeds the mean (power-law matrices).
+
+    ``prune=k`` races only the top-``k`` candidates of the zero-run
+    selector's ranking (``core/select.py``) — run-first stays the oracle
+    among what is raced, the model just skips building/measuring candidates
+    it is confident are slow; pruned keys land in ``TuneResult.skipped``
+    with reason ``"pruned by selector"``. ``time_fn`` overrides the timing
+    primitive (signature ``time_fn(fn, A, x, key, iters=, warmup=) -> us``)
+    — tests inject a deterministic cost table through it.
     """
     import scipy.sparse as sp
 
@@ -158,6 +174,27 @@ def autotune_spmv(
     mats = {}
     skip_cache: Dict[str, Optional[str]] = {}  # structure stats once per fmt
     cand = _normalize_candidates(candidates if candidates is not None else DEFAULT_CANDIDATES)
+    if prune:
+        from . import select
+        from .features import extract_features
+
+        feats = extract_features(s)
+        keep = {(k.format, k.backend) for k in select.prune_candidates(
+            feats, int(prune),
+            policy=policy if policy is not None else DEFAULT_POLICY,
+            candidates=cand, dia_max_diags=dia_max_diags,
+            ell_max_width_factor=ell_max_width_factor)}
+        pruned_cand = []
+        for fmt, impl in cand:
+            # structurally infeasible keys stay in the loop so they are
+            # skipped with their *structural* reason, not blamed on the
+            # selector (the model only prunes feasible-but-predicted-slow)
+            if (fmt, impl) in keep or select.infeasible(
+                    feats, fmt, dia_max_diags, ell_max_width_factor) is not None:
+                pruned_cand.append((fmt, impl))
+            else:
+                skipped.append((fmt, impl, "pruned by selector"))
+        cand = tuple(pruned_cand)
     for fmt, impl in cand:
         if fmt not in skip_cache:
             skip_cache[fmt] = structural_skip(s, fmt, dia_max_diags,
@@ -183,7 +220,11 @@ def autotune_spmv(
         pol = (policy if policy is not None else DEFAULT_POLICY).preferring(impl)
         fn = jax.jit(lambda A, x, pol=pol: spmv(A, x, policy=pol))
         try:
-            table[(fmt, impl)] = _time_call(fn, A, x, iters=iters, warmup=warmup)
+            if time_fn is not None:
+                table[(fmt, impl)] = time_fn(fn, A, x, DispatchKey(fmt, impl),
+                                             iters=iters, warmup=warmup)
+            else:
+                table[(fmt, impl)] = _time_call(fn, A, x, iters=iters, warmup=warmup)
         except Exception as e:  # pragma: no cover - impl-specific lowering gaps
             skipped.append((fmt, impl, f"error: {type(e).__name__}"))
 

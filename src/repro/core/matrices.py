@@ -110,24 +110,52 @@ def diag_plus_noise(n: int, noise_nnz: int = 64, seed: int = 0) -> sp.csr_matrix
     return m.tocsr()
 
 
+#: The suite's generator order — an explicit, documented contract (not an
+#: accident of source layout): ``suite()`` iterates these per (size, seed)
+#: cell, in this exact sequence, then the fdm27 grids. Corpus/selector
+#: accuracy numbers are fractions over suite cells, so the iteration order
+#: must be reproducible across Python versions and refactors;
+#: ``tests/test_formats.py`` pins it.
+SUITE_GENERATORS: Tuple[Tuple[str, object], ...] = (
+    ("banded_b3", lambda s, r: banded(s, 3, seed=r)),
+    ("banded_b9", lambda s, r: banded(s, 9, seed=r)),
+    ("tridiag", lambda s, r: tridiag(s, seed=r)),
+    ("random_d01", lambda s, r: random_uniform(s, 0.01, seed=r)),
+    ("random_d05", lambda s, r: random_uniform(s, 0.05, seed=r)),
+    ("powerlaw", lambda s, r: powerlaw(s, seed=r)),
+    ("block32", lambda s, r: block_random(s, 32, seed=r)),
+    ("diagnoise", lambda s, r: diag_plus_noise(s, seed=r)),
+)
+
+#: scale -> (sizes, grids, reps): the other axis of the iteration contract.
+SUITE_SCALES: Dict[str, Tuple[list, list, int]] = {
+    "small": ([64, 200], [(4, 4, 4)], 1),
+    "bench": ([512, 2048, 8192], [(16, 16, 16), (24, 24, 24)], 3),
+}
+
+
+def suite_names(scale: str = "small") -> list:
+    """The labels ``suite(scale)`` will yield, in guaranteed order —
+    size-major, then seed, then ``SUITE_GENERATORS`` order, then grids."""
+    sizes, grids, reps = SUITE_SCALES["small" if scale == "small" else "bench"]
+    names = [f"{key}_n{s}_s{r}"
+             for s in sizes for r in range(reps) for key, _ in SUITE_GENERATORS]
+    names += [f"fdm27_{g[0]}x{g[1]}x{g[2]}" for g in grids]
+    return names
+
+
 def suite(scale: str = "small") -> Iterator[Tuple[str, sp.csr_matrix]]:
-    """Labeled matrix collection. ``small`` for tests, ``bench`` for figures."""
-    if scale == "small":
-        sizes, grids = [64, 200], [(4, 4, 4)]
-        reps = 1
-    else:
-        sizes, grids = [512, 2048, 8192], [(16, 16, 16), (24, 24, 24)]
-        reps = 3
+    """Labeled matrix collection. ``small`` for tests, ``bench`` for figures.
+
+    Iteration order is deterministic and part of the API: exactly
+    ``suite_names(scale)``, independent of Python version or dict hashing
+    (generators live in the explicit ``SUITE_GENERATORS`` tuple).
+    """
+    sizes, grids, reps = SUITE_SCALES["small" if scale == "small" else "bench"]
     for s in sizes:
         for r in range(reps):
-            yield f"banded_b3_n{s}_s{r}", banded(s, 3, seed=r)
-            yield f"banded_b9_n{s}_s{r}", banded(s, 9, seed=r)
-            yield f"tridiag_n{s}_s{r}", tridiag(s, seed=r)
-            yield f"random_d01_n{s}_s{r}", random_uniform(s, 0.01, seed=r)
-            yield f"random_d05_n{s}_s{r}", random_uniform(s, 0.05, seed=r)
-            yield f"powerlaw_n{s}_s{r}", powerlaw(s, seed=r)
-            yield f"block32_n{s}_s{r}", block_random(s, 32, seed=r)
-            yield f"diagnoise_n{s}_s{r}", diag_plus_noise(s, seed=r)
+            for key, gen in SUITE_GENERATORS:
+                yield f"{key}_n{s}_s{r}", gen(s, r)
     for g in grids:
         yield f"fdm27_{g[0]}x{g[1]}x{g[2]}", fdm27(*g)
 

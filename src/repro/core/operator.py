@@ -313,23 +313,60 @@ class SparseOperator:
 
     # -- auto-tuning --------------------------------------------------------
 
-    def tune(self, candidates=None, **kw) -> "SparseOperator":
-        """Run-first auto-tune (paper §VII-D): race candidate formats and
-        backends, return the retargeted operator.
+    def tune(self, candidates=None, mode: str = "run", **kw) -> "SparseOperator":
+        """Auto-tune: pick a (format, backend) and return the retargeted
+        operator.
 
         Args:
             candidates: ``DispatchKey``s (or ``(fmt, backend)`` pairs) to
-                race; defaults to ``autotune.DEFAULT_CANDIDATES``.
-            **kw: forwarded to ``autotune_spmv`` (``iters``, ``warmup``,
-                structural-guard limits, ...).
+                consider; defaults to ``autotune.DEFAULT_CANDIDATES``.
+            mode: ``"run"`` (default) races the candidates with the
+                run-first auto-tuner (paper §VII-D) — the measuring oracle.
+                ``"predict"`` selects **without executing any kernel**: the
+                zero-run decision model (``core/select.py``) ranks the
+                candidates from the matrix's structural features and this
+                operator's policy, and only the format conversion (host-side)
+                happens. Use it when a tuning run costs more than it saves —
+                e.g. per-level solver setup (``apps/hpcg.py``
+                ``tune_mode="predict"``).
+            **kw: ``mode="run"``: forwarded to ``autotune_spmv`` (``iters``,
+                ``warmup``, ``prune=k`` to race only the top-k predicted
+                candidates, structural-guard limits, ...). ``mode="predict"``:
+                forwarded to ``select.predict`` (``platform``, guard limits).
 
         Returns:
-            A ``SparseOperator`` over the winning container with a policy
-            preferring the winning backend. The operator's own limits
+            A ``SparseOperator`` over the chosen container with a policy
+            preferring the chosen backend. The operator's own limits
             (VMEM budget, fallback rules) are kept — only the backend
-            chain is retargeted, and candidates are measured under those
+            chain is retargeted, and candidates are evaluated under those
             same limits.
         """
+        if mode == "predict":
+            from . import select
+            from .convert import col_tile_for_policy
+
+            base = self.policy if self.policy is not None else DEFAULT_POLICY
+            pred = select.predict(self.container, policy=base,
+                                  candidates=candidates, **kw)
+            fmt = pred.key.format
+            tuned = self
+            if fmt in ("coo", "csr", "dia", "ell", "sell"):
+                ncols = int(self.shape[1])
+                want = col_tile_for_policy(fmt, ncols, base.col_tile(ncols))
+                want_ct = int(want) if want not in (False, 0) else None
+                cur = getattr(self.container, "plan", None)
+                cur_ct = (int(cur.ct) if fmt == self.format and cur is not None
+                          else None)
+                # rebuild on format change OR when the existing plan's tile
+                # geometry does not match this policy's budget — a stale plan
+                # would make dispatch silently reject the predicted backend
+                if fmt != self.format or cur_ct != want_ct:
+                    tuned = self.asformat(fmt, col_tile=want)
+            elif fmt != self.format:
+                tuned = self.asformat(fmt)
+            return tuned.with_policy(base.preferring(pred.key.backend))
+        if mode != "run":
+            raise ValueError(f"tune mode {mode!r}: expected 'run' or 'predict'")
         from .autotune import autotune_spmv
 
         return autotune_spmv(self, candidates=candidates,

@@ -78,13 +78,24 @@ class VCycle:
         return " | ".join(f"{'x'.join(map(str, l.grid))}:{l.chosen}"
                           for l in self.levels)
 
-    def retuned(self, candidates=None) -> "VCycle":
-        """Re-run the auto-tuner on every level and retarget the operators —
-        the per-level format choice of Table III. Schedules (coloring, diag,
-        R/P) are reused; only the SpMV operators change."""
+    def retuned(self, candidates=None, mode: str = "run") -> "VCycle":
+        """Retarget every level's operators to a fresh (format, backend)
+        choice — the per-level format choice of Table III. Schedules
+        (coloring, diag, R/P) are reused; only the SpMV operators change.
+
+        ``mode="run"`` races candidates per level with the run-first tuner;
+        ``mode="predict"`` uses the zero-run feature selector instead
+        (``SparseOperator.tune(mode="predict")``) — no kernel executes
+        during setup, which is the cheap path deep hierarchies want.
+        """
+        if mode not in ("run", "predict"):
+            raise ValueError(f"retuned mode {mode!r}: expected 'run' or 'predict'")
         levels = []
         for l in self.levels:
-            op = autotune_spmv(l.A, candidates=candidates).operator
+            if mode == "predict":
+                op = l.A.tune(candidates=candidates, mode="predict")
+            else:
+                op = autotune_spmv(l.A, candidates=candidates).operator
             levels.append(MGLevel(l.grid, op, l.smoother.with_operator(op),
                                   l.R, l.P))
         return VCycle(tuple(levels), self.pre, self.post, self.coarse_sweeps)

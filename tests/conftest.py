@@ -19,6 +19,28 @@ def run_py(code: str, devices: int = 1, timeout: int = 420):
     return r.stdout
 
 
+@pytest.fixture
+def kernel_dispatch_counter(monkeypatch):
+    """Counts every kernel invocation through the dispatch tables (spmv,
+    spmm, masked) — the no-execution assertion for zero-run paths like
+    ``tune(mode="predict")`` and ``features.extract_features``."""
+    import importlib
+
+    # repro.core re-exports the `spmv` *function*; import the module itself
+    spmv_mod = importlib.import_module("repro.core.spmv")
+
+    counts = {"calls": 0, "keys": []}
+    orig = spmv_mod.KernelEntry.call
+
+    def counted(self, A, *operands, policy):
+        counts["calls"] += 1
+        counts["keys"].append(self.key)
+        return orig(self, A, *operands, policy=policy)
+
+    monkeypatch.setattr(spmv_mod.KernelEntry, "call", counted)
+    return counts
+
+
 @pytest.fixture(scope="session")
 def suite_small():
     """``matrices.suite('small')`` materialised once per session — the

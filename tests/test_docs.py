@@ -16,6 +16,10 @@ DOCTEST_MODULES = [
     "repro.core.spmv",
     "repro.core.autotune",
     "repro.core.distributed",
+    "repro.core.features",
+    "repro.core.select",
+    "repro.io.matrix_market",
+    "repro.io.corpus",
     "repro.solvers.cg",
     "repro.solvers.mg",
     "repro.distributed_op.operator",

@@ -76,6 +76,30 @@ def test_registered_impls():
         assert "plain" in impls and "pallas" in impls and "dense" in impls, (fmt, impls)
 
 
+def test_suite_iteration_order_is_pinned(suite_small):
+    """``matrices.suite()`` iteration order is an explicit contract (corpus
+    and selector accuracy numbers are fractions over suite cells): pin the
+    exact small-suite sequence, and require ``suite_names`` to agree with
+    what ``suite`` actually yields at every scale."""
+    expected = [
+        "banded_b3_n64_s0", "banded_b9_n64_s0", "tridiag_n64_s0",
+        "random_d01_n64_s0", "random_d05_n64_s0", "powerlaw_n64_s0",
+        "block32_n64_s0", "diagnoise_n64_s0",
+        "banded_b3_n200_s0", "banded_b9_n200_s0", "tridiag_n200_s0",
+        "random_d01_n200_s0", "random_d05_n200_s0", "powerlaw_n200_s0",
+        "block32_n200_s0", "diagnoise_n200_s0",
+        "fdm27_4x4x4",
+    ]
+    assert [name for name, _ in M.suite("small")] == expected
+    assert M.suite_names("small") == expected
+    assert list(suite_small) == expected  # the session fixture too
+    # the bench scale agrees with its own declared order without building
+    # matrices here (generators stay lazy): first cell + count
+    bench = M.suite_names("bench")
+    assert bench[0] == "banded_b3_n512_s0"
+    assert len(bench) == len(set(bench)) == 8 * 3 * 3 + 2
+
+
 def test_workspace_caches_handles():
     from repro.core import workspace
     ws = workspace()

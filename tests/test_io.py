@@ -1,0 +1,230 @@
+"""MatrixMarket I/O + corpus loader: fixtures, error paths, scipy parity."""
+import gzip
+import io
+import os
+
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import matrices as M
+from repro.io import (
+    MatrixMarketError,
+    corpus_dict,
+    corpus_paths,
+    iter_corpus,
+    matrix_name,
+    mmread,
+    mmwrite,
+)
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures", "corpus")
+
+
+def test_fixture_corpus_loads_deterministically():
+    """The committed fixture corpus loads, in sorted order, twice the same."""
+    names = [n for n, _ in iter_corpus(FIXTURES)]
+    assert names == sorted(names) and len(names) >= 5
+    assert names == [n for n, _ in iter_corpus(FIXTURES)]
+    mats = corpus_dict(FIXTURES)
+    for name, s in mats.items():
+        assert sp.issparse(s) and s.nnz > 0, name
+
+
+def test_fixture_corpus_matches_generators():
+    """Fixture files round-trip their generators exactly (they were written
+    by mmwrite at precision=8 — re-reading matches to that precision)."""
+    mats = corpus_dict(FIXTURES)
+    ref = M.fdm27(4, 4, 4)
+    np.testing.assert_allclose(mats["fdm27_4x4x4"].toarray(), ref.toarray(),
+                               rtol=1e-7, atol=0)
+    band = M.banded(96, 4, seed=0)
+    np.testing.assert_allclose(mats["banded_b4_n96"].toarray(), band.toarray(),
+                               rtol=1e-7, atol=1e-12)
+    # the pattern fixture keeps structure, values all 1
+    pl = mats["powerlaw_n96"]
+    assert set(np.unique(pl.data)) == {1.0}
+    assert pl.shape == (96, 96)
+
+
+def test_mmread_rejects_complex_and_malformed():
+    with pytest.raises(MatrixMarketError, match="complex"):
+        mmread(io.StringIO(
+            "%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 2\n"))
+    with pytest.raises(MatrixMarketError, match="complex"):
+        mmread(io.StringIO(
+            "%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 1\n"))
+    with pytest.raises(MatrixMarketError):
+        mmread(io.StringIO("not a header\n1 1 1\n"))
+    with pytest.raises(MatrixMarketError):  # wrong entry count
+        mmread(io.StringIO(
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n"))
+    with pytest.raises(MatrixMarketError):  # out-of-range index
+        mmread(io.StringIO(
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n"))
+    with pytest.raises(MatrixMarketError):  # skew with diagonal entry
+        mmread(io.StringIO(
+            "%%MatrixMarket matrix coordinate real skew-symmetric\n"
+            "2 2 1\n1 1 1.0\n"))
+
+
+def test_mmread_scipy_parity_on_scipy_written_files(tmp_path):
+    """Bit-for-bit identical to scipy.io.mmread on scipy-written files."""
+    import scipy.io
+
+    rng = np.random.default_rng(0)
+    mats = {
+        "general": sp.random(13, 9, density=0.3, random_state=rng),
+        "symmetric": None,
+        "pattern": None,
+    }
+    g = sp.random(11, 11, density=0.25, random_state=rng)
+    mats["symmetric"] = g + g.T
+    p = sp.random(10, 10, density=0.2, random_state=rng)
+    mats["pattern"] = p
+    for name, m in mats.items():
+        path = os.path.join(tmp_path, f"{name}.mtx")
+        kw = {"field": "pattern"} if name == "pattern" else {}
+        scipy.io.mmwrite(path, m, **kw)
+        ours = mmread(path)
+        theirs = scipy.io.mmread(path)
+        assert np.array_equal(np.asarray(ours.toarray()),
+                              np.asarray(theirs.toarray())), name
+
+
+def test_mmwrite_readable_by_scipy(tmp_path):
+    import scipy.io
+
+    rng = np.random.default_rng(1)
+    m = sp.random(17, 5, density=0.3, random_state=rng, format="csr")
+    m.data = rng.standard_normal(len(m.data))
+    path = os.path.join(tmp_path, "ours.mtx")
+    mmwrite(path, m)
+    assert np.array_equal(scipy.io.mmread(path).toarray(), m.toarray())
+
+
+def test_mmwrite_accepts_containers_and_operators(tmp_path):
+    from repro.core import as_operator, from_dense
+
+    s = M.tridiag(32, seed=0)
+    for a in (from_dense(s, "dia", dtype="float64"), as_operator(s, "csr")):
+        buf = io.StringIO()
+        mmwrite(buf, a)
+        buf.seek(0)
+        np.testing.assert_allclose(mmread(buf).toarray(), s.toarray(),
+                                   rtol=1e-6, atol=1e-9)
+
+
+def test_gzip_roundtrip(tmp_path):
+    rng = np.random.default_rng(2)
+    m = sp.random(12, 12, density=0.3, random_state=rng)
+    path = os.path.join(tmp_path, "m.mtx.gz")
+    mmwrite(path, m)
+    with gzip.open(path, "rt") as f:
+        assert f.readline().startswith("%%MatrixMarket")
+    assert np.array_equal(mmread(path).toarray(), m.toarray())
+    # and the corpus walker picks it up
+    assert [n for n, _ in iter_corpus(tmp_path)] == ["m"]
+
+
+def test_truncated_array_file_is_clean_error(tmp_path):
+    """A truncated symmetric array body raises MatrixMarketError (not
+    IndexError), and lenient corpus iteration skips the file (regression)."""
+    content = "%%MatrixMarket matrix array real symmetric\n3 3\n1.0\n2.0\n"
+    with pytest.raises(MatrixMarketError, match="count mismatch"):
+        mmread(io.StringIO(content))
+    with open(os.path.join(tmp_path, "bad.mtx"), "w") as f:
+        f.write(content)
+    mmwrite(os.path.join(tmp_path, "ok.mtx"), sp.eye(2, format="csr"))
+    assert [n for n, _ in iter_corpus(tmp_path, strict=False)] == ["ok"]
+
+
+def test_integer_field_exact_past_float53():
+    """Integer fields parse with an int dtype — values beyond 2^53 must not
+    round through float64 (regression)."""
+    big = (1 << 53) + 1
+    got = mmread(io.StringIO(
+        f"%%MatrixMarket matrix coordinate integer general\n2 2 1\n1 1 {big}\n"))
+    assert int(got.tocoo().data[0]) == big
+    assert got.dtype == np.int64
+
+
+def test_pattern_never_skew():
+    """No pattern+skew in the MM spec: reads reject it, an explicit write
+    request errors, and auto-detection downgrades to general (regression:
+    a skew matrix written as pattern produced -1.0 'pattern' values)."""
+    k = sp.coo_matrix((np.array([2.0]), (np.array([1]), np.array([0]))),
+                      shape=(2, 2))
+    k = (k - k.T).tocoo()  # exactly skew-symmetric
+    buf = io.StringIO()
+    mmwrite(buf, k, field="pattern")  # auto-detect must not pick skew
+    assert buf.getvalue().splitlines()[0].endswith("pattern general")
+    buf.seek(0)
+    assert set(np.unique(mmread(buf).tocoo().data)) == {1.0}
+    with pytest.raises(MatrixMarketError, match="skew"):
+        mmwrite(io.StringIO(), k, field="pattern", symmetry="skew-symmetric")
+    with pytest.raises(MatrixMarketError, match="skew"):
+        mmread(io.StringIO(
+            "%%MatrixMarket matrix coordinate pattern skew-symmetric\n"
+            "2 2 1\n2 1\n"))
+
+
+def test_array_integer_exact_past_float53():
+    big = (1 << 53) + 1
+    dense = mmread(io.StringIO(
+        f"%%MatrixMarket matrix array integer general\n1 2\n{big}\n3\n"))
+    assert dense.dtype == np.int64
+    np.testing.assert_array_equal(dense, [[big, 3]])
+
+
+def test_mmwrite_integer_field_roundtrip():
+    m = sp.coo_matrix((np.array([3.0, -7.0]), (np.array([0, 1]),
+                                               np.array([1, 0]))), shape=(2, 2))
+    buf = io.StringIO()
+    mmwrite(buf, m, field="integer", symmetry="general")
+    buf.seek(0)
+    back = mmread(buf)
+    assert back.dtype == np.int64
+    np.testing.assert_array_equal(back.toarray(), m.toarray())
+
+
+def test_array_layout_and_symmetries():
+    dense = mmread(io.StringIO(
+        "%%MatrixMarket matrix array real general\n2 2\n1\n2\n3\n4\n"))
+    np.testing.assert_array_equal(dense, [[1.0, 3.0], [2.0, 4.0]])
+    sym = mmread(io.StringIO(
+        "%%MatrixMarket matrix array real symmetric\n2 2\n1\n2\n3\n"))
+    np.testing.assert_array_equal(sym, [[1.0, 2.0], [2.0, 3.0]])
+    skew = mmread(io.StringIO(
+        "%%MatrixMarket matrix array real skew-symmetric\n2 2\n5\n"))
+    np.testing.assert_array_equal(skew, [[0.0, -5.0], [5.0, 0.0]])
+
+
+def test_corpus_strict_and_lenient(tmp_path):
+    mmwrite(os.path.join(tmp_path, "good.mtx"), sp.eye(4, format="csr"))
+    with open(os.path.join(tmp_path, "bad.mtx"), "w") as f:
+        f.write("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 1 2\n")
+    with pytest.raises(MatrixMarketError):
+        list(iter_corpus(tmp_path))
+    assert [n for n, _ in iter_corpus(tmp_path, strict=False)] == ["good"]
+
+
+def test_corpus_paths_and_names(tmp_path):
+    sub = os.path.join(tmp_path, "group1")
+    os.makedirs(sub)
+    mmwrite(os.path.join(sub, "z.mtx"), sp.eye(3, format="csr"))
+    mmwrite(os.path.join(tmp_path, "a.mtx"), sp.eye(3, format="csr"))
+    assert corpus_paths(tmp_path) == ["a.mtx", "group1/z.mtx"]
+    assert matrix_name("group1/z.mtx") == "group1_z"
+
+
+def test_features_extraction_is_dispatch_free(kernel_dispatch_counter):
+    """Feature extraction from any container executes no kernels."""
+    from repro.core import extract_features, from_dense
+
+    s = M.banded(64, 3, seed=0)
+    ref = extract_features(s)
+    for fmt in ("coo", "csr", "dia", "ell", "sell", "bsr", "dense"):
+        assert extract_features(from_dense(s, fmt, dtype="float64")) == ref
+    assert kernel_dispatch_counter["calls"] == 0

@@ -1,0 +1,378 @@
+"""Zero-run format selection: predict mode, selector-vs-oracle agreement,
+and prune-identity regression tests.
+
+Oracle methodology: run-first autotune tables for every (matrix, policy)
+cell of the small suite are **recorded once** into
+``tests/fixtures/autotune_tables.json`` (regenerate on this machine with
+``PYTHONPATH=src python tests/test_select.py --record`` after kernel or
+suite changes). The tests replay those tables through ``autotune_spmv``'s
+``time_fn`` hook, which makes two properties exactly testable, free of
+timer noise:
+
+  - **agreement**: the selector's top-1 names the recorded winner, or a
+    cell recorded within 25% of it (at CPU timer resolution such cells are
+    statistical ties — the recorded tables themselves show near-tied
+    winners flipping between recording runs);
+  - **identity**: pruned autotune (``prune=4``) returns the *bit-identical*
+    winner to unpruned autotune on 100% of cells under the same clock.
+
+A slow-lane test re-measures live and checks agreement only (live winners
+are noisy; the floor still holds with the tie tolerance).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_POLICY,
+    DispatchKey,
+    ExecutionPolicy,
+    as_operator,
+    autotune_spmv,
+    extract_features,
+    predict_format,
+    prune_candidates,
+    rank_formats,
+)
+from repro.core import matrices as M
+from repro.core.autotune import DEFAULT_CANDIDATES
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "autotune_tables.json")
+
+#: tie tolerance: predicted cell recorded within this factor of the winner
+NEAR = 1.25
+#: agreement floor for the selector-vs-oracle regression (satellite spec)
+FLOOR = 0.70
+#: prune level raced by the identity test (top-4 coverage was 100% at
+#: calibration)
+PRUNE = 4
+
+POLICIES = {
+    "default": DEFAULT_POLICY,
+    # a small-VMEM device: column-tiled Pallas strategies become the
+    # relevant candidates, exercising the tiled half of the cost model
+    "tiny-vmem": ExecutionPolicy(max_resident_cols=48),
+}
+
+
+def _cells():
+    for name, s in M.suite("small"):
+        for pol_name, pol in POLICIES.items():
+            yield f"{name}/{pol_name}", s, pol
+
+
+def record(iters: int = 7, warmup: int = 2) -> dict:
+    """Measure every cell's autotune table and write the fixture."""
+    doc = {}
+    for label, s, pol in _cells():
+        res = autotune_spmv(s, iters=iters, warmup=warmup, policy=pol)
+        doc[label] = {f"{f}/{i}": t for (f, i), t in res.table.items()}
+        print(f"{label}: winner {res.format}/{res.impl} {res.time_us:.1f}us")
+    with open(FIXTURE, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"wrote {len(doc)} cells to {FIXTURE}")
+    return doc
+
+
+@pytest.fixture(scope="module")
+def recorded_tables():
+    assert os.path.exists(FIXTURE), (
+        f"missing {FIXTURE} — regenerate with "
+        f"`PYTHONPATH=src python tests/test_select.py --record`")
+    with open(FIXTURE) as f:
+        doc = json.load(f)
+    return {label: {tuple(k.split("/")): v for k, v in table.items()}
+            for label, table in doc.items()}
+
+
+def _replay(table):
+    """Deterministic time_fn replaying a recorded table (unrecorded keys
+    count as slow, not missing — the tuner may race fewer cells)."""
+    def time_fn(fn, A, x, key, iters, warmup):
+        return table.get((key.format, key.backend), 1e12)
+    return time_fn
+
+
+def test_selector_vs_oracle_recorded(recorded_tables):
+    """Top-1 prediction agrees with the recorded run-first oracle on >= 70%
+    of (matrix, policy) cells."""
+    agree = total = 0
+    misses = []
+    for label, s, pol in _cells():
+        table = recorded_tables.get(label)
+        assert table, (f"cell {label} missing from fixture — regenerate with "
+                       f"`PYTHONPATH=src python tests/test_select.py --record`")
+        total += 1
+        pred = predict_format(extract_features(s), policy=pol)
+        pkey = (pred.key.format, pred.key.backend)
+        best_key, best_t = min(table.items(), key=lambda kv: kv[1])
+        t_pred = table.get(pkey)
+        ok = pkey == best_key or (t_pred is not None and t_pred <= NEAR * best_t)
+        agree += ok
+        if not ok:
+            misses.append((label, pkey, best_key))
+    acc = agree / total
+    assert acc >= FLOOR, f"selector agreement {acc:.0%} < {FLOOR:.0%}: {misses}"
+
+
+def test_pruned_autotune_identical_winner(recorded_tables):
+    """Under the recorded clock, pruned autotune returns the bit-identical
+    winner to unpruned autotune on 100% of (matrix, policy) cells — pruning
+    never drops the true winner."""
+    for label, s, pol in _cells():
+        replay = _replay(recorded_tables[label])
+        full = autotune_spmv(s, policy=pol, time_fn=replay, iters=1, warmup=0)
+        pruned = autotune_spmv(s, policy=pol, time_fn=replay, prune=PRUNE,
+                               iters=1, warmup=0)
+        assert (pruned.format, pruned.impl) == (full.format, full.impl), (
+            f"{label}: pruned winner {pruned.format}/{pruned.impl} != "
+            f"unpruned {full.format}/{full.impl}; "
+            f"pruned kept {sorted(pruned.table)}")
+        assert any(why == "pruned by selector" for _, _, why in pruned.skipped)
+        assert len(pruned.table) < len(full.table)  # pruning actually pruned
+
+
+@pytest.mark.slow
+def test_selector_vs_oracle_live():
+    """Agreement against a fresh live measurement (noise-tolerant): the
+    recorded fixture must not be the only world where the model works."""
+    agree = total = 0
+    misses = []
+    for label, s, pol in _cells():
+        res = autotune_spmv(s, iters=3, warmup=1, policy=pol)
+        total += 1
+        pred = predict_format(extract_features(s), policy=pol)
+        pkey = (pred.key.format, pred.key.backend)
+        t_pred = res.table.get(pkey)
+        ok = (pkey == (res.format, res.impl)
+              or (t_pred is not None and t_pred <= NEAR * res.time_us))
+        agree += ok
+        if not ok:
+            misses.append((label, pkey, (res.format, res.impl)))
+    acc = agree / total
+    assert acc >= FLOOR, f"live agreement {acc:.0%} < {FLOOR:.0%}: {misses}"
+
+
+def test_rank_respects_structural_guards():
+    """Feature-level feasibility mirrors ``structural_skip`` exactly: the
+    ranking proposes a format iff the run-first tuner would build it — the
+    invariant prune-identity rests on."""
+    from repro.core import structural_skip
+
+    mats = [M.powerlaw(128, 6, seed=0),          # ELL-hostile rows
+            M.random_uniform(512, 0.1, seed=1),  # > 512 occupied diagonals
+            M.banded(64, 3, seed=0)]             # everything feasible
+    for s in mats:
+        ranked = {p.key.format for p in rank_formats(extract_features(s))}
+        assert ranked, "feasible candidates must remain"
+        for fmt in ("coo", "csr", "dia", "ell", "sell"):
+            skipped = structural_skip(s, fmt) is not None
+            assert (fmt not in ranked) == skipped, (fmt, skipped)
+
+
+def test_guards_agree_on_explicit_stored_zeros():
+    """Explicit stored zeros must not split the two guards: both
+    ``structural_skip`` and the feature-level ``infeasible`` operate on
+    logical nonzeros (regression: a corpus matrix storing 0.0 entries made
+    ``infeasible`` refuse ELL while ``structural_skip`` allowed it)."""
+    import scipy.sparse as sp
+
+    from repro.core import select, structural_skip
+
+    n = 100
+    rows = [0] * 45 + [r for r in range(1, n) for _ in range(10)]
+    cols = list(range(45)) + [c % n for r in range(1, n)
+                              for c in range(r, r + 10)]
+    vals = [1.0] * 45 + ([1.0] + [0.0] * 9) * (n - 1)  # 9 explicit zeros/row
+    s = sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+    assert (s.data == 0).any()
+    f = extract_features(s)
+    for fmt in ("ell", "dia"):
+        assert ((structural_skip(s, fmt) is None)
+                == (select.infeasible(f, fmt) is None)), fmt
+    # and the tuner's stored matrix is untouched (guard copies before
+    # eliminating)
+    assert (s.data == 0).any()
+
+
+def test_predict_same_format_rebuilds_stale_plan():
+    """Same-format predict retargeting must rebuild a column-tile plan that
+    does not fit the operator's policy — otherwise dispatch silently rejects
+    the predicted backend (regression)."""
+    import importlib
+
+    from repro.core import ExecutionPolicy, as_operator
+
+    spmv_mod = importlib.import_module("repro.core.spmv")
+    s = M.banded(200, 4, seed=0)
+    tiny = ExecutionPolicy(max_resident_cols=48)
+    op = as_operator(s, "csr").with_policy(tiny)  # container built pre-policy
+    tuned = op.tune(mode="predict",
+                    candidates=(DispatchKey("csr", "pallas"),))
+    assert tuned.format == "csr"
+    assert tuned.container.plan.ct <= tiny.resident_cols()
+    selected = spmv_mod.select_spmv(tuned.container, tuned.policy)
+    assert selected.key.backend == "pallas"
+    # correctness of the rebuilt container
+    x = np.ones(200, np.float32)
+    np.testing.assert_allclose(np.asarray(tuned @ x), s @ x,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pruned_skip_reasons_stay_structural():
+    """Structurally infeasible candidates keep their structural skip reason
+    under prune=k — only feasible-but-predicted-slow keys are labeled
+    'pruned by selector'."""
+    s = M.random_uniform(512, 0.1, seed=1)  # > 512 occupied diagonals
+    res = autotune_spmv(s, prune=2, time_fn=lambda *a, **k: 1.0,
+                        iters=1, warmup=0)
+    reasons = {(f, i): why for f, i, why in res.skipped}
+    assert reasons[("dia", "plain")].startswith("ndiags=")
+    assert "pruned by selector" in set(reasons.values())
+
+
+def test_unknown_platform_uses_analytic_table():
+    """GPU (or any platform without a fitted table) ranks with the analytic
+    bandwidth model — the CPU table describes *interpreted* Pallas and would
+    condemn native-Pallas platforms (regression)."""
+    from repro.core import select
+
+    f = extract_features(M.banded(256, 3, seed=0))
+    key = DispatchKey("dia", "pallas")
+    assert (select.estimate_us(f, key, platform="gpu")
+            == select.estimate_us(f, key, platform="tpu"))
+    assert (select.estimate_us(f, key, platform="cpu")
+            != select.estimate_us(f, key, platform="tpu"))
+
+
+def test_predict_accepts_structural_guard_kwargs():
+    """The guard knobs work identically across modes — a caller with custom
+    limits can switch run <-> predict (regression: predict raised
+    TypeError on the kwargs its docstring promised to forward)."""
+    s = M.banded(64, 3, seed=0)  # 7 diagonals
+    tuned = as_operator(s, "csr").tune(mode="predict", dia_max_diags=4)
+    assert tuned.format != "dia"  # the tightened guard excluded DIA
+    p = predict_format(extract_features(s), dia_max_diags=4)
+    assert p.key.format != "dia"
+
+
+def test_features_dedupe_scipy_duplicates():
+    """Duplicate COO entries must not inflate row stats: features mirror
+    what the tuner sees after its csr conversion sums them (regression)."""
+    import scipy.sparse as sp
+
+    dup = sp.coo_matrix((np.ones(6), ([0, 0, 0, 1, 1, 1], [1, 1, 1, 0, 0, 0])),
+                        shape=(2, 2))
+    f = extract_features(dup)
+    assert f.nnz == 2 and f.rownnz_max == 1
+    assert extract_features(dup.tocsr()) == f
+    assert (dup.data == 1).all()  # caller's matrix untouched
+
+
+def test_prediction_summary_ignores_fallback_winners():
+    """A cell that silently fell back measured another backend's kernel and
+    cannot claim the win for the requested one (regression)."""
+    from benchmarks.spmv_bench import prediction_summary
+
+    def entry(fmt, backend, t, fallback):
+        return {"matrix": "m", "format": fmt, "backend": backend,
+                "median_s": t, "fallback": fallback,
+                "predicted_format": "ell", "predicted_backend": "plain"}
+
+    s = prediction_summary([
+        entry("ell", "pallas", 1.0, True),   # fell back: measured plain
+        entry("ell", "plain", 1.1, False),
+        entry("csr", "plain", 2.0, False),
+    ])
+    assert s["per_matrix"]["m"]["measured"] == "ell/plain"
+    assert s["accuracy"] == 1.0
+
+
+def test_rank_restricts_to_candidates():
+    f = extract_features(M.banded(64, 3, seed=0))
+    cand = (DispatchKey("csr", "plain"), DispatchKey("coo", "plain"))
+    keys = [p.key for p in rank_formats(f, candidates=cand)]
+    assert set(keys) == set(cand)
+
+
+def test_predict_mode_executes_no_kernel(kernel_dispatch_counter):
+    """`tune(mode="predict")` is genuinely zero-run: format conversion and
+    retargeting happen without a single kernel dispatch."""
+    s = M.banded(96, 4, seed=0)
+    op = as_operator(s, "csr")
+    tuned = op.tune(mode="predict")
+    assert kernel_dispatch_counter["calls"] == 0, kernel_dispatch_counter["keys"]
+    # the retargeted operator *does* dispatch — and agrees with the oracle
+    y = tuned @ np.ones(96, np.float32)
+    assert kernel_dispatch_counter["calls"] == 1
+    np.testing.assert_allclose(np.asarray(y), s @ np.ones(96, np.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_predict_mode_result_shape():
+    """Predict-mode tuning returns a usable retargeted operator whose
+    policy chain leads with the predicted backend and whose format matches
+    the prediction."""
+    s = M.tridiag(128, seed=2)
+    op = as_operator(s, "csr")
+    pred = predict_format(extract_features(s))
+    tuned = op.tune(mode="predict")
+    assert tuned.format == pred.key.format
+    assert tuned.policy.backends[0] == pred.key.backend
+    with pytest.raises(ValueError):
+        op.tune(mode="guess")
+
+
+def test_predict_mode_respects_candidates():
+    s = M.banded(64, 3, seed=1)
+    tuned = as_operator(s, "csr").tune(
+        mode="predict", candidates=(DispatchKey("csr", "plain"),))
+    assert tuned.format == "csr"
+    assert tuned.policy.backends[0] == "plain"
+
+
+def test_prune_keeps_requested_count():
+    f = extract_features(M.banded(64, 3, seed=0))
+    keys = prune_candidates(f, 3, candidates=DEFAULT_CANDIDATES)
+    assert len(keys) == 3
+    assert len(set(keys)) == 3
+
+
+def test_tiny_vmem_policy_changes_strategy_costs():
+    """The tiled cost model engages under a small-VMEM policy: estimates
+    under the tiny budget must not be below the resident ones (tiling only
+    adds overhead)."""
+    from repro.core import select
+
+    f = extract_features(M.banded(200, 9, seed=0))
+    tiny = ExecutionPolicy(max_resident_cols=48)
+    for fmt in ("dia", "ell", "coo", "csr", "sell"):
+        key = DispatchKey(fmt, "pallas")
+        assert select.pallas_strategy_for(f, tiny, fmt) == "tiled"
+        est_tiled = select.estimate_us(f, key, tiny, platform="cpu")
+        est_res = select.estimate_us(f, key, DEFAULT_POLICY, platform="cpu")
+        assert est_tiled >= est_res, (fmt, est_tiled, est_res)
+
+
+def test_hpcg_predict_fast_path(kernel_dispatch_counter):
+    """apps/hpcg.py tune_mode="predict": phase-3 setup executes no kernels
+    until the solves start, and the pipeline still validates."""
+    from repro.apps.hpcg import run_hpcg
+
+    res = run_hpcg(8, 8, 8, iters=30, timed=False, verbose=False, depth=2,
+                   tune_mode="predict")
+    assert res.valid and res.bitwise
+    assert res.rel_res <= 1e-6
+    assert "/" in res.chosen and res.table == {}
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--record" in sys.argv:
+        record()
+    else:
+        print(__doc__)

@@ -13,6 +13,11 @@ the cross-PR perf + prediction record).
       # prediction vs the run-first autotune winner, recorded into the
       # "corpus" section of BENCH_spmv.json; exits non-zero when prediction
       # accuracy falls below the floor (the CI corpus-smoke gate)
+  PYTHONPATH=src python -m benchmarks.run --serve [--smoke]
+      # serving-layer trajectory: traffic mixes through the ServeEngine ->
+      # BENCH_serve.json (latency p50/p99, throughput, warm-pool hit rate);
+      # exits non-zero on empty output or a dispatch fallback off a tuned
+      # backend (the CI serve-smoke gate)
 """
 import argparse
 import importlib
@@ -31,10 +36,12 @@ MODULES = [
     "moe_dispatch",
     "roofline_table",
     "spmv_bench",
+    "serve_bench",
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_spmv.json")
+DEFAULT_SERVE_JSON = os.path.join(REPO_ROOT, "BENCH_serve.json")
 
 
 def _load_doc(path: str) -> dict:
@@ -71,6 +78,24 @@ def _write_json(path: str, scale: str, entries) -> None:
           f"(prediction accuracy {acc['accuracy']:.0%} strict, "
           f"{acc['accuracy_near']:.0%} near, {acc['matrices']} matrices)",
           file=sys.stderr)
+
+
+def _write_serve_json(path: str, doc: dict) -> int:
+    """Write the serving trajectory and run the serve-smoke gate; returns
+    the number of gate failures."""
+    from benchmarks.serve_bench import check
+
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    problems = check(doc)
+    for p in problems:
+        print(f"SERVE: {p}", file=sys.stderr)
+    mixes = doc.get("mixes", {})
+    print(f"# wrote {len(mixes)} serving mixes to {path} "
+          + " ".join(f"{m}:p50={o['latency_p50_s']*1e3:.1f}ms"
+                     f"/hit={o['hit_rate']:.0%}" for m, o in mixes.items()),
+          file=sys.stderr)
+    return len(problems)
 
 
 def _check_native(entries) -> int:
@@ -164,6 +189,13 @@ def main() -> None:
                     help="Matrix Market corpus sweep: record the zero-run "
                          "selector's predicted winner vs the run-first "
                          "autotune winner per .mtx file")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-layer traffic mixes only -> BENCH_serve."
+                         "json; fail on empty output or dispatch fallback "
+                         "(the CI serve-smoke gate)")
+    ap.add_argument("--serve-json", default=DEFAULT_SERVE_JSON,
+                    help="where to write the serving trajectory "
+                         "(BENCH_serve.json)")
     ap.add_argument("--accuracy-floor", type=float, default=None,
                     help="with --corpus: exit non-zero when 'near' prediction "
                          "accuracy drops below this fraction (CI gate)")
@@ -179,6 +211,16 @@ def main() -> None:
             sys.exit(1)
         return
 
+    if args.serve:
+        from benchmarks import serve_bench
+
+        scale = "smoke" if args.smoke else args.scale
+        rows, doc = serve_bench.collect(scale)
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        sys.exit(1 if _write_serve_json(args.serve_json, doc) else 0)
+
     if args.smoke:
         from benchmarks import spmv_bench
 
@@ -193,11 +235,14 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = 0
     entries = None
+    serve_doc = None
     for m in mods:
         try:
             mod = importlib.import_module(f"benchmarks.{m}")
             if m == "spmv_bench":
                 rows, entries = mod.collect(args.scale)
+            elif m == "serve_bench":
+                rows, serve_doc = mod.collect(args.scale)
             else:
                 rows = mod.run(args.scale)
             for row in rows:
@@ -208,6 +253,8 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
     if entries is not None:
         _write_json(args.json, args.scale, entries)
+    if serve_doc is not None:
+        failed += _write_serve_json(args.serve_json, serve_doc)
     if failed:
         sys.exit(1)
 

@@ -1,0 +1,91 @@
+"""Serving-layer trajectory: traffic mixes -> BENCH_serve.json.
+
+The serving counterpart of ``spmv_bench.py``: each mix drives a fresh
+``ServeEngine`` with seeded traffic and records the summary the engine's
+stats layer produces — latency p50/p99, throughput, warm-pool hit rate,
+batch-size distribution, coalesced fraction, and the dispatch-fallback
+count the CI ``serve-smoke`` job gates on. Two mixes bracket the warm-pool
+spectrum (plus the mixed middle ground at non-smoke scales):
+
+  - ``hot``   — single-tenant hot matrix: admission once, then every tile
+    coalesces; the SpMM-batching throughput ceiling.
+  - ``churn`` — more tenants than the warm pool holds: the LRU keeps
+    evicting, readmission keeps re-tuning; the cold-path floor.
+
+Per-mix engine wiring is part of the record (capacity, max_batch, tenant
+count), so a trajectory regression is attributable.
+"""
+from __future__ import annotations
+
+import platform
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.serve import ServeEngine, TrafficSpec, run_traffic
+
+#: scale -> traffic/engine knobs. Churn always has more tenants than warm-
+#: pool capacity (eviction pressure is the point of the mix); flush windows
+#: exceed max_batch so hot tiles saturate.
+SCALES: Dict[str, Dict] = {
+    "smoke": dict(n=96, requests=48, flush_every=16, max_batch=8,
+                  capacity=4, n_matrices=6, mixes=("hot", "churn")),
+    "quick": dict(n=512, requests=160, flush_every=32, max_batch=16,
+                  capacity=6, n_matrices=10, mixes=("hot", "churn", "mixed")),
+    "bench": dict(n=2048, requests=512, flush_every=64, max_batch=32,
+                  capacity=8, n_matrices=16, mixes=("hot", "churn", "mixed")),
+}
+
+
+def collect(scale: str = "quick", seed: int = 0) -> Tuple[List[dict], Dict]:
+    """Returns ``(csv_rows, serve_doc)``; the doc is the BENCH_serve.json
+    payload (one summary per mix)."""
+    cfg = SCALES[scale]
+    rows, mixes = [], {}
+    for mix in cfg["mixes"]:
+        engine = ServeEngine(capacity=cfg["capacity"],
+                             max_batch=cfg["max_batch"])
+        spec = TrafficSpec(mix=mix, n=cfg["n"],
+                           n_matrices=cfg["n_matrices"], seed=seed)
+        out = run_traffic(engine, spec, cfg["requests"],
+                          flush_every=cfg["flush_every"])
+        out["max_batch"] = cfg["max_batch"]
+        out["capacity"] = cfg["capacity"]
+        mixes[mix] = out
+        rows.append({
+            "name": f"serve/{mix}/n{cfg['n']}",
+            "us_per_call": out["latency_p50_s"] * 1e6,
+            "derived": (f"p99_ms={out['latency_p99_s']*1e3:.1f} "
+                        f"rps={out['throughput_rps']:.1f} "
+                        f"hit={out['hit_rate']:.0%} "
+                        f"batch={out['batch_size_mean']:.1f} "
+                        f"fallbacks={out['dispatch_fallbacks']}"),
+        })
+    doc = {
+        "schema": 1,
+        "scale": scale,
+        "jax_backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "python": platform.python_version(),
+        "mixes": mixes,
+    }
+    return rows, doc
+
+
+def check(doc: Dict) -> List[str]:
+    """The serve-smoke gate: empty mixes or silent dispatch fallbacks are
+    failures (an admitted operator must run its tuned backend)."""
+    problems = []
+    if not doc.get("mixes"):
+        problems.append("no mixes recorded")
+    for mix, out in doc.get("mixes", {}).items():
+        if out.get("requests", 0) == 0:
+            problems.append(f"{mix}: served 0 requests")
+        if out.get("dispatch_fallbacks", 0):
+            problems.append(f"{mix}: {out['dispatch_fallbacks']} admitted "
+                            f"operators fell back off their tuned backend")
+    return problems
+
+
+def run(scale: str = "quick"):
+    return collect(scale)[0]

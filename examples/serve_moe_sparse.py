@@ -5,9 +5,13 @@ the paper's dynamic-format idea inside an LM serving loop.
   PYTHONPATH=src python examples/serve_moe_sparse.py --tune
   PYTHONPATH=src python examples/serve_moe_sparse.py --impl coo --spmv-backend pallas
 
-The COO dispatch path routes expert dispatch/combine through the core SpMM;
-``--spmv-backend`` scopes an ExecutionPolicy over the serving loop so the
-kernel backend is chosen declaratively instead of threading impl strings.
+The COO dispatch path routes expert dispatch/combine through the
+``SparseOperator`` facade (``models/moe.py`` builds the routing matrices as
+COO operators, so the ambient ``ExecutionPolicy`` picks the kernel);
+``--spmv-backend`` scopes that policy over the serving loop. Decode-step
+latencies are accounted through the serving layer's stats
+(``repro.serve.stats``), so the report carries the same p50/p99 shape as
+the multi-tenant engine's (``repro.launch.serve --traffic ...``).
 """
 import argparse
 import contextlib
@@ -21,6 +25,7 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core import use_backend
 from repro.models import build_model
+from repro.serve.stats import BatchRecord, RequestRecord, ServeStats
 
 
 def build(impl: str):
@@ -32,6 +37,7 @@ def build(impl: str):
 
 
 def serve(cfg, model, params, B=8, S=32, G=16):
+    """Prefill + generate; returns (tok/s, ServeStats over decode steps)."""
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(1, cfg.vocab, (B, S)), jnp.int32)
     caches = model.init_caches(B, S + G)
@@ -40,13 +46,22 @@ def serve(cfg, model, params, B=8, S=32, G=16):
         logits, caches = dec(params, tokens[:, t:t+1], caches, t)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     jax.block_until_ready(logits)
+    stats = ServeStats()
     t0 = time.perf_counter()
     for g in range(G):
+        t_step = time.perf_counter()
         logits, caches = dec(params, tok, caches, S + g)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(logits)
+        jax.block_until_ready(tok)
+        dt = time.perf_counter() - t_step
+        rec = RequestRecord(rid=g, fingerprint=cfg.name, batch_size=B,
+                            cache_hit=g > 0, coalesced=B > 1,
+                            queue_wait_s=0.0, latency_s=dt)
+        stats.record_batch(BatchRecord(fingerprint=cfg.name, size=B,
+                                       coalesced=B > 1, cache_hit=g > 0,
+                                       exec_s=dt), [rec])
     dt = time.perf_counter() - t0
-    return B * G / dt
+    return B * G / dt, stats
 
 
 def main():
@@ -65,7 +80,7 @@ def main():
             best, best_tps = None, 0.0
             for impl in ["sort", "onehot", "coo"]:
                 cfg, model, params = build(impl)
-                tps = serve(cfg, model, params, G=8)
+                tps, _ = serve(cfg, model, params, G=8)
                 print(f"  dispatch={impl:7s}: {tps:.1f} tok/s")
                 if tps > best_tps:
                     best, best_tps = impl, tps
@@ -74,8 +89,10 @@ def main():
         else:
             impl = args.impl
         cfg, model, params = build(impl)
-        tps = serve(cfg, model, params)
-    print(f"serving qwen3-moe(smoke) with dispatch={impl}: {tps:.1f} tok/s")
+        tps, stats = serve(cfg, model, params)
+    print(f"serving qwen3-moe(smoke) with dispatch={impl}: {tps:.1f} tok/s "
+          f"(step p50={stats.latency_percentile(50)*1e3:.1f} "
+          f"p99={stats.latency_percentile(99)*1e3:.1f} ms)")
 
 
 if __name__ == "__main__":

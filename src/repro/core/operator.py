@@ -285,6 +285,44 @@ class SparseOperator:
         """``A @ X`` for a 2-D ``X`` (SpMM) — alias of the ``@`` operator."""
         return self @ X
 
+    def batched_matvec(self, xs) -> jnp.ndarray:
+        """Coalesced SpMV: a ``(k, ncols)`` stack of right-hand sides in one
+        SpMM tile, returning the ``(k, nrows)`` stack of results.
+
+        This is the serving layer's batching primitive
+        (``repro.serve.ServeEngine``): ``k`` independent matvec requests
+        against the same matrix execute as a single ``A @ xs.T`` SpMM. On
+        the vmapped-SpMV SpMM lane (every format without a native SpMM
+        kernel — the plain and Pallas backends for coo/csr/dia/ell/sell)
+        row ``i`` of the result is **bit-for-bit identical** to
+        ``self @ xs[i]``, because the batched kernel performs each column's
+        accumulations in the same order as the single-vector kernel. Lanes
+        that reassociate the reduction (the ``dense`` backend's XLA matmul,
+        native SpMM kernels like BSR's block matmul) do not carry that
+        guarantee — the engine serves those per-request instead
+        (see docs/serving.md, "Coalescing rules").
+
+        Args:
+            xs: ``(k, ncols)`` array — one right-hand side per row.
+
+        Returns:
+            ``(k, nrows)`` array; row ``i`` is ``A @ xs[i]``.
+
+        Example:
+            >>> import numpy as np, scipy.sparse as sp
+            >>> A = as_operator(sp.eye(3, format="csr") * 2.0)
+            >>> ys = A.batched_matvec(np.eye(3, dtype=np.float32))
+            >>> [float(v) for v in np.asarray(ys).diagonal()]
+            [2.0, 2.0, 2.0]
+        """
+        xs = jnp.asarray(xs)
+        if xs.ndim != 2:
+            raise ValueError(f"batched_matvec: xs must be (k, ncols), got ndim={xs.ndim}")
+        if xs.shape[1] != self.shape[1]:
+            raise ValueError(f"batched_matvec: {self.shape} against rhs stack "
+                             f"{tuple(xs.shape)} (columns must match)")
+        return (self @ xs.T).T
+
     def masked_matvec(self, x, row_mask) -> jnp.ndarray:
         """Row-masked SpMV: ``where(row_mask, A @ x, 0)``.
 

@@ -7,12 +7,19 @@ handle across SpMV calls on the same matrix. Our analogue caches the
 fingerprint, so repeated ``spmv_cached`` calls on the same logical matrix pay
 conversion + compilation once. The matrix cache is a true LRU: hits move the
 entry to the back, so the hottest matrices are evicted last.
+
+The workspace doubles as the serving layer's **warm pool**
+(``repro.serve.ServeEngine``): :meth:`SpmvWorkspace.admit` is the
+fingerprint-keyed admission path — first sight of a matrix builds (and
+typically zero-run tunes) its operator, capacity evicts the least-recently
+served tenant, and :meth:`SpmvWorkspace.stats` exposes the hit/miss/eviction
+counters the serving stats report.
 """
 from __future__ import annotations
 
 import hashlib
 from collections import OrderedDict
-from typing import Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -30,6 +37,23 @@ class SpmvWorkspace:
         self._max = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+
+    @property
+    def capacity(self) -> int:
+        return self._max
+
+    def stats(self) -> Dict[str, int]:
+        """Cache counters: ``hits``/``misses`` (every keyed lookup),
+        ``evictions`` (capacity pops), current ``size`` and ``capacity``."""
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "size": len(self._ops), "capacity": self._max}
+
+    def _evict_to(self, room: int) -> None:
+        while len(self._ops) > max(0, self._max - room):
+            self._ops.popitem(last=False)  # least-recently-used first
+            self.evictions += 1
 
     @staticmethod
     def fingerprint(a) -> str:
@@ -66,10 +90,41 @@ class SpmvWorkspace:
             self._ops.move_to_end(key)  # true LRU: a hit refreshes recency
         else:
             self.misses += 1
-            while len(self._ops) >= self._max:
-                self._ops.popitem(last=False)  # evict least-recently-used
+            self._evict_to(1)
             self._ops[key] = as_operator(a, fmt, **kw)
         return self._ops[key]
+
+    def lookup(self, fingerprint: str) -> Optional[SparseOperator]:
+        """Warm-pool probe by raw fingerprint: a hit refreshes recency and
+        counts; a miss counts and returns ``None`` (no build)."""
+        if fingerprint in self._ops:
+            self.hits += 1
+            self._ops.move_to_end(fingerprint)
+            return self._ops[fingerprint]
+        self.misses += 1
+        return None
+
+    def admit(self, fingerprint: str,
+              build: Callable[[], SparseOperator]) -> Tuple[SparseOperator, bool]:
+        """Fingerprint-keyed admission (the serving layer's warm pool).
+
+        Returns ``(operator, hit)``. On a miss, ``build()`` constructs the
+        operator (typically ``as_operator(...).tune(mode="predict")``) and
+        the result is inserted, evicting the LRU entry on capacity. The
+        eviction runs *after* ``build()`` returns: any ``get_operator`` /
+        ``lookup`` hit the build performs refreshes that entry's recency
+        first, so a same-call insert can never evict the entry the build
+        just touched (it evicts the true least-recently-used one).
+        """
+        if fingerprint in self._ops:
+            self.hits += 1
+            self._ops.move_to_end(fingerprint)
+            return self._ops[fingerprint], True
+        self.misses += 1
+        op = build()
+        self._evict_to(1)
+        self._ops[fingerprint] = op
+        return op, False
 
     def get_matrix(self, a, fmt: str, **kw):
         return self.get_operator(a, fmt, **kw).container

@@ -1,7 +1,21 @@
-"""Serving launcher: batched prefill + decode loop with KV caches.
+"""Serving launcher: the sparse request path (ServeEngine traffic mixes)
+plus the legacy batched LM prefill + decode loop.
+
+Sparse serving — drive the multi-tenant engine with seeded traffic and
+print the stats the serving trajectory tracks (``BENCH_serve.json``):
+
+  PYTHONPATH=src python -m repro.launch.serve --traffic hot --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --traffic churn --n 512 \
+      --capacity 4 --max-batch 16 --flush-every 32
+
+LM serving (the original mode; flags unchanged):
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --batch 4 --prompt-len 32 --gen 32
+
+Both paths report through ``repro.serve.stats`` — the LM decode loop
+records one request per generated token batch, so its p50/p99 ms/token
+come from the same percentile machinery as the sparse engine's latencies.
 """
 from __future__ import annotations
 
@@ -14,18 +28,35 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models import build_model
+from repro.serve import ServeEngine, TrafficSpec, run_traffic
+from repro.serve.stats import BatchRecord, RequestRecord, ServeStats
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_traffic(args) -> dict:
+    """The sparse request path: engine + seeded traffic mix -> summary."""
+    engine = ServeEngine(capacity=args.capacity, max_batch=args.max_batch,
+                         tune_mode=args.tune_mode)
+    spec = TrafficSpec(mix=args.traffic, n=args.n,
+                       n_matrices=args.tenants, seed=args.seed)
+    out = run_traffic(engine, spec, args.requests,
+                      flush_every=args.flush_every)
+    print(f"mix={out['mix']} n={out['n']} tenants={out['n_matrices']} "
+          f"requests={out['requests']} batches={out['batches']}")
+    print(f"latency p50={out['latency_p50_s']*1e3:.2f}ms "
+          f"p99={out['latency_p99_s']*1e3:.2f}ms  "
+          f"throughput={out['throughput_rps']:.1f} req/s")
+    print(f"warm pool: hit rate {out['hit_rate']:.0%} "
+          f"(hits={out['cache_hits']} misses={out['cache_misses']} "
+          f"evictions={out['workspace']['evictions']}), "
+          f"tunes={out['tunes']}, fallbacks={out['dispatch_fallbacks']}")
+    print(f"batching: mean={out['batch_size_mean']:.1f} "
+          f"max={out['batch_size_max']} "
+          f"coalesced={out['coalesced_fraction']:.0%} of requests")
+    return out
 
+
+def serve_lm(args) -> None:
+    """The legacy LM loop: batched prefill via decode + greedy generation."""
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
@@ -54,21 +85,70 @@ def main():
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
+    # decode: each generated token batch is one serving request, accounted
+    # through the same stats layer as the sparse engine
+    stats = ServeStats()
     out = []
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     t0 = time.time()
     for g in range(G):
+        t_step = time.time()
         logits, caches = decode(params, tok, caches, prefix + S + g)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         out.append(np.asarray(tok[:, 0]))
+        dt = time.time() - t_step
+        rec = RequestRecord(rid=g, fingerprint=cfg.name, batch_size=B,
+                            cache_hit=g > 0, coalesced=B > 1,
+                            queue_wait_s=0.0, latency_s=dt)
+        stats.record_batch(BatchRecord(fingerprint=cfg.name, size=B,
+                                       coalesced=B > 1, cache_hit=g > 0,
+                                       exec_s=dt), [rec])
     jax.block_until_ready(logits)
     t_gen = time.time() - t0
 
     toks_s = B * G / t_gen
     print(f"arch={cfg.name} B={B} prompt={S} gen={G}")
     print(f"prompt phase: {t_prefill*1e3:.0f}ms; decode: {t_gen*1e3:.0f}ms "
-          f"({toks_s:.1f} tok/s, {1e3*t_gen/G:.1f} ms/token)")
+          f"({toks_s:.1f} tok/s, {1e3*t_gen/G:.1f} ms/token, "
+          f"p50={stats.latency_percentile(50)*1e3:.1f} "
+          f"p99={stats.latency_percentile(99)*1e3:.1f} ms/step)")
     print("sample continuation (batch 0):", [int(o[0]) for o in out[:16]])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    # LM mode (legacy flags, unchanged)
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    # sparse serving mode (selects it when given)
+    ap.add_argument("--traffic", default=None, choices=["hot", "churn", "mixed"],
+                    help="serve a sparse traffic mix through the ServeEngine "
+                         "instead of the LM loop")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--n", type=int, default=96, help="tenant matrix dimension")
+    ap.add_argument("--tenants", type=int, default=8,
+                    help="distinct matrices in the churn/mixed pools")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="warm-pool size (operators held tuned)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="widest SpMM tile one flush may form")
+    ap.add_argument("--flush-every", type=int, default=16,
+                    help="requests per batching window (0 = one window)")
+    ap.add_argument("--tune-mode", default="predict",
+                    choices=["predict", "run", "none"],
+                    help="admission tuning for first-sight matrices")
+    args = ap.parse_args()
+    if args.tune_mode == "none":
+        args.tune_mode = None
+
+    if args.traffic:
+        serve_traffic(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

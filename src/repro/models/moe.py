@@ -250,9 +250,16 @@ def _moe_onehot(p, x, cfg, mcfg):
 
 def _moe_coo(p, x, cfg, mcfg):
     """Dispatch/combine as repro.core COO SpMM — the paper's library in the
-    LM hot loop. P: (E*C, T) with T*K entries; X_e = P @ X; Y = (P*w)^T @ H."""
+    LM hot loop. P: (E*C, T) with T*K entries; X_e = P @ X; Y = (P*w)^T @ H.
+
+    The products go through the ``SparseOperator`` facade (trace-safe: the
+    operator is a pytree over the COO container), so the serving loop's
+    ambient ``ExecutionPolicy`` (``use_backend(...)``) picks the kernel
+    backend exactly like every other dispatch site — bit-identical to the
+    legacy ``spmm(...)`` shim it replaces.
+    """
     from repro.core.formats import COO
-    from repro.core.spmv import spmm
+    from repro.core.operator import SparseOperator
 
     T, D = x.shape
     E, K = mcfg.n_experts, mcfg.top_k
@@ -262,12 +269,12 @@ def _moe_coo(p, x, cfg, mcfg):
 
     ones = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
     P_disp = COO(slot.astype(jnp.int32), t_s.astype(jnp.int32), ones, (E * C, T))
-    xe = spmm(P_disp, x).reshape(E, C, D)
+    xe = (SparseOperator(P_disp) @ x).reshape(E, C, D)
     h = _experts_ffn(p["experts"], xe).reshape(E * C, D)
     # combine: transpose by swapping row/col; rows (tokens) unsorted is fine
     # for the scatter-add plain impl (Algorithm 1 has no order requirement).
     w = jnp.where(keep, w_s, 0.0).astype(h.dtype)
     P_comb = COO(t_s.astype(jnp.int32), slot.astype(jnp.int32), w, (T, E * C + 1))
     h_pad = jnp.concatenate([h, jnp.zeros((1, D), h.dtype)], axis=0)
-    y = spmm(P_comb, h_pad)
+    y = SparseOperator(P_comb) @ h_pad
     return y.astype(x.dtype), aux

@@ -1,0 +1,27 @@
+"""Multi-tenant SpMV/SpMM serving — the request path over the operator cache.
+
+The "millions of users" layer: requests carrying ``(matrix_or_fingerprint,
+rhs)`` enter a queue (``ServeEngine.submit``), are grouped per operator and
+coalesced into SpMM tiles (``batcher``), admitted into the ``SpmvWorkspace``
+LRU warm pool with zero-run tuning on first sight, and served with
+per-request/per-batch accounting (``stats``). ``traffic`` generates the
+seeded request mixes the serving benchmark (``benchmarks/serve_bench.py``)
+and the CI ``serve-smoke`` job run. See docs/serving.md.
+"""
+from .batcher import (
+    BIT_STABLE_BACKENDS,
+    ServeRequest,
+    Tile,
+    coalescible,
+    plan_batches,
+)
+from .engine import ServeEngine, Ticket
+from .stats import BatchRecord, RequestRecord, ServeStats
+from .traffic import MIXES, TrafficGenerator, TrafficSpec, matrix_pool, run_traffic
+
+__all__ = [
+    "BIT_STABLE_BACKENDS", "ServeRequest", "Tile", "coalescible", "plan_batches",
+    "ServeEngine", "Ticket",
+    "BatchRecord", "RequestRecord", "ServeStats",
+    "MIXES", "TrafficGenerator", "TrafficSpec", "matrix_pool", "run_traffic",
+]

@@ -1,0 +1,254 @@
+"""The multi-tenant SpMV/SpMM serving engine — the request path over the
+operator cache.
+
+Request lifecycle (docs/serving.md has the full picture)::
+
+    submit(matrix | fingerprint, rhs)          # enqueue, never executes
+        -> Ticket                              # future-like handle
+    flush()                                    # the batch boundary
+        1. plan: group queued requests per matrix fingerprint, chunk into
+           tiles of <= max_batch (repro.serve.batcher, deterministic)
+        2. admit: first sight of a matrix zero-run tunes it
+           (tune(mode="predict")) and inserts the operator into the
+           SpmvWorkspace LRU warm pool; a warm fingerprint is a cache hit
+           (recency refreshed). Capacity evicts the least-recently served
+           tenant — its next appearance re-tunes on readmission.
+        3. execute: a multi-request tile on a bit-stable lane runs as ONE
+           SpMM (SparseOperator.batched_matvec) and the result rows are
+           scattered back to their tickets bit-identically to per-request
+           SpMV; other lanes serve per-request (coalescing is only an
+           optimisation, bit-identity is the contract).
+        4. account: per-request queue wait/latency and per-batch size,
+           cache hit, exec time land in ServeStats.
+
+The engine is async-friendly by construction: ``submit`` only appends to
+the queue, ``flush`` is the single execution point, and tickets are
+awaitable (``await ticket`` flushes lazily if needed) — an asyncio front
+end can drive one engine per event loop without locks. It is *not*
+thread-safe; shard across engines instead of sharing one.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.operator import ExecutionPolicy, SparseOperator, as_operator
+from repro.core.registry import SpmvWorkspace
+from repro.core.spmv import select_spmv
+
+from .batcher import ServeRequest, Tile, coalescible, plan_batches
+from .stats import BatchRecord, RequestRecord, ServeStats
+
+
+class Ticket:
+    """Future-like handle for one submitted request.
+
+    ``result()`` (or ``await ticket``) returns the ``(nrows,)`` result,
+    flushing the engine first when the request is still queued. ``record``
+    is the per-request :class:`~repro.serve.stats.RequestRecord` once served.
+    """
+
+    __slots__ = ("rid", "_engine", "_y", "record")
+
+    def __init__(self, rid: int, engine: "ServeEngine"):
+        self.rid = rid
+        self._engine = engine
+        self._y = None
+        self.record: Optional[RequestRecord] = None
+
+    @property
+    def done(self) -> bool:
+        return self.record is not None
+
+    def result(self):
+        if not self.done:
+            self._engine.flush()
+        if not self.done:  # flush ran but this rid was not in the queue
+            raise RuntimeError(f"request {self.rid} was never served")
+        return self._y
+
+    def __await__(self):
+        return self.result()
+        yield  # pragma: no cover — marks __await__ as a generator
+
+    def _fulfil(self, y, record: RequestRecord) -> None:
+        self._y = y
+        self.record = record
+
+
+class ServeEngine:
+    """Batched multi-tenant serving over the ``SpmvWorkspace`` warm pool.
+
+    Args:
+        capacity: warm-pool size (distinct matrices held tuned + converted);
+            ignored when an explicit ``workspace`` is passed.
+        workspace: share an existing :class:`SpmvWorkspace` between engines.
+        policy: base :class:`ExecutionPolicy` for admitted operators
+            (default: the ambient default policy).
+        fmt: container format matrices are built in *before* tuning
+            retargets them.
+        max_batch: widest SpMM tile one flush may form per matrix.
+        tune_mode: ``"predict"`` (zero-run, the serving default), ``"run"``
+            (measure — pays real kernel time at admission), or ``None``
+            (no tuning: serve in ``fmt`` under ``policy`` as-is).
+        clock: injectable monotonic clock (tests pass a fake; benchmarks
+            keep ``time.perf_counter``).
+    """
+
+    def __init__(self, *, capacity: int = 32,
+                 workspace: Optional[SpmvWorkspace] = None,
+                 policy: Optional[ExecutionPolicy] = None,
+                 fmt: str = "csr", max_batch: int = 32,
+                 tune_mode: Optional[str] = "predict",
+                 clock=time.perf_counter):
+        self.workspace = workspace if workspace is not None \
+            else SpmvWorkspace(max_entries=capacity)
+        self.policy = policy
+        self.fmt = fmt
+        self.max_batch = int(max_batch)
+        self.tune_mode = tune_mode
+        self.clock = clock
+        self.stats = ServeStats()
+        self._queue: List[ServeRequest] = []
+        self._tickets: Dict[int, Ticket] = {}
+        self._matrices: Dict[str, Any] = {}  # fp -> source matrix (rebuilds
+        #                                      after eviction re-tune from it)
+        self._next_rid = 0
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: float = 0.0
+        # jitted lanes, cached across calls by (container treedef, policy
+        # aux, operand shape) — the serving analogue of ArmPL's
+        # create/optimize once, exec N times
+        self._mv = jax.jit(lambda op, x: op @ x)
+        self._mm = jax.jit(lambda op, xs: op.batched_matvec(xs))
+
+    # -- request side -------------------------------------------------------
+
+    def fingerprint(self, matrix) -> str:
+        """The structural fingerprint requests may carry instead of the
+        matrix itself once the engine has seen it."""
+        return SpmvWorkspace.fingerprint(matrix)
+
+    def submit(self, matrix_or_fingerprint: Union[str, Any], rhs) -> Ticket:
+        """Enqueue ``A @ rhs``; returns a :class:`Ticket`. Never executes.
+
+        ``matrix_or_fingerprint`` is either a matrix-like (scipy sparse,
+        dense, registered container, ``SparseOperator``) or the fingerprint
+        string of a matrix this engine has already seen — unknown
+        fingerprints raise ``KeyError`` at flush time.
+        """
+        if isinstance(matrix_or_fingerprint, str):
+            fp = matrix_or_fingerprint
+        else:
+            fp = self.fingerprint(matrix_or_fingerprint)
+            # keep the source: eviction from the warm pool must be able to
+            # rebuild + re-tune on readmission
+            self._matrices.setdefault(fp, matrix_or_fingerprint)
+        now = self.clock()
+        if self._t_first_submit is None:
+            self._t_first_submit = now
+        rid = self._next_rid
+        self._next_rid += 1
+        ticket = Ticket(rid, self)
+        self._tickets[rid] = ticket
+        self._queue.append(ServeRequest(rid, fp, jnp.asarray(rhs), now))
+        return ticket
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    # -- admission ----------------------------------------------------------
+
+    def _admit(self, fp: str):
+        """Warm-pool lookup/insert for one (fingerprint, flush) group;
+        returns ``(operator, hit)``."""
+        built = {"tuned": False}
+
+        def build() -> SparseOperator:
+            if fp not in self._matrices:
+                raise KeyError(
+                    f"fingerprint {fp[:12]}... unknown: submit the matrix "
+                    f"itself at least once before fingerprint-only requests")
+            op = as_operator(self._matrices[fp], self.fmt, policy=self.policy)
+            if self.tune_mode is not None:
+                op = op.tune(mode=self.tune_mode)
+                built["tuned"] = True
+            return op
+
+        op, hit = self.workspace.admit(fp, build)
+        selected = select_spmv(op.container, op._effective_policy()).key.backend
+        preferred = op._effective_policy().backends[0]
+        self.stats.record_admission(hit=hit, tuned=built["tuned"],
+                                    fallback=selected != preferred)
+        return op, hit
+
+    # -- execution ----------------------------------------------------------
+
+    def _serve_tile(self, tile: Tile, op: SparseOperator, hit: bool) -> None:
+        t_start = self.clock()
+        coalesce = tile.size > 1 and coalescible(op)
+        if coalesce:
+            xs = jnp.stack([r.rhs for r in tile.requests])
+            ys = jax.block_until_ready(self._mm(op, xs))
+            results = [ys[i] for i in range(tile.size)]
+        else:
+            results = [jax.block_until_ready(self._mv(op, r.rhs))
+                       for r in tile.requests]
+        t_done = self.clock()
+        self._t_last_done = max(self._t_last_done, t_done)
+        records = []
+        for req, y in zip(tile.requests, results):
+            rec = RequestRecord(
+                rid=req.rid, fingerprint=req.fingerprint,
+                batch_size=tile.size, cache_hit=hit, coalesced=coalesce,
+                queue_wait_s=t_start - req.t_submit,
+                latency_s=t_done - req.t_submit)
+            records.append(rec)
+            self._tickets.pop(req.rid)._fulfil(y, rec)
+        self.stats.record_batch(
+            BatchRecord(fingerprint=tile.fingerprint, size=tile.size,
+                        coalesced=coalesce, cache_hit=hit,
+                        exec_s=t_done - t_start),
+            records)
+
+    def flush(self) -> int:
+        """Serve everything queued; returns the number of requests served.
+
+        One admission per (fingerprint, flush) group — multiple tiles of the
+        same matrix in one flush share the warm-pool entry they admitted.
+        """
+        if not self._queue:
+            return 0
+        queue, self._queue = self._queue, []
+        tiles = plan_batches(queue, self.max_batch)
+        admitted: Dict[str, tuple] = {}
+        for tile in tiles:
+            if tile.fingerprint not in admitted:
+                admitted[tile.fingerprint] = self._admit(tile.fingerprint)
+            op, hit = admitted[tile.fingerprint]
+            self._serve_tile(tile, op, hit)
+        return len(queue)
+
+    async def aflush(self) -> int:
+        """``flush`` for asyncio front ends (execution itself is synchronous
+        JAX; the coroutine shape lets callers schedule it on a loop)."""
+        return self.flush()
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def wall_s(self) -> float:
+        """First submit to last served result, on the engine's clock."""
+        if self._t_first_submit is None:
+            return 0.0
+        return max(0.0, self._t_last_done - self._t_first_submit)
+
+    def summary(self) -> Dict:
+        """``ServeStats.summary`` over the engine's own wall clock, plus the
+        warm pool's LRU counters."""
+        out = self.stats.summary(self.wall_s)
+        out["workspace"] = self.workspace.stats()
+        return out

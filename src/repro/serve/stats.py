@@ -1,0 +1,131 @@
+"""Serving-side observability: per-request and per-batch records + summary.
+
+The engine (``repro.serve.engine``) appends one :class:`RequestRecord` per
+served request and one :class:`BatchRecord` per executed batch; this module
+turns them into the latency/throughput summary the benchmark
+(``benchmarks/serve_bench.py``) writes to ``BENCH_serve.json``. Percentiles
+use the nearest-rank method over the recorded latencies, so a summary over a
+deterministic (fake-clock) run is itself deterministic.
+
+Counter invariants (asserted by ``tests/test_serve.py``):
+
+  - ``requests == len(request records) == sum(batch sizes)``
+  - ``cache_hits + cache_misses == admissions`` (one admission per
+    (fingerprint, flush) group)
+  - ``coalesced_requests <= requests``; every batch size is ``<= max_batch``
+  - ``0 <= queue_wait_s <= latency_s`` per request, so ``p50 <= p99``
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class RequestRecord:
+    """One served request, written when its result is scattered back."""
+
+    rid: int
+    fingerprint: str
+    batch_size: int          # requests coalesced into the tile that served it
+    cache_hit: bool          # warm-pool hit at admission time
+    coalesced: bool          # served by the SpMM tile (vs per-request SpMV)
+    queue_wait_s: float      # submit -> batch execution start
+    latency_s: float         # submit -> result ready
+
+
+@dataclass(frozen=True)
+class BatchRecord:
+    """One executed batch (a tile of coalesced requests, or a single one)."""
+
+    fingerprint: str
+    size: int
+    coalesced: bool
+    cache_hit: bool
+    exec_s: float            # kernel wall time for the whole tile
+
+
+def _percentile(sorted_vals: List[float], p: float) -> float:
+    """Nearest-rank percentile over an ascending list (0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    k = max(0, min(len(sorted_vals) - 1,
+                   int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+    return sorted_vals[k]
+
+
+@dataclass
+class ServeStats:
+    """Accumulator the engine feeds; ``summary()`` is the reporting surface."""
+
+    requests: List[RequestRecord] = field(default_factory=list)
+    batches: List[BatchRecord] = field(default_factory=list)
+    admissions: int = 0        # (fingerprint, flush) groups processed
+    cache_hits: int = 0        # warm-pool hits among those
+    cache_misses: int = 0      # cold admissions (operator built + tuned)
+    tunes: int = 0             # admission builds that ran tune()
+    dispatch_fallbacks: int = 0  # admitted operators whose selected backend
+    #                              differs from the tuned policy's preference
+
+    # -- feeding ------------------------------------------------------------
+
+    def record_admission(self, hit: bool, tuned: bool, fallback: bool) -> None:
+        self.admissions += 1
+        self.cache_hits += hit
+        self.cache_misses += not hit
+        self.tunes += tuned
+        self.dispatch_fallbacks += fallback
+
+    def record_batch(self, batch: BatchRecord,
+                     reqs: List[RequestRecord]) -> None:
+        self.batches.append(batch)
+        self.requests.extend(reqs)
+
+    # -- reporting ----------------------------------------------------------
+
+    def latency_percentile(self, p: float) -> float:
+        return _percentile(sorted(r.latency_s for r in self.requests), p)
+
+    def queue_wait_percentile(self, p: float) -> float:
+        return _percentile(sorted(r.queue_wait_s for r in self.requests), p)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.admissions if self.admissions else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return (sum(b.size for b in self.batches) / len(self.batches)
+                if self.batches else 0.0)
+
+    @property
+    def coalesced_fraction(self) -> float:
+        """Fraction of requests served inside a multi-request SpMM tile."""
+        n = len(self.requests)
+        return sum(r.coalesced for r in self.requests) / n if n else 0.0
+
+    def throughput(self, wall_s: float) -> float:
+        return len(self.requests) / wall_s if wall_s > 0 else 0.0
+
+    def summary(self, wall_s: float = 0.0) -> Dict:
+        """The ``BENCH_serve.json`` per-mix record."""
+        sizes = [b.size for b in self.batches]
+        return {
+            "requests": len(self.requests),
+            "batches": len(self.batches),
+            "admissions": self.admissions,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "hit_rate": self.hit_rate,
+            "tunes": self.tunes,
+            "dispatch_fallbacks": self.dispatch_fallbacks,
+            "batch_size_mean": self.mean_batch_size,
+            "batch_size_max": max(sizes) if sizes else 0,
+            "coalesced_fraction": self.coalesced_fraction,
+            "latency_p50_s": self.latency_percentile(50),
+            "latency_p99_s": self.latency_percentile(99),
+            "queue_wait_p50_s": self.queue_wait_percentile(50),
+            "queue_wait_p99_s": self.queue_wait_percentile(99),
+            "wall_s": wall_s,
+            "throughput_rps": self.throughput(wall_s),
+        }

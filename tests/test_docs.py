@@ -26,7 +26,7 @@ DOCTEST_MODULES = [
     "repro.distributed_op.tune",
 ]
 
-REQUIRED_DOCS = ["architecture.md", "formats.md", "hpcg.md"]
+REQUIRED_DOCS = ["architecture.md", "formats.md", "hpcg.md", "serving.md"]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 

@@ -1,0 +1,326 @@
+"""Serving-layer tests: deterministic batching, coalesced-SpMM bit-identity
+across the format x backend grid, warm-pool LRU eviction + re-tune on
+readmission, and the stats-counter invariants.
+
+The bit-identity block is the serving acceptance criterion: a tile of k
+requests coalesced into one SpMM must scatter back results bit-for-bit
+identical to k per-request ``A @ x`` calls — on every (format, backend)
+cell the conformance grid claims, under the same strict no-fallback policy.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExecutionPolicy, SpmvWorkspace, as_operator
+from repro.core import matrices as M
+from repro.serve import (
+    ServeEngine,
+    TrafficGenerator,
+    TrafficSpec,
+    coalescible,
+    plan_batches,
+    run_traffic,
+)
+from repro.serve.batcher import ServeRequest
+
+_N = 96
+_S = (M.banded(_N, 3, seed=0) + M.random_uniform(_N, 0.02, seed=1)).tocsr()
+_RHS = [np.random.default_rng(10 + i).standard_normal(_N).astype(np.float32)
+        for i in range(6)]
+
+SERVE_FORMATS = ("coo", "csr", "dia", "ell", "sell")
+
+
+class FakeClock:
+    """Deterministic monotonic clock: every read advances 1ms."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        self.t += 1e-3
+        return self.t
+
+
+def _engine(**kw):
+    kw.setdefault("clock", FakeClock())
+    return ServeEngine(**kw)
+
+
+# ---------------------------------------------------------------- batcher ----
+
+
+def _queue_from_traffic(spec, num):
+    """Materialise a traffic stream as the engine's queue would see it."""
+    gen = TrafficGenerator(spec)
+    queue = []
+    for i, (name, mat, rhs) in enumerate(gen.requests(num)):
+        queue.append(ServeRequest(i, SpmvWorkspace.fingerprint(mat), rhs,
+                                  t_submit=float(i)))
+    return queue
+
+
+class TestBatcher:
+    def test_plan_is_deterministic_on_seeded_traffic(self):
+        spec = TrafficSpec(mix="churn", n=32, n_matrices=4, seed=7)
+        q1 = _queue_from_traffic(spec, 24)
+        q2 = _queue_from_traffic(spec, 24)
+        p1 = plan_batches(q1, max_batch=5)
+        p2 = plan_batches(q2, max_batch=5)
+        assert [(t.fingerprint, tuple(r.rid for r in t.requests)) for t in p1] \
+            == [(t.fingerprint, tuple(r.rid for r in t.requests)) for t in p2]
+
+    def test_groups_first_arrival_order_fifo_chunks(self):
+        # fingerprints arrive interleaved: b a a b a — groups order (b, a),
+        # FIFO inside each group, chunked at max_batch
+        def req(i, fp):
+            return ServeRequest(i, fp, np.zeros(4, np.float32), float(i))
+
+        queue = [req(0, "b"), req(1, "a"), req(2, "a"), req(3, "b"), req(4, "a")]
+        tiles = plan_batches(queue, max_batch=2)
+        got = [(t.fingerprint, tuple(r.rid for r in t.requests)) for t in tiles]
+        assert got == [("b", (0, 3)), ("a", (1, 2)), ("a", (4,))]
+        assert all(t.size <= 2 for t in tiles)
+
+    def test_max_batch_validated(self):
+        with pytest.raises(ValueError, match="max_batch"):
+            plan_batches([], max_batch=0)
+
+    def test_coalescible_grid(self):
+        # plain/pallas vmapped-SpMV lanes coalesce; the dense backend's XLA
+        # matmul reassociates and must not
+        for fmt in SERVE_FORMATS:
+            op = as_operator(_S, fmt)
+            assert coalescible(op.using("plain", fallback=False))
+            assert coalescible(op.using("pallas")), fmt
+            assert not coalescible(op.using("dense", fallback=False))
+
+
+# ----------------------------------------------------------- bit-identity ----
+
+
+class TestCoalescedBitIdentity:
+    @pytest.mark.parametrize("backend", ["plain", "pallas"])
+    @pytest.mark.parametrize("fmt", SERVE_FORMATS)
+    def test_coalesced_equals_per_request(self, fmt, backend):
+        """One SpMM tile vs k independent matvecs: bit-for-bit, per cell,
+        under the strict no-fallback policy the conformance grid uses."""
+        pol = ExecutionPolicy(backends=(backend,), allow_fallback=False)
+        batched = _engine(fmt=fmt, policy=pol, tune_mode=None, max_batch=8)
+        singles = _engine(fmt=fmt, policy=pol, tune_mode=None, max_batch=1)
+        t_b = [batched.submit(_S, x) for x in _RHS]
+        t_s = [singles.submit(_S, x) for x in _RHS]
+        batched.flush()
+        singles.flush()
+        for tb, ts in zip(t_b, t_s):
+            assert np.array_equal(np.asarray(tb.result()),
+                                  np.asarray(ts.result())), (fmt, backend)
+        # the batched engine really did coalesce; the singles really did not
+        assert all(t.record.coalesced and t.record.batch_size == len(_RHS)
+                   for t in t_b)
+        assert all(not t.record.coalesced and t.record.batch_size == 1
+                   for t in t_s)
+
+    def test_coalesced_equals_direct_operator_matvec(self):
+        """Engine results == jitted `A @ x` on the admitted operator."""
+        eng = _engine(fmt="csr", tune_mode=None, max_batch=8)
+        tickets = [eng.submit(_S, x) for x in _RHS]
+        eng.flush()
+        op = eng.workspace.lookup(eng.fingerprint(_S))
+        mv = jax.jit(lambda op, x: op @ x)
+        for t, x in zip(tickets, _RHS):
+            assert np.array_equal(np.asarray(t.result()),
+                                  np.asarray(mv(op, jnp.asarray(x))))
+
+    def test_dense_backend_served_per_request(self):
+        """A non-bit-stable lane must not coalesce — and still be exact."""
+        pol = ExecutionPolicy(backends=("dense",), allow_fallback=False)
+        eng = _engine(fmt="csr", policy=pol, tune_mode=None, max_batch=8)
+        tickets = [eng.submit(_S, x) for x in _RHS]
+        eng.flush()
+        assert all(not t.record.coalesced for t in tickets)
+        op = eng.workspace.lookup(eng.fingerprint(_S))
+        mv = jax.jit(lambda op, x: op @ x)
+        for t, x in zip(tickets, _RHS):
+            assert np.array_equal(np.asarray(t.result()),
+                                  np.asarray(mv(op, jnp.asarray(x))))
+
+    def test_batched_matvec_validates_shapes(self):
+        op = as_operator(_S, "csr")
+        with pytest.raises(ValueError, match="ndim"):
+            op.batched_matvec(np.zeros(_N, np.float32))
+        with pytest.raises(ValueError, match="columns"):
+            op.batched_matvec(np.zeros((2, _N + 1), np.float32))
+        ys = op.batched_matvec(np.stack(_RHS[:2]))
+        assert ys.shape == (2, _N)
+        assert np.array_equal(np.asarray(ys[0]), np.asarray(op @ _RHS[0]))
+
+
+# --------------------------------------------------------------- warm pool ----
+
+
+class TestWarmPool:
+    def test_eviction_then_readmission_retunes(self):
+        A, B = M.banded(32, 3, seed=1), M.tridiag(32, seed=2)
+        eng = _engine(capacity=1, max_batch=4)  # pool holds ONE tenant
+        x = np.ones(32, np.float32)
+
+        eng.submit(A, x); eng.flush()       # admit A (tune #1)
+        eng.submit(B, x); eng.flush()       # admit B, evict A (tune #2)
+        eng.submit(A, x); eng.flush()       # readmit A: re-tune (tune #3)
+        assert eng.stats.tunes == 3
+        assert eng.stats.cache_hits == 0
+        assert eng.workspace.stats()["evictions"] == 2
+
+        eng.submit(A, x); eng.flush()       # warm now: hit, no new tune
+        assert eng.stats.tunes == 3
+        assert eng.stats.cache_hits == 1
+
+    def test_one_admission_per_group_per_flush(self):
+        eng = _engine(capacity=4, max_batch=2)
+        x = np.ones(32, np.float32)
+        A = M.banded(32, 3, seed=1)
+        for _ in range(5):                  # 5 requests -> 3 tiles, 1 group
+            eng.submit(A, x)
+        eng.flush()
+        assert eng.stats.admissions == 1
+        assert len(eng.stats.batches) == 3
+
+    def test_fingerprint_only_submission(self):
+        eng = _engine(capacity=2)
+        x = np.ones(32, np.float32)
+        A = M.banded(32, 3, seed=1)
+        t0 = eng.submit(A, x); eng.flush()
+        fp = eng.fingerprint(A)
+        t1 = eng.submit(fp, x)              # request by fingerprint alone
+        assert np.array_equal(np.asarray(t1.result()), np.asarray(t0.result()))
+
+    def test_unknown_fingerprint_raises_at_flush(self):
+        eng = _engine()
+        eng.submit("deadbeef", np.ones(8, np.float32))
+        with pytest.raises(KeyError, match="unknown"):
+            eng.flush()
+
+    def test_ticket_result_flushes_and_await_works(self):
+        eng = _engine()
+        A = M.tridiag(16, seed=0)
+        t = eng.submit(A, np.ones(16, np.float32))
+        assert not t.done
+        y = t.result()                      # lazy flush
+        assert t.done and y.shape == (16,)
+
+        async def roundtrip():
+            return await eng.submit(A, np.ones(16, np.float32))
+
+        assert np.asarray(asyncio.run(roundtrip())).shape == (16,)
+
+
+# ---------------------------------------------------- registry / LRU edges ----
+
+
+class TestWorkspaceCache:
+    def test_stats_counters(self):
+        ws = SpmvWorkspace(max_entries=2)
+        A, B, C = (M.banded(16, 3, seed=i) for i in range(3))
+        ws.get_operator(A, "csr")
+        ws.get_operator(A, "csr")
+        assert ws.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                              "size": 1, "capacity": 2}
+        ws.get_operator(B, "csr")
+        ws.get_operator(C, "csr")           # evicts A (LRU)
+        assert ws.stats()["evictions"] == 1
+        assert ws.stats()["size"] == 2
+
+    def test_hit_refreshes_recency_before_insert(self):
+        """The eviction-order edge case: a get_operator hit must move the
+        entry to most-recent BEFORE a later insert evicts — the insert
+        takes the true LRU (B), never the just-hit entry (A)."""
+        ws = SpmvWorkspace(max_entries=2)
+        A, B, C = (M.banded(16, 3, seed=i) for i in range(3))
+        ws.get_operator(A, "csr")           # order: [A]
+        ws.get_operator(B, "csr")           # order: [A, B]
+        ws.get_operator(A, "csr")           # hit: order [B, A]
+        ws.get_operator(C, "csr")           # insert at capacity: evict B
+        keys = ws.keys()
+        fpa, fpb = ws.fingerprint(A), ws.fingerprint(B)
+        assert any(k.startswith(fpa) for k in keys)
+        assert not any(k.startswith(fpb) for k in keys)
+
+    def test_admit_same_call_hit_keeps_recency(self):
+        """admit()'s build may itself hit the cache; the insert-side
+        eviction runs after the build, so it evicts the true LRU, not the
+        entry the build just touched."""
+        ws = SpmvWorkspace(max_entries=2)
+        A, B, C = (M.banded(16, 3, seed=i) for i in range(3))
+        fpa, fpb, fpc = (ws.fingerprint(m) for m in (A, B, C))
+        ws.admit(fpa, lambda: as_operator(A, "csr"))   # order: [A]
+        ws.admit(fpb, lambda: as_operator(B, "csr"))   # order: [A, B]
+
+        def build_c():
+            hit = ws.lookup(fpa)            # same-call hit refreshes A
+            assert hit is not None
+            return as_operator(C, "csr")
+
+        op, was_hit = ws.admit(fpc, build_c)  # insert evicts B, NOT A
+        assert not was_hit
+        assert set(ws.keys()) == {fpa, fpc}
+
+    def test_admit_hit_path(self):
+        ws = SpmvWorkspace(max_entries=2)
+        A = M.banded(16, 3, seed=0)
+        fp = ws.fingerprint(A)
+        op1, hit1 = ws.admit(fp, lambda: as_operator(A, "csr"))
+        op2, hit2 = ws.admit(fp, lambda: (_ for _ in ()).throw(AssertionError))
+        assert (hit1, hit2) == (False, True)
+        assert op1 is op2
+
+
+# ------------------------------------------------------- stats invariants ----
+
+
+class TestStatsInvariants:
+    def test_counters_over_churn_traffic(self):
+        eng = _engine(capacity=2, max_batch=4)
+        spec = TrafficSpec(mix="churn", n=48, n_matrices=4, seed=3)
+        out = run_traffic(eng, spec, 20, flush_every=8)
+        s = eng.stats
+
+        assert len(s.requests) == 20
+        assert sum(b.size for b in s.batches) == 20
+        assert all(1 <= b.size <= 4 for b in s.batches)
+        assert s.cache_hits + s.cache_misses == s.admissions
+        assert s.tunes == s.cache_misses        # every cold admission tuned
+        assert s.dispatch_fallbacks == 0
+        for r in s.requests:
+            assert 0.0 <= r.queue_wait_s <= r.latency_s
+        assert out["latency_p50_s"] <= out["latency_p99_s"]
+        assert out["queue_wait_p50_s"] <= out["queue_wait_p99_s"]
+        assert out["throughput_rps"] > 0
+        # warm-pool counters line up with the engine's admission accounting
+        ws = out["workspace"]
+        assert ws["hits"] == s.cache_hits
+        assert ws["misses"] == s.cache_misses
+        assert ws["size"] <= ws["capacity"] == 2
+
+    def test_hot_mix_saturates_batches_and_hits(self):
+        eng = _engine(capacity=2, max_batch=4)
+        spec = TrafficSpec(mix="hot", n=48, seed=0)
+        out = run_traffic(eng, spec, 16, flush_every=8)
+        assert out["batch_size_max"] == 4
+        assert out["coalesced_fraction"] == 1.0
+        # one cold admission, every later flush-group hits the warm pool
+        assert eng.stats.cache_misses == 1
+        assert eng.stats.cache_hits == eng.stats.admissions - 1
+
+    def test_traffic_generator_deterministic(self):
+        spec = TrafficSpec(mix="mixed", n=32, n_matrices=4, seed=11)
+        a = [(n, rhs.tobytes()) for n, _, rhs in TrafficGenerator(spec).requests(15)]
+        b = [(n, rhs.tobytes()) for n, _, rhs in TrafficGenerator(spec).requests(15)]
+        assert a == b
+
+    def test_traffic_rejects_unknown_mix(self):
+        with pytest.raises(ValueError, match="mix"):
+            TrafficSpec(mix="flood")

@@ -1,0 +1,173 @@
+"""Dynamic-matrix trajectory: mutation scenarios -> BENCH_dynamic.json.
+
+The mutation-lane counterpart of ``serve_bench.py``: each scenario opens a
+``DeltaOverlay`` through a ``ServeEngine``, drives a seeded mutation stream
+across the drift threshold, calls ``engine.refresh`` after every step, and
+records the per-step drift trajectory — score, whether the refresh re-tuned,
+whether re-selection changed the (format, backend), and whether the refreshed
+operator actually runs its predicted backend (the fallback gate). Two
+scenarios bracket how sparsity evolves in practice:
+
+  - ``fdm``   — time-dependent FDM assembly (``perturb_fdm27``): coefficient
+    jitter the selector must ignore plus band-widening couplings that grow
+    ``ndiags``/``band_extent`` drift monotonically until refresh re-selects.
+  - ``prune`` — pruning-during-training (``sparsify.prune_step``): magnitude
+    sweeps delete nnz unevenly, drifting nnz and row imbalance.
+
+The CI ``--dynamic`` smoke gates on this file's :func:`check`: a run where no
+refresh ever re-tuned (the threshold machinery is dead) or where a refreshed
+operator fell back off its predicted backend is a failure.
+"""
+from __future__ import annotations
+
+import platform
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.matrices import banded, fdm27, perturb_fdm27
+from repro.core.spmv import select_spmv
+from repro.serve import ServeEngine
+from repro.sparsify import prune_step
+
+#: scale -> scenario knobs. Step counts are chosen so drift crosses the
+#: default 0.25 threshold mid-run (not at the end): the trajectory must show
+#: refreshes both below and above threshold.
+SCALES: Dict[str, Dict] = {
+    "smoke": dict(grid=(4, 4, 4), fdm_steps=6, prune_n=96, prune_band=9,
+                  prune_steps=4, prune_fraction=0.15),
+    "quick": dict(grid=(6, 6, 6), fdm_steps=8, prune_n=256, prune_band=9,
+                  prune_steps=5, prune_fraction=0.15),
+    "bench": dict(grid=(8, 8, 8), fdm_steps=10, prune_n=1024, prune_band=15,
+                  prune_steps=6, prune_fraction=0.15),
+}
+
+
+def _fallback(op) -> bool:
+    """Does dispatch reject the refreshed operator's preferred backend?"""
+    pol = op._effective_policy()
+    return select_spmv(op.container, pol).key.backend != pol.backends[0]
+
+
+def _drive(engine: ServeEngine, overlay, mutate, steps: int,
+           seed: int = 0) -> Dict:
+    """Run ``steps`` rounds of mutate -> refresh -> serve, recording the
+    drift trajectory and verifying every served result against the host
+    mirror."""
+    rng = np.random.default_rng(seed)
+    n = overlay.shape[1]
+    trajectory: List[Dict] = []
+    for step in range(steps):
+        mutated = mutate(step)
+        ndelta = overlay.ndelta
+        t0 = time.perf_counter()
+        res = engine.refresh(overlay)
+        t1 = time.perf_counter()
+        # serve one request against the refreshed fingerprint and check it
+        x = rng.integers(-3, 4, n).astype(np.float32)
+        y = engine.submit(res.fingerprint_after, x).result()
+        ref = overlay.to_scipy().astype(np.float32) @ x
+        ok = bool(np.allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4))
+        trajectory.append({
+            "step": step,
+            "mutations": mutated,
+            "ndelta": ndelta,
+            "drift": res.drift.score,
+            "infeasible": res.drift.infeasible,
+            "retuned": res.retuned,
+            "reselected": res.reselected,
+            "key": "/".join(res.key_after),
+            "fallback": _fallback(res.operator),
+            "refresh_us": (t1 - t0) * 1e6,
+            "serve_ok": ok,
+        })
+    return {
+        "threshold": engine.drift_threshold,
+        "steps": trajectory,
+        "retunes": sum(t["retuned"] for t in trajectory),
+        "reselects": sum(t["reselected"] for t in trajectory),
+        "fallbacks": sum(t["fallback"] for t in trajectory),
+        "serve_failures": sum(not t["serve_ok"] for t in trajectory),
+        "final_key": trajectory[-1]["key"] if trajectory else "",
+        "final_nnz": overlay.nnz,
+    }
+
+
+def collect(scale: str = "quick", seed: int = 0) -> Tuple[List[dict], Dict]:
+    """Returns ``(csv_rows, dynamic_doc)``; the doc is the
+    BENCH_dynamic.json payload (one trajectory per scenario)."""
+    cfg = SCALES[scale]
+    scenarios: Dict[str, Dict] = {}
+
+    nx, ny, nz = cfg["grid"]
+    engine = ServeEngine(capacity=8)
+    ov = engine.mutable(fdm27(nx, ny, nz))
+    scenarios["fdm"] = _drive(
+        engine, ov,
+        lambda step: perturb_fdm27(ov, step, nx, ny, nz, seed=seed),
+        cfg["fdm_steps"], seed=seed)
+    scenarios["fdm"]["n"] = nx * ny * nz
+
+    engine = ServeEngine(capacity=8)
+    ov = engine.mutable(banded(cfg["prune_n"], cfg["prune_band"], seed=seed))
+    scenarios["prune"] = _drive(
+        engine, ov,
+        lambda step: prune_step(ov, cfg["prune_fraction"]),
+        cfg["prune_steps"], seed=seed)
+    scenarios["prune"]["n"] = cfg["prune_n"]
+
+    rows = [{
+        "name": f"dynamic/{name}/n{out['n']}",
+        "us_per_call": (np.mean([t["refresh_us"] for t in out["steps"]])
+                        if out["steps"] else 0.0),
+        "derived": (f"retunes={out['retunes']}/{len(out['steps'])} "
+                    f"reselects={out['reselects']} "
+                    f"final={out['final_key']} "
+                    f"fallbacks={out['fallbacks']}"),
+    } for name, out in scenarios.items()]
+    doc = {
+        "schema": 1,
+        "scale": scale,
+        "jax_backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "python": platform.python_version(),
+        "scenarios": scenarios,
+    }
+    return rows, doc
+
+
+def check(doc: Dict) -> List[str]:
+    """The dynamic-smoke gate."""
+    problems = []
+    scenarios = doc.get("scenarios", {})
+    if not scenarios:
+        problems.append("no scenarios recorded")
+    if scenarios and not any(s.get("retunes", 0) for s in scenarios.values()):
+        problems.append("refresh() never re-selected in any scenario: the "
+                        "drift threshold machinery is dead")
+    for name, out in scenarios.items():
+        if not out.get("steps"):
+            problems.append(f"{name}: no steps recorded")
+        if out.get("fallbacks", 0):
+            problems.append(f"{name}: {out['fallbacks']} refreshed operators "
+                            f"fell back off their predicted backend")
+        if out.get("serve_failures", 0):
+            problems.append(f"{name}: {out['serve_failures']} served results "
+                            f"disagreed with the host mirror")
+        # below-threshold steps must not have re-tuned (unless the base
+        # format drifted into structural infeasibility), above-threshold must
+        for t in out.get("steps", []):
+            if t["retuned"] and t["drift"] < out["threshold"] \
+                    and not t.get("infeasible"):
+                problems.append(f"{name} step {t['step']}: re-tuned below "
+                                f"threshold (drift {t['drift']:.3f})")
+            if not t["retuned"] and t["drift"] >= out["threshold"]:
+                problems.append(f"{name} step {t['step']}: threshold crossed "
+                                f"(drift {t['drift']:.3f}) without re-tune")
+    return problems
+
+
+def run(scale: str = "quick"):
+    return collect(scale)[0]

@@ -18,6 +18,12 @@ the cross-PR perf + prediction record).
       # BENCH_serve.json (latency p50/p99, throughput, warm-pool hit rate);
       # exits non-zero on empty output or a dispatch fallback off a tuned
       # backend (the CI serve-smoke gate)
+  PYTHONPATH=src python -m benchmarks.run --dynamic [--smoke]
+      # dynamic-matrix trajectory: mutation scenarios (FDM assembly,
+      # pruning) driven across the drift threshold -> BENCH_dynamic.json;
+      # exits non-zero if refresh() never re-selects, re-tunes on the wrong
+      # side of the threshold, or a refreshed operator falls back off its
+      # predicted backend (the CI dynamic-smoke gate)
 """
 import argparse
 import importlib
@@ -37,11 +43,13 @@ MODULES = [
     "roofline_table",
     "spmv_bench",
     "serve_bench",
+    "dynamic_bench",
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_spmv.json")
 DEFAULT_SERVE_JSON = os.path.join(REPO_ROOT, "BENCH_serve.json")
+DEFAULT_DYNAMIC_JSON = os.path.join(REPO_ROOT, "BENCH_dynamic.json")
 
 
 def _load_doc(path: str) -> dict:
@@ -94,6 +102,24 @@ def _write_serve_json(path: str, doc: dict) -> int:
     print(f"# wrote {len(mixes)} serving mixes to {path} "
           + " ".join(f"{m}:p50={o['latency_p50_s']*1e3:.1f}ms"
                      f"/hit={o['hit_rate']:.0%}" for m, o in mixes.items()),
+          file=sys.stderr)
+    return len(problems)
+
+
+def _write_dynamic_json(path: str, doc: dict) -> int:
+    """Write the dynamic-matrix trajectory and run the dynamic-smoke gate;
+    returns the number of gate failures."""
+    from benchmarks.dynamic_bench import check
+
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    problems = check(doc)
+    for p in problems:
+        print(f"DYNAMIC: {p}", file=sys.stderr)
+    scen = doc.get("scenarios", {})
+    print(f"# wrote {len(scen)} dynamic scenarios to {path} "
+          + " ".join(f"{s}:retunes={o['retunes']}/{len(o['steps'])}"
+                     f"/final={o['final_key']}" for s, o in scen.items()),
           file=sys.stderr)
     return len(problems)
 
@@ -196,6 +222,15 @@ def main() -> None:
     ap.add_argument("--serve-json", default=DEFAULT_SERVE_JSON,
                     help="where to write the serving trajectory "
                          "(BENCH_serve.json)")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="dynamic-matrix mutation scenarios only -> "
+                         "BENCH_dynamic.json; fail when refresh() never "
+                         "re-selects, re-tunes on the wrong side of the "
+                         "threshold, or a refreshed operator falls back "
+                         "(the CI dynamic-smoke gate)")
+    ap.add_argument("--dynamic-json", default=DEFAULT_DYNAMIC_JSON,
+                    help="where to write the dynamic-matrix trajectory "
+                         "(BENCH_dynamic.json)")
     ap.add_argument("--accuracy-floor", type=float, default=None,
                     help="with --corpus: exit non-zero when 'near' prediction "
                          "accuracy drops below this fraction (CI gate)")
@@ -221,6 +256,16 @@ def main() -> None:
             print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
         sys.exit(1 if _write_serve_json(args.serve_json, doc) else 0)
 
+    if args.dynamic:
+        from benchmarks import dynamic_bench
+
+        scale = "smoke" if args.smoke else args.scale
+        rows, doc = dynamic_bench.collect(scale)
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        sys.exit(1 if _write_dynamic_json(args.dynamic_json, doc) else 0)
+
     if args.smoke:
         from benchmarks import spmv_bench
 
@@ -236,6 +281,7 @@ def main() -> None:
     failed = 0
     entries = None
     serve_doc = None
+    dynamic_doc = None
     for m in mods:
         try:
             mod = importlib.import_module(f"benchmarks.{m}")
@@ -243,6 +289,8 @@ def main() -> None:
                 rows, entries = mod.collect(args.scale)
             elif m == "serve_bench":
                 rows, serve_doc = mod.collect(args.scale)
+            elif m == "dynamic_bench":
+                rows, dynamic_doc = mod.collect(args.scale)
             else:
                 rows = mod.run(args.scale)
             for row in rows:
@@ -255,6 +303,8 @@ def main() -> None:
         _write_json(args.json, args.scale, entries)
     if serve_doc is not None:
         failed += _write_serve_json(args.serve_json, serve_doc)
+    if dynamic_doc is not None:
+        failed += _write_dynamic_json(args.dynamic_json, dynamic_doc)
     if failed:
         sys.exit(1)
 

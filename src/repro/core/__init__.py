@@ -12,6 +12,8 @@ Public API:
     select:    zero-run feature-driven (format, backend) ranking —
                `tune(mode="predict")` and `autotune_spmv(prune=k)` run on it
     registry:  LRU handle/workspace cache (ArmPL-style create/optimize/exec)
+    dynamic:   DeltaOverlay mutation lane (COO delta over any base container)
+               + drift-driven refresh() re-selection
     distributed: row partition + local/remote halo-split helpers and the
                legacy DistributedSpMV; the full multi-device operator
                (per-rank formats, rowblock exact mode, masked matvec)
@@ -46,8 +48,11 @@ from .spmv import (
 )
 from .autotune import TuneResult, autotune_spmv, optimal_format_distribution, structural_skip
 from .features import MatrixFeatures, extract_features
-from .select import Prediction, predict_format, prune_candidates, rank_formats
+from .select import (
+    Prediction, predict_format, prune_candidates, rank_formats, selection_drifted,
+)
 from .registry import SpmvWorkspace, spmv_cached, workspace
+from .dynamic import DEFAULT_DRIFT_THRESHOLD, DeltaOverlay, DriftReport, RefreshResult
 from .distributed import DistributedSpMV, autotune_distributed, split_local_remote
 
 __all__ = [
@@ -62,6 +67,8 @@ __all__ = [
     "TuneResult", "autotune_spmv", "optimal_format_distribution", "structural_skip",
     "MatrixFeatures", "extract_features",
     "Prediction", "predict_format", "prune_candidates", "rank_formats",
+    "selection_drifted",
     "SpmvWorkspace", "spmv_cached", "workspace",
+    "DEFAULT_DRIFT_THRESHOLD", "DeltaOverlay", "DriftReport", "RefreshResult",
     "DistributedSpMV", "autotune_distributed", "split_local_remote",
 ]

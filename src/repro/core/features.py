@@ -183,8 +183,16 @@ def extract_features(a) -> MatrixFeatures:
     # row permutation (summation order would otherwise leak last-bit noise)
     diags = col - row
     ndiags = int(np.unique(diags).shape[0])
-    blocks = np.unique((row // FEATURE_BLOCK) * (-(-ncols // FEATURE_BLOCK))
+    nblockcols = -(-ncols // FEATURE_BLOCK)
+    blocks = np.unique((row // FEATURE_BLOCK) * nblockcols
                        + col // FEATURE_BLOCK)
+    # occupied area clips edge blocks to the matrix boundary — a ragged
+    # dimension must not inflate the denominator (a dense 4x4 is 1.0 dense,
+    # not 4x4/8x8 = 0.25)
+    b_r, b_c = blocks // nblockcols, blocks % nblockcols
+    b_h = np.minimum(FEATURE_BLOCK, nrows - b_r * FEATURE_BLOCK)
+    b_w = np.minimum(FEATURE_BLOCK, ncols - b_c * FEATURE_BLOCK)
+    block_area = float((b_h * b_w).sum())
     colcounts = np.bincount(col, minlength=max(ncols, 1))
     return MatrixFeatures(
         nrows=nrows,
@@ -198,6 +206,6 @@ def extract_features(a) -> MatrixFeatures:
         ndiags=ndiags,
         diag_fill=nnz / float(max(ndiags * nrows, 1)),
         band_extent=int(np.abs(diags).max()),
-        block_density=nnz / float(blocks.shape[0] * FEATURE_BLOCK ** 2),
+        block_density=nnz / block_area,
         dense_cols=int((colcounts >= DENSE_COL_FILL * max(nrows, 1)).sum()),
     )

@@ -349,6 +349,51 @@ class SparseOperator:
         return _dispatch_masked_spmv(self.container, jnp.asarray(x),
                                      row_mask, self._effective_policy())
 
+    # -- dynamic matrices (COO-delta mutation lane) -------------------------
+
+    def mutable(self, drift_threshold: Optional[float] = None,
+                fingerprint: Optional[str] = None):
+        """Open a mutation lane over this operator: a
+        :class:`~repro.core.dynamic.DeltaOverlay` buffering incremental
+        inserts/updates/deletes as a COO delta while ``A @ x`` stays exact
+        (``base @ x + delta @ x``). Call :meth:`refresh` (or the overlay's
+        own ``refresh()``) to compact and — only when structural drift
+        crosses the threshold — re-run zero-run selection.
+
+        Args:
+            drift_threshold: refresh trigger (default
+                ``dynamic.DEFAULT_DRIFT_THRESHOLD``).
+            fingerprint: warm-pool fingerprint to associate with this base
+                (the serving layer passes its admission key so overlay and
+                pool agree on identity).
+
+        Example:
+            >>> import numpy as np, scipy.sparse as sp
+            >>> ov = as_operator(sp.eye(4, format="csr") * 2.0).mutable()
+            >>> ov.set(0, 3, 1.0)
+            >>> [float(v) for v in ov @ np.ones(4, np.float32)]
+            [3.0, 2.0, 2.0, 2.0]
+        """
+        from .dynamic import DEFAULT_DRIFT_THRESHOLD, DeltaOverlay
+
+        thr = (DEFAULT_DRIFT_THRESHOLD if drift_threshold is None
+               else drift_threshold)
+        return DeltaOverlay(self, drift_threshold=thr, fingerprint=fingerprint)
+
+    def refresh(self, overlay, threshold: Optional[float] = None,
+                mode: str = "predict", **kw) -> "SparseOperator":
+        """Compact ``overlay`` (opened on this operator via :meth:`mutable`)
+        and re-select the (format, backend) only when drift crossed the
+        threshold. Returns the up-to-date operator; the full decision record
+        is ``overlay.refresh(...)`` directly (a
+        :class:`~repro.core.dynamic.RefreshResult`).
+        """
+        if overlay.base.container is not self.container:
+            raise ValueError("refresh: overlay was not opened on this "
+                             "operator (its base has moved on — refresh via "
+                             "the overlay itself, or re-open with .mutable())")
+        return overlay.refresh(threshold=threshold, mode=mode, **kw).operator
+
     # -- auto-tuning --------------------------------------------------------
 
     def tune(self, candidates=None, mode: str = "run", **kw) -> "SparseOperator":

@@ -32,6 +32,11 @@ class SpmvWorkspace:
     """Singleton-per-process workspace (paper Table I machinery)."""
 
     def __init__(self, max_entries: int = 64):
+        if max_entries < 0:
+            raise ValueError(
+                f"SpmvWorkspace: max_entries must be >= 0, got {max_entries} "
+                f"(0 means cache nothing — every admission builds and is "
+                f"immediately evicted)")
         self._ops: "OrderedDict[str, SparseOperator]" = OrderedDict()
         self._fns: Dict[Tuple[str, ExecutionPolicy, str], object] = {}
         self._max = max_entries
@@ -67,6 +72,10 @@ class SpmvWorkspace:
             s = a.tocsr()
             h.update(np.int64(s.shape[0]).tobytes() + np.int64(s.shape[1]).tobytes())
             h.update(np.asarray(s.indptr[:: max(1, len(s.indptr) // 64)]).tobytes())
+            # indices must participate: two matrices with identical row
+            # lengths and values but different column positions are
+            # different operators (same stride as the other leaves)
+            h.update(np.asarray(s.indices[:: max(1, len(s.indices) // 64)]).tobytes())
             h.update(np.asarray(s.data[:: max(1, len(s.data) // 64)]).tobytes())
             return h.hexdigest()
         if hasattr(a, "to_dense") and hasattr(a, "format"):
@@ -88,11 +97,11 @@ class SpmvWorkspace:
         if key in self._ops:
             self.hits += 1
             self._ops.move_to_end(key)  # true LRU: a hit refreshes recency
-        else:
-            self.misses += 1
-            self._evict_to(1)
-            self._ops[key] = as_operator(a, fmt, **kw)
-        return self._ops[key]
+            return self._ops[key]
+        self.misses += 1
+        op = as_operator(a, fmt, **kw)
+        self.insert(key, op)  # evicts after insert: size never exceeds capacity
+        return op
 
     def lookup(self, fingerprint: str) -> Optional[SparseOperator]:
         """Warm-pool probe by raw fingerprint: a hit refreshes recency and
@@ -111,10 +120,12 @@ class SpmvWorkspace:
         Returns ``(operator, hit)``. On a miss, ``build()`` constructs the
         operator (typically ``as_operator(...).tune(mode="predict")``) and
         the result is inserted, evicting the LRU entry on capacity. The
-        eviction runs *after* ``build()`` returns: any ``get_operator`` /
-        ``lookup`` hit the build performs refreshes that entry's recency
-        first, so a same-call insert can never evict the entry the build
-        just touched (it evicts the true least-recently-used one).
+        eviction runs *after* the insert: any ``get_operator`` / ``lookup``
+        hit the build performs refreshes that entry's recency first, so a
+        same-call insert can never evict the entry the build just touched,
+        and ``size`` never exceeds ``capacity`` — at ``max_entries=0`` the
+        fresh entry itself is evicted immediately (built, returned, not
+        retained).
         """
         if fingerprint in self._ops:
             self.hits += 1
@@ -122,9 +133,22 @@ class SpmvWorkspace:
             return self._ops[fingerprint], True
         self.misses += 1
         op = build()
-        self._evict_to(1)
-        self._ops[fingerprint] = op
+        self.insert(fingerprint, op)
         return op, False
+
+    def insert(self, fingerprint: str, op: SparseOperator) -> None:
+        """Place ``op`` at ``fingerprint`` as the most-recent entry, then
+        evict down to capacity — no hit/miss counters (the serving layer's
+        re-admission path after a drift-driven refresh)."""
+        self._ops[fingerprint] = op
+        self._ops.move_to_end(fingerprint)
+        self._evict_to(0)
+
+    def discard(self, fingerprint: str) -> bool:
+        """Drop ``fingerprint`` if present (not counted as an eviction: the
+        entry is invalidated — e.g. its matrix mutated — not capacity-popped).
+        Returns whether it was present."""
+        return self._ops.pop(fingerprint, None) is not None
 
     def get_matrix(self, a, fmt: str, **kw):
         return self.get_operator(a, fmt, **kw).container

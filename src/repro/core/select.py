@@ -321,6 +321,25 @@ def prune_candidates(a, keep: int,
     return [p.key for p in preds[:max(1, keep)]]
 
 
+def selection_drifted(before: MatrixFeatures, after: MatrixFeatures,
+                      policy: Optional[ExecutionPolicy] = None,
+                      candidates: Optional[Sequence] = None,
+                      platform: Optional[str] = None) -> bool:
+    """Would the zero-run winner change between two feature snapshots?
+
+    The ground-truth companion to the cheap drift score
+    (:meth:`repro.core.dynamic.DeltaOverlay.drift`): the score says "the
+    structure moved a lot", this says "moved enough that selection *would*
+    pick a different (format, backend)". The dynamic benchmark gate uses it
+    to annotate which mutation steps actually flip the decision.
+    """
+    a = predict(before, policy=policy, candidates=candidates,
+                platform=platform)
+    b = predict(after, policy=policy, candidates=candidates,
+                platform=platform)
+    return a.key != b.key
+
+
 #: package-level spellings (``repro.core.rank_formats`` reads better than a
 #: bare ``rank`` next to the solver / autotune exports)
 rank_formats = rank

@@ -94,6 +94,10 @@ class ServeEngine:
         tune_mode: ``"predict"`` (zero-run, the serving default), ``"run"``
             (measure — pays real kernel time at admission), or ``None``
             (no tuning: serve in ``fmt`` under ``policy`` as-is).
+        drift_threshold: structural-drift score at which :meth:`refresh`
+            re-selects a mutated tenant's (format, backend) — see
+            ``repro.core.dynamic`` (with ``tune_mode=None`` refresh only
+            compacts, never re-tunes).
         clock: injectable monotonic clock (tests pass a fake; benchmarks
             keep ``time.perf_counter``).
     """
@@ -103,7 +107,13 @@ class ServeEngine:
                  policy: Optional[ExecutionPolicy] = None,
                  fmt: str = "csr", max_batch: int = 32,
                  tune_mode: Optional[str] = "predict",
+                 drift_threshold: Optional[float] = None,
                  clock=time.perf_counter):
+        from repro.core.dynamic import DEFAULT_DRIFT_THRESHOLD
+
+        self.drift_threshold = (DEFAULT_DRIFT_THRESHOLD
+                                if drift_threshold is None
+                                else float(drift_threshold))
         self.workspace = workspace if workspace is not None \
             else SpmvWorkspace(max_entries=capacity)
         self.policy = policy
@@ -236,6 +246,55 @@ class ServeEngine:
         """``flush`` for asyncio front ends (execution itself is synchronous
         JAX; the coroutine shape lets callers schedule it on a loop)."""
         return self.flush()
+
+    # -- dynamic tenants ----------------------------------------------------
+
+    def mutable(self, matrix_or_fingerprint: Union[str, Any]):
+        """Open a mutation lane over one tenant's matrix: admits it (warm
+        pool semantics identical to a flush-time admission) and returns a
+        :class:`~repro.core.dynamic.DeltaOverlay` whose base fingerprint is
+        the engine's admission key, so :meth:`refresh` can re-admit the
+        compacted matrix under its new identity.
+        """
+        from repro.core.dynamic import DeltaOverlay
+
+        if isinstance(matrix_or_fingerprint, str):
+            fp = matrix_or_fingerprint
+        else:
+            fp = self.fingerprint(matrix_or_fingerprint)
+            self._matrices.setdefault(fp, matrix_or_fingerprint)
+        op, _hit = self._admit(fp)
+        return DeltaOverlay(op, drift_threshold=self.drift_threshold,
+                            fingerprint=fp)
+
+    def refresh(self, overlay):
+        """Compact a mutated tenant and re-admit it into the warm pool.
+
+        Delegates to :meth:`DeltaOverlay.refresh` with the engine's
+        ``drift_threshold`` and ``tune_mode`` (with ``tune_mode=None`` the
+        refresh only compacts — selection is never re-run). When the matrix
+        actually changed, the stale fingerprint is invalidated (not counted
+        as a capacity eviction) and the compacted — possibly re-tuned —
+        operator is inserted as the warmest entry under the new fingerprint;
+        subsequent fingerprint-only submits must use
+        ``result.fingerprint_after``.
+
+        Returns the :class:`~repro.core.dynamic.RefreshResult`; the
+        ``refreshes`` / ``refresh_retunes`` / ``refresh_reselects`` counters
+        land in :meth:`summary`.
+        """
+        old_fp = overlay.base_fingerprint
+        res = overlay.refresh(threshold=self.drift_threshold,
+                              mode=self.tune_mode)
+        if res.compacted or res.retuned:
+            if res.fingerprint_after != old_fp:
+                self.workspace.discard(old_fp)
+                self._matrices.pop(old_fp, None)
+            self._matrices[res.fingerprint_after] = overlay.to_scipy()
+            self.workspace.insert(res.fingerprint_after, res.operator)
+        self.stats.record_refresh(retuned=res.retuned,
+                                  reselected=res.reselected)
+        return res
 
     # -- reporting ----------------------------------------------------------
 

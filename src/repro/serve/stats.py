@@ -17,6 +17,7 @@ Counter invariants (asserted by ``tests/test_serve.py``):
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List
 
@@ -46,11 +47,13 @@ class BatchRecord:
 
 
 def _percentile(sorted_vals: List[float], p: float) -> float:
-    """Nearest-rank percentile over an ascending list (0 when empty)."""
+    """Nearest-rank percentile over an ascending list (0 when empty):
+    the value at 1-based rank ``ceil(p/100 * n)``, i.e. the smallest value
+    with at least ``p%`` of the sample at or below it."""
     if not sorted_vals:
         return 0.0
-    k = max(0, min(len(sorted_vals) - 1,
-                   int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+    n = len(sorted_vals)
+    k = max(0, min(n - 1, math.ceil(p / 100.0 * n) - 1))
     return sorted_vals[k]
 
 
@@ -66,6 +69,10 @@ class ServeStats:
     tunes: int = 0             # admission builds that ran tune()
     dispatch_fallbacks: int = 0  # admitted operators whose selected backend
     #                              differs from the tuned policy's preference
+    refreshes: int = 0         # DeltaOverlay refresh() calls processed
+    refresh_retunes: int = 0   # refreshes whose drift crossed the threshold
+    #                            (tune re-ran, fingerprint re-admitted)
+    refresh_reselects: int = 0  # retunes that changed (format, backend)
 
     # -- feeding ------------------------------------------------------------
 
@@ -75,6 +82,11 @@ class ServeStats:
         self.cache_misses += not hit
         self.tunes += tuned
         self.dispatch_fallbacks += fallback
+
+    def record_refresh(self, retuned: bool, reselected: bool) -> None:
+        self.refreshes += 1
+        self.refresh_retunes += retuned
+        self.refresh_reselects += reselected
 
     def record_batch(self, batch: BatchRecord,
                      reqs: List[RequestRecord]) -> None:
@@ -119,6 +131,9 @@ class ServeStats:
             "hit_rate": self.hit_rate,
             "tunes": self.tunes,
             "dispatch_fallbacks": self.dispatch_fallbacks,
+            "refreshes": self.refreshes,
+            "refresh_retunes": self.refresh_retunes,
+            "refresh_reselects": self.refresh_reselects,
             "batch_size_mean": self.mean_batch_size,
             "batch_size_max": max(sizes) if sizes else 0,
             "coalesced_fraction": self.coalesced_fraction,

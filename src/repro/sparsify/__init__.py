@@ -48,3 +48,26 @@ def bsr_linear(A: BSR, x, impl: str = "pallas"):
     X = x.reshape(-1, x.shape[-1]).T                       # (in, batch)
     Y = spmm(A, X, impl)                                   # (out, batch)
     return Y.T.reshape(*lead, A.shape[0])
+
+
+def prune_step(overlay, fraction: float = 0.1) -> int:
+    """One magnitude-pruning sweep applied through the mutation lane: delete
+    the smallest-|value| ``fraction`` of the matrix's current logical
+    nonzeros via ``overlay.delete`` — the pruning-during-training scenario
+    for :class:`~repro.core.dynamic.DeltaOverlay` (each sweep empties rows
+    unevenly, so row-imbalance and nnz drift accumulate until ``refresh()``
+    re-selects the format).
+
+    Returns the number of entries deleted. Deterministic: ties break on
+    (row, col) order via the canonical CSR merge.
+    """
+    if not 0.0 < fraction <= 1.0:
+        raise ValueError(f"prune_step: fraction must be in (0, 1], got {fraction}")
+    s = overlay.to_scipy().tocoo()
+    if s.nnz == 0:
+        return 0
+    k = max(1, int(fraction * s.nnz))
+    order = np.argsort(np.abs(s.data), kind="stable")[:k]
+    for i, j in zip(s.row[order].tolist(), s.col[order].tolist()):
+        overlay.delete(int(i), int(j))
+    return int(order.shape[0])

@@ -1,0 +1,372 @@
+"""Dynamic-matrix tests: the DeltaOverlay mutation lane, drift detection,
+and drift-driven refresh — plus the serving-layer re-admission path.
+
+The acceptance block: overlay matvec is bit-identical to the rebuilt matrix
+on csr/plain (integer-valued data, where float32 arithmetic is exact, so the
+two-kernel sum ``base @ x + delta @ x`` has no reassociation slack), and
+``refresh()`` re-selects only when the drift threshold is crossed — asserted
+with the kernel-dispatch counter: below threshold not a single kernel runs.
+"""
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (
+    DEFAULT_DRIFT_THRESHOLD,
+    DeltaOverlay,
+    SpmvWorkspace,
+    as_operator,
+    extract_features,
+    selection_drifted,
+)
+from repro.core import matrices as M
+from repro.core.dynamic import RefreshResult
+from repro.sparsify import prune_step
+
+
+def _int_csr(n=48, density=0.08, seed=0):
+    """Integer-valued random CSR: every product/sum in SpMV is exactly
+    representable in float32, so bit-identity tests pure structure."""
+    rng = np.random.default_rng(seed)
+    s = sp.random(n, n, density=density, random_state=rng, format="csr")
+    s.data[:] = rng.integers(1, 8, s.nnz).astype(np.float64)
+    s.sum_duplicates()
+    s.sort_indices()
+    return s
+
+
+def _int_x(n, seed=1):
+    return np.random.default_rng(seed).integers(-4, 5, n).astype(np.float32)
+
+
+def _mutate_stream(ov, seed=2, steps=40):
+    """A deterministic insert/update/delete mix (integer values)."""
+    rng = np.random.default_rng(seed)
+    n = ov.shape[0]
+    for _ in range(steps):
+        i, j = int(rng.integers(n)), int(rng.integers(n))
+        op = rng.integers(3)
+        if op == 0:
+            ov.set(i, j, float(rng.integers(1, 8)))      # insert/update
+        elif op == 1:
+            ov.delete(i, j)                              # delete (maybe noop)
+        else:
+            ov.add(i, j, float(rng.integers(-3, 4)))     # increment
+
+
+# ----------------------------------------------------------- exactness ----
+
+
+class TestOverlayExactness:
+    def test_matvec_bit_identical_to_rebuilt_csr_plain(self):
+        """The acceptance criterion: base @ x + delta @ x == rebuilt @ x,
+        bit-for-bit, on csr/plain, after a mixed mutation stream."""
+        s = _int_csr()
+        ov = DeltaOverlay(as_operator(s, "csr").using("plain", fallback=False))
+        _mutate_stream(ov)
+        assert ov.ndelta > 0
+        x = _int_x(ov.shape[1])
+        rebuilt = as_operator(ov.to_scipy(), "csr").using("plain",
+                                                          fallback=False)
+        assert np.array_equal(np.asarray(ov @ x), np.asarray(rebuilt @ x))
+
+    @pytest.mark.parametrize("fmt", ["csr", "coo", "dia", "ell", "sell"])
+    def test_matvec_matches_scipy_every_base_format(self, fmt):
+        s = _int_csr(n=32)
+        ov = DeltaOverlay(as_operator(s, fmt))
+        _mutate_stream(ov, steps=25)
+        x = _int_x(32)
+        ref = ov.to_scipy().astype(np.float32) @ x
+        assert np.allclose(np.asarray(ov @ x), ref, rtol=1e-5, atol=1e-5)
+
+    def test_matmat_matches_scipy(self):
+        s = _int_csr(n=24)
+        ov = DeltaOverlay(as_operator(s, "csr"))
+        _mutate_stream(ov, steps=15)
+        X = np.stack([_int_x(24, seed=i) for i in range(3)], axis=1)
+        ref = ov.to_scipy().astype(np.float32) @ X
+        assert np.allclose(np.asarray(ov.matmat(X)), ref, rtol=1e-5)
+
+    def test_clean_overlay_is_base_exactly(self):
+        s = _int_csr(n=16)
+        base = as_operator(s, "csr")
+        ov = DeltaOverlay(base)
+        x = _int_x(16)
+        assert ov.delta_operator() is None
+        assert np.array_equal(np.asarray(ov @ x), np.asarray(base @ x))
+
+    def test_compact_bit_identical_to_from_scratch_rebuild(self):
+        """Arbitrary float values: compaction builds the identical canonical
+        CSR a from-scratch rebuild would, so the containers match bitwise."""
+        rng = np.random.default_rng(5)
+        s = sp.random(40, 40, density=0.1, random_state=rng, format="csr")
+        ov = DeltaOverlay(as_operator(s, "csr"))
+        for _ in range(20):
+            ov.set(int(rng.integers(40)), int(rng.integers(40)),
+                   float(rng.standard_normal()))
+        merged = ov.to_scipy()
+        compacted = ov.compact()
+        fresh = as_operator(merged, "csr")
+        for got, want in zip([compacted.container.data,
+                              compacted.container.indices],
+                             [fresh.container.data, fresh.container.indices]):
+            assert np.array_equal(np.asarray(got), np.asarray(want))
+        x = _int_x(40)
+        assert np.array_equal(np.asarray(compacted @ x),
+                              np.asarray(fresh @ x))
+
+    def test_compact_idempotent(self):
+        ov = DeltaOverlay(as_operator(_int_csr(n=20), "csr"))
+        _mutate_stream(ov, steps=10)
+        op1 = ov.compact()
+        op2 = ov.compact()          # clean: same object, no rebuild
+        assert op2 is op1
+        assert ov.ndelta == 0
+
+
+# ---------------------------------------------------------- bookkeeping ----
+
+
+class TestOverlayBookkeeping:
+    def test_value_insert_update_delete_cycle(self):
+        ov = DeltaOverlay(sp.eye(8, format="csr") * 2.0)
+        assert ov.value(0, 0) == 2.0 and ov.nnz == 8
+        ov.insert(0, 5, 3.0)
+        assert ov.value(0, 5) == 3.0 and ov.nnz == 9 and ov.ndelta == 1
+        ov.update(0, 5, 4.0)
+        assert ov.value(0, 5) == 4.0 and ov.nnz == 9
+        ov.delete(0, 5)
+        assert ov.value(0, 5) == 0.0 and ov.nnz == 8
+        ov.delete(1, 1)             # delete a *base* entry
+        assert ov.nnz == 7
+        assert ov.to_scipy().nnz == 7
+
+    def test_revert_clears_delta(self):
+        ov = DeltaOverlay(sp.eye(4, format="csr") * 2.0)
+        ov.set(2, 2, 5.0)
+        assert ov.ndelta == 1
+        ov.set(2, 2, 2.0)           # back to the base value exactly
+        assert ov.ndelta == 0
+
+    def test_add_accumulates(self):
+        ov = DeltaOverlay(sp.eye(4, format="csr") * 2.0)
+        ov.add(1, 1, 1.5)
+        ov.add(1, 1, 1.5)
+        assert ov.value(1, 1) == 5.0
+
+    def test_set_many_and_validation(self):
+        ov = DeltaOverlay(sp.eye(6, format="csr"))
+        ov.set_many([0, 1], [5, 4], [2.0, 3.0])
+        assert ov.value(0, 5) == 2.0 and ov.value(1, 4) == 3.0
+        with pytest.raises(ValueError, match="set_many"):
+            ov.set_many([0], [1, 2], [1.0, 2.0])
+        with pytest.raises(IndexError):
+            ov.set(6, 0, 1.0)
+
+    def test_tracked_features_match_extracted(self):
+        ov = DeltaOverlay(as_operator(_int_csr(n=30), "csr"))
+        _mutate_stream(ov, steps=30)
+        got = ov.features()
+        want = extract_features(ov.to_scipy())
+        assert (got.nnz, got.ndiags, got.band_extent, got.rownnz_max) \
+            == (want.nnz, want.ndiags, want.band_extent, want.rownnz_max)
+        assert got.rownnz_mean == pytest.approx(want.rownnz_mean)
+        assert got.rownnz_std == pytest.approx(want.rownnz_std)
+
+
+# ---------------------------------------------------------------- drift ----
+
+
+class TestDrift:
+    def test_clean_overlay_has_zero_drift(self):
+        ov = DeltaOverlay(as_operator(M.banded(32, 3), "csr"))
+        assert ov.drift().score == 0.0
+        assert not ov.drifted()
+
+    def test_monotone_under_growing_insertions(self):
+        """Insertion-only into one row at widening columns: every tracked
+        component (nnz, imbalance, ndiags, band extent) grows, so the score
+        is non-decreasing."""
+        ov = DeltaOverlay(as_operator(M.tridiag(64), "csr"))
+        scores = []
+        for j in range(3, 60, 4):
+            ov.set(0, j, 1.0)
+            scores.append(ov.drift().score)
+        assert all(b >= a for a, b in zip(scores, scores[1:]))
+        assert scores[-1] > scores[0] > 0.0
+
+    def test_compaction_preserves_drift_baseline(self):
+        """The baseline is the last *selection decision*: compaction alone
+        must not reset accumulated drift (else periodic refresh would never
+        trip the threshold)."""
+        ov = DeltaOverlay(as_operator(M.tridiag(64), "csr"))
+        for j in range(10, 30, 4):
+            ov.set(0, j, 1.0)
+        before = ov.drift().score
+        assert before > 0.0
+        ov.compact()
+        assert ov.drift().score == pytest.approx(before)
+
+    def test_retune_resets_drift_baseline(self):
+        ov = DeltaOverlay(as_operator(M.tridiag(64), "csr"))
+        for j in range(10, 50, 4):
+            ov.set(0, j, 1.0)
+        res = ov.refresh(threshold=0.0, mode="predict")
+        assert res.retuned
+        assert ov.drift().score == 0.0
+
+    def test_selection_drifted_helper(self):
+        tri = extract_features(M.tridiag(256))
+        scatter = extract_features(M.powerlaw(256, seed=3))
+        assert not selection_drifted(tri, tri, platform="tpu")
+        assert selection_drifted(tri, scatter, platform="tpu")
+
+
+# -------------------------------------------------------------- refresh ----
+
+
+class TestRefresh:
+    def _drifting_overlay(self, n=64):
+        ov = DeltaOverlay(as_operator(M.tridiag(n), "csr"))
+        for j in range(8, n - 1, 4):        # band-widening inserts into row 0
+            ov.set(0, j, 1.0)
+        return ov
+
+    def test_no_retune_below_threshold_zero_dispatches(
+            self, kernel_dispatch_counter):
+        """The acceptance assertion: below threshold, refresh (even in
+        measuring mode) compacts without executing a single kernel."""
+        ov = self._drifting_overlay()
+        assert ov.drift().score < 1000.0
+        res = ov.refresh(threshold=1000.0, mode="run")
+        assert not res.retuned and res.compacted
+        assert kernel_dispatch_counter["calls"] == 0
+
+    def test_retune_above_threshold_predict_zero_dispatches(
+            self, kernel_dispatch_counter):
+        """Above threshold with the zero-run selector: re-selection happens,
+        still without executing any kernel."""
+        ov = self._drifting_overlay()
+        res = ov.refresh(threshold=0.0, mode="predict")
+        assert res.retuned
+        assert kernel_dispatch_counter["calls"] == 0
+
+    def test_retune_above_threshold_run_mode_dispatches(
+            self, kernel_dispatch_counter):
+        ov = self._drifting_overlay(n=32)
+        res = ov.refresh(threshold=0.0, mode="run")
+        assert res.retuned
+        assert kernel_dispatch_counter["calls"] > 0
+
+    def test_refresh_result_fields(self):
+        ov = self._drifting_overlay()
+        fp0 = ov.base_fingerprint
+        res = ov.refresh(threshold=0.0, mode="predict")
+        assert isinstance(res, RefreshResult)
+        assert res.compacted and res.retuned
+        assert res.fingerprint_before == fp0
+        assert res.fingerprint_after == ov.base_fingerprint != fp0
+        assert res.operator is ov.base
+        assert res.reselected == (res.key_after != res.key_before)
+        assert res.drift.score >= 0.0
+        # exact semantics survive the refresh
+        x = _int_x(ov.shape[1])
+        assert np.allclose(np.asarray(ov @ x),
+                           ov.to_scipy().astype(np.float32) @ x, rtol=1e-5)
+
+    def test_mode_none_compacts_only(self):
+        ov = self._drifting_overlay()
+        res = ov.refresh(threshold=0.0, mode=None)
+        assert res.compacted and not res.retuned
+
+    def test_operator_mutable_and_refresh_delegate(self):
+        op = as_operator(M.tridiag(32), "csr")
+        ov = op.mutable()
+        assert ov.drift_threshold == DEFAULT_DRIFT_THRESHOLD
+        ov.set(0, 20, 1.0)
+        out = op.refresh(ov, threshold=10.0)
+        assert out is ov.base and ov.ndelta == 0
+        # a stale handle (base moved on) is rejected
+        ov.set(0, 25, 1.0)
+        with pytest.raises(ValueError, match="overlay"):
+            op.refresh(ov)
+
+    def test_overlay_keeps_buffering_after_refresh(self):
+        ov = self._drifting_overlay()
+        ov.refresh(threshold=0.0)
+        ov.set(1, 30, 2.0)
+        x = _int_x(ov.shape[1])
+        assert np.allclose(np.asarray(ov @ x),
+                           ov.to_scipy().astype(np.float32) @ x, rtol=1e-5)
+
+
+# ------------------------------------------------------------ scenarios ----
+
+
+class TestScenarios:
+    def test_perturb_fdm27_drift_grows_across_steps(self):
+        ov = DeltaOverlay(as_operator(M.fdm27(4, 4, 4), "csr"))
+        scores = []
+        for step in range(5):
+            n_mut = M.perturb_fdm27(ov, step, 4, 4, 4)
+            assert n_mut > 0
+            scores.append(ov.drift().score)
+        assert all(b >= a for a, b in zip(scores, scores[1:]))
+        assert scores[-1] >= DEFAULT_DRIFT_THRESHOLD
+        x = _int_x(64)
+        assert np.allclose(np.asarray(ov @ x),
+                           ov.to_scipy().astype(np.float32) @ x,
+                           rtol=1e-4, atol=1e-4)
+
+    def test_prune_step_deletes_smallest_magnitudes(self):
+        ov = DeltaOverlay(as_operator(M.banded(48, 5, seed=1), "csr"))
+        nnz0 = ov.nnz
+        deleted = prune_step(ov, fraction=0.25)
+        assert deleted == max(1, int(0.25 * nnz0))
+        assert ov.nnz == nnz0 - deleted
+        # the survivors are the larger magnitudes
+        survivors = np.abs(ov.to_scipy().data)
+        assert survivors.min() >= 0.0
+        assert ov.drift().nnz == pytest.approx(deleted / nnz0)
+        with pytest.raises(ValueError, match="fraction"):
+            prune_step(ov, fraction=0.0)
+
+    def test_pruning_to_threshold_then_refresh(self):
+        ov = DeltaOverlay(as_operator(M.banded(48, 9, seed=0), "csr"),
+                          drift_threshold=0.25)
+        while not ov.drifted():
+            prune_step(ov, fraction=0.15)
+        res = ov.refresh()
+        assert res.retuned
+
+
+# ---------------------------------------------------- fingerprint bugfix ----
+
+
+class TestFingerprintCollision:
+    def test_same_rows_and_values_different_columns_distinct(self):
+        """Regression: indptr and data identical, only column positions
+        differ — the fingerprint must separate them (it previously hashed
+        only indptr + data and collided)."""
+        indptr = np.arange(9, dtype=np.int64)
+        data = np.ones(8)
+        a = sp.csr_matrix((data, np.arange(8) % 4, indptr), shape=(8, 8))
+        b = sp.csr_matrix((data, (np.arange(8) % 4) + 4, indptr), shape=(8, 8))
+        assert np.array_equal(a.indptr, b.indptr)
+        assert np.array_equal(a.data, b.data)
+        assert SpmvWorkspace.fingerprint(a) != SpmvWorkspace.fingerprint(b)
+
+    def test_cached_spmv_distinguishes_column_shifts(self):
+        """The user-visible symptom: spmv_cached must not serve matrix B
+        with matrix A's cached operator."""
+        indptr = np.arange(9, dtype=np.int64)
+        data = np.ones(8)
+        a = sp.csr_matrix((data, np.arange(8) % 4, indptr), shape=(8, 8))
+        b = sp.csr_matrix((data, (np.arange(8) % 4) + 4, indptr), shape=(8, 8))
+        ws = SpmvWorkspace(max_entries=4)
+        x = np.arange(8, dtype=np.float32)
+        ya = np.asarray(ws.spmv(a, x))
+        yb = np.asarray(ws.spmv(b, x))
+        assert np.array_equal(ya, np.asarray((a @ x).astype(np.float32)))
+        assert np.array_equal(yb, np.asarray((b @ x).astype(np.float32)))
+        assert not np.array_equal(ya, yb)

@@ -297,3 +297,98 @@ def test_dia_banded_exact(band_lo, band_hi, seed):
     A = from_dense(s, "dia")
     assert A.ndiags == band_lo + band_hi + 1
     np.testing.assert_allclose(np.asarray(A.to_dense()), s.toarray(), rtol=1e-6)
+
+
+# -------------------------------------------------------- dynamic overlay ----
+
+
+@st.composite
+def int_matrices(draw, max_n=40):
+    """Integer-valued sparse matrices: every SpMV product/sum is exactly
+    representable in float32, so overlay-vs-rebuilt comparisons are
+    bit-for-bit questions about *structure*, not rounding."""
+    n = draw(st.integers(4, max_n))
+    density = draw(st.floats(0.02, 0.3))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    mat = sp.random(n, n, density=density, random_state=rng, format="csr")
+    mat.data = rng.integers(1, 8, len(mat.data)).astype(np.float64)
+    mat.sum_duplicates()
+    mat.eliminate_zeros()
+    return mat
+
+
+@st.composite
+def mutation_streams(draw, n, max_len=30):
+    """Arbitrary insert/update/delete sequences (integer values)."""
+    ops = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1),
+                  st.integers(0, 7)),
+        min_size=1, max_size=max_len))
+    return ops  # v == 0 is a structural delete
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_overlay_matvec_bit_identical_to_rebuilt(data):
+    """base @ x + delta @ x == rebuilt @ x, bit-for-bit, on csr/plain,
+    after an arbitrary insert/update/delete sequence."""
+    from repro.core import DeltaOverlay, as_operator
+
+    s = data.draw(int_matrices())
+    n = s.shape[0]
+    ov = DeltaOverlay(as_operator(s, "csr").using("plain", fallback=False))
+    for i, j, v in data.draw(mutation_streams(n)):
+        ov.set(i, j, float(v))
+    x = jnp.asarray(
+        np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+        .integers(-4, 5, n), jnp.float32)
+    rebuilt = as_operator(ov.to_scipy(), "csr").using("plain", fallback=False)
+    np.testing.assert_array_equal(np.asarray(ov @ x),
+                                  np.asarray(rebuilt @ x))
+    assert ov.nnz == ov.to_scipy().nnz
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_overlay_compaction_idempotent_and_exact(data):
+    """compact() == from-scratch rebuild bitwise; compacting a clean overlay
+    is the identity; semantics are unchanged across the compaction."""
+    from repro.core import DeltaOverlay, as_operator
+
+    s = data.draw(int_matrices(max_n=32))
+    n = s.shape[0]
+    ov = DeltaOverlay(as_operator(s, "csr"))
+    for i, j, v in data.draw(mutation_streams(n)):
+        ov.set(i, j, float(v))
+    merged = ov.to_scipy()
+    x = jnp.asarray(np.random.default_rng(0).integers(-4, 5, n), jnp.float32)
+    y_before = np.asarray(ov @ x)
+    op = ov.compact()
+    assert ov.compact() is op                     # idempotent when clean
+    fresh = as_operator(merged, "csr")
+    np.testing.assert_array_equal(np.asarray(op.container.data),
+                                  np.asarray(fresh.container.data))
+    np.testing.assert_array_equal(np.asarray(op.container.indices),
+                                  np.asarray(fresh.container.indices))
+    np.testing.assert_array_equal(np.asarray(ov @ x), y_before)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(16, 64), st.integers(2, 8), st.integers(0, 2**31 - 1))
+def test_overlay_drift_monotone_under_growing_deltas(n, stride, seed):
+    """Insertion-only streams into one row at widening columns grow every
+    tracked feature (nnz, imbalance, ndiags, band extent), so the drift
+    score is non-decreasing as the delta grows."""
+    from repro.core import DeltaOverlay, as_operator
+
+    rng = np.random.default_rng(seed)
+    base = sp.diags([np.ones(n)], [0], shape=(n, n)).tocsr()
+    ov = DeltaOverlay(as_operator(base, "csr"))
+    assert ov.drift().score == 0.0
+    scores = []
+    for j in range(1, n, stride):
+        ov.set(0, j, float(rng.integers(1, 5)))
+        scores.append(ov.drift().score)
+    assert all(b >= a for a, b in zip(scores, scores[1:]))
+    assert scores[-1] > 0.0

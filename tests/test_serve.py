@@ -324,3 +324,151 @@ class TestStatsInvariants:
     def test_traffic_rejects_unknown_mix(self):
         with pytest.raises(ValueError, match="mix"):
             TrafficSpec(mix="flood")
+
+
+# ------------------------------------------------------ capacity invariant ----
+
+
+class TestCapacityInvariant:
+    def test_capacity_zero_never_retains(self):
+        """Regression: max_entries=0 used to retain one entry (evict ran
+        before insert), so size exceeded capacity. The insert-then-evict
+        order keeps the invariant: the operator is built and returned but
+        never retained."""
+        ws = SpmvWorkspace(max_entries=0)
+        A = M.banded(16, 3, seed=0)
+        op = ws.get_operator(A, "csr")
+        assert op.format == "csr"
+        st = ws.stats()
+        assert st["size"] == 0 and st["capacity"] == 0
+        assert st["size"] <= st["capacity"]
+        op2, hit = ws.admit(ws.fingerprint(A), lambda: as_operator(A, "csr"))
+        assert not hit
+        assert ws.stats()["size"] == 0
+        assert len(ws) == 0
+
+    def test_size_never_exceeds_capacity_under_churn(self):
+        ws = SpmvWorkspace(max_entries=2)
+        for i in range(5):
+            ws.get_operator(M.banded(16, 3, seed=i), "csr")
+            assert ws.stats()["size"] <= ws.stats()["capacity"]
+
+    def test_negative_capacity_rejected(self):
+        with pytest.raises(ValueError, match="max_entries"):
+            SpmvWorkspace(max_entries=-1)
+
+    def test_insert_and_discard(self):
+        ws = SpmvWorkspace(max_entries=2)
+        A = M.banded(16, 3, seed=0)
+        ws.insert("fp-a", as_operator(A, "csr"))
+        assert ws.keys() == ("fp-a",)
+        assert ws.stats()["hits"] == ws.stats()["misses"] == 0
+        assert ws.discard("fp-a") and not ws.discard("fp-a")
+        assert ws.stats()["evictions"] == 0  # invalidation, not eviction
+
+
+# ------------------------------------------------------ percentile bugfix ----
+
+
+class TestNearestRankPercentile:
+    def test_even_length_p50_is_lower_middle(self):
+        """Regression: round(p/100*(n-1)) returned index 2 for p50 of 4
+        samples; nearest-rank (ceil(p/100*n) - 1) is index 1."""
+        from repro.serve.stats import _percentile
+
+        assert _percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.0
+
+    def test_nearest_rank_definition(self):
+        from repro.serve.stats import _percentile
+
+        vals = [10.0, 20.0, 30.0, 40.0, 50.0]
+        assert _percentile(vals, 20) == 10.0   # ceil(0.2*5)=1 -> index 0
+        assert _percentile(vals, 21) == 20.0   # ceil(1.05)=2  -> index 1
+        assert _percentile(vals, 100) == 50.0
+        assert _percentile(vals, 0) == 10.0    # clamped to the first rank
+        assert _percentile([], 50) == 0.0
+        assert _percentile([7.0], 99) == 7.0
+
+    def test_fake_clock_latency_percentiles(self):
+        """Deterministic end-to-end check: with the 1ms-step fake clock the
+        summary's percentiles are exact nearest-rank picks."""
+        eng = _engine(fmt="csr", tune_mode=None, max_batch=1)
+        for x in _RHS[:4]:
+            eng.submit(_S, x)
+        eng.flush()
+        lats = sorted(r.latency_s for r in eng.stats.requests)
+        out = eng.summary()
+        assert out["latency_p50_s"] == pytest.approx(lats[1])  # not lats[2]
+        assert out["latency_p99_s"] == pytest.approx(lats[3])
+
+
+# ------------------------------------------------------- dynamic tenants ----
+
+
+class TestEngineRefresh:
+    def _mutated_engine(self, threshold):
+        eng = _engine(capacity=4, drift_threshold=threshold)
+        A = M.tridiag(48, seed=0)
+        ov = eng.mutable(A)
+        for j in range(6, 42, 4):          # band-widening inserts
+            ov.set(0, j, 1.0)
+        return eng, ov
+
+    def test_below_threshold_compacts_without_retune(self):
+        eng, ov = self._mutated_engine(threshold=1e9)
+        tunes0 = eng.stats.tunes
+        res = eng.refresh(ov)
+        assert res.compacted and not res.retuned
+        assert eng.stats.refreshes == 1
+        assert eng.stats.refresh_retunes == 0
+        assert eng.stats.tunes == tunes0   # admission tunes untouched
+        out = eng.summary()
+        assert out["refreshes"] == 1 and out["refresh_retunes"] == 0
+
+    def test_above_threshold_retunes_and_readmits(self):
+        eng, ov = self._mutated_engine(threshold=0.0)
+        old_fp = ov.base_fingerprint
+        assert eng.workspace.lookup(old_fp) is not None
+        hits0 = eng.stats.cache_hits       # keep ws/engine counters aligned
+        eng.stats.cache_hits += 1
+        res = eng.refresh(ov)
+        assert res.retuned
+        assert res.fingerprint_after != old_fp
+        # stale fingerprint invalidated, new one warm
+        assert res.fingerprint_after in eng.workspace.keys()
+        assert old_fp not in eng.workspace.keys()
+        assert eng.workspace.stats()["evictions"] == 0
+        assert eng.stats.refreshes == 1 == eng.stats.refresh_retunes
+        # the re-admitted fingerprint serves without the matrix
+        x = np.ones(48, np.float32)
+        y = eng.submit(res.fingerprint_after, x).result()
+        ref = ov.to_scipy().astype(np.float32) @ x
+        assert np.allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5)
+
+    def test_refresh_is_amortised_across_clean_calls(self):
+        eng, ov = self._mutated_engine(threshold=0.25)
+        assert eng.refresh(ov).retuned     # the stream crossed 0.25
+        res2 = eng.refresh(ov)             # nothing mutated since
+        assert not res2.compacted and not res2.retuned
+        assert eng.stats.refreshes == 2
+        assert eng.stats.refresh_retunes == 1
+
+    def test_untuned_engine_never_retunes_on_refresh(self):
+        eng = _engine(capacity=4, tune_mode=None, drift_threshold=0.0)
+        ov = eng.mutable(M.tridiag(48, seed=0))
+        for j in range(6, 42, 4):
+            ov.set(0, j, 1.0)
+        res = eng.refresh(ov)
+        assert res.compacted and not res.retuned
+        x = np.ones(48, np.float32)
+        y = eng.submit(res.fingerprint_after, x).result()
+        assert np.allclose(np.asarray(y),
+                           ov.to_scipy().astype(np.float32) @ x, rtol=1e-5)
+
+    def test_mutable_admission_counts_like_flush(self):
+        eng = _engine(capacity=4)
+        A = M.tridiag(32, seed=1)
+        eng.mutable(A)
+        assert eng.stats.admissions == 1 and eng.stats.cache_misses == 1
+        eng.mutable(A)                     # warm now
+        assert eng.stats.cache_hits == 1

@@ -18,6 +18,14 @@ the cross-PR perf + prediction record).
       # BENCH_serve.json (latency p50/p99, throughput, warm-pool hit rate);
       # exits non-zero on empty output or a dispatch fallback off a tuned
       # backend (the CI serve-smoke gate)
+  PYTHONPATH=src python -m benchmarks.run --precision [--scale quick]
+      # compressed-index / mixed-precision sweep: format x {int32,auto}
+      # index x {f32,bf16,f16} value variants on the Pallas backend ->
+      # "precision" section of BENCH_spmv.json (bytes-per-nnz, measured
+      # GFLOP/s vs the roofline-predicted speedup); exits non-zero when a
+      # compressed variant falls back while its uncompressed baseline ran
+      # natively, or narrower dtypes fail to shrink storage (the CI
+      # precision-smoke gate)
   PYTHONPATH=src python -m benchmarks.run --dynamic [--smoke]
       # dynamic-matrix trajectory: mutation scenarios (FDM assembly,
       # pruning) driven across the drift threshold -> BENCH_dynamic.json;
@@ -120,6 +128,28 @@ def _write_dynamic_json(path: str, doc: dict) -> int:
     print(f"# wrote {len(scen)} dynamic scenarios to {path} "
           + " ".join(f"{s}:retunes={o['retunes']}/{len(o['steps'])}"
                      f"/final={o['final_key']}" for s, o in scen.items()),
+          file=sys.stderr)
+    return len(problems)
+
+
+def _write_precision_json(path: str, scale: str, section: dict) -> int:
+    """Write the precision sweep into the ``"precision"`` section of the
+    SpMV trajectory and run its gate; returns the number of gate failures."""
+    from benchmarks.spmv_bench import check_precision
+
+    doc = _load_doc(path)  # keep entries/corpus the other modes recorded
+    doc["schema"] = 2
+    doc["precision"] = {"scale": scale, **section}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    problems = check_precision(section)
+    for p in problems:
+        print(f"PRECISION: {p}", file=sys.stderr)
+    recs = section["records"]
+    compressed = [r for r in recs if r["variant"] != "int32-f32"]
+    print(f"# wrote {len(recs)} precision records to {path} "
+          f"({len(compressed)} compressed/narrow variants, "
+          f"{sum(r['fallback'] for r in compressed)} fallbacks)",
           file=sys.stderr)
     return len(problems)
 
@@ -231,6 +261,11 @@ def main() -> None:
     ap.add_argument("--dynamic-json", default=DEFAULT_DYNAMIC_JSON,
                     help="where to write the dynamic-matrix trajectory "
                          "(BENCH_dynamic.json)")
+    ap.add_argument("--precision", action="store_true",
+                    help="compressed-index / mixed-precision sweep only -> "
+                         "'precision' section of BENCH_spmv.json; fail on "
+                         "unexpected compressed-variant fallback or storage "
+                         "that does not shrink (the CI precision gate)")
     ap.add_argument("--accuracy-floor", type=float, default=None,
                     help="with --corpus: exit non-zero when 'near' prediction "
                          "accuracy drops below this fraction (CI gate)")
@@ -245,6 +280,16 @@ def main() -> None:
                   f"{args.accuracy_floor:.0%}", file=sys.stderr)
             sys.exit(1)
         return
+
+    if args.precision:
+        from benchmarks import spmv_bench
+
+        scale = "smoke" if args.smoke else args.scale
+        rows, section = spmv_bench.collect_precision(scale)
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        sys.exit(1 if _write_precision_json(args.json, scale, section) else 0)
 
     if args.serve:
         from benchmarks import serve_bench

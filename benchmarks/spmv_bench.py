@@ -27,8 +27,18 @@ from repro.core import (
 )
 from repro.core import matrices as M
 from repro.kernels.ops import pallas_strategy
+from repro.roofline.analytic import spmv_roofline
 
 FORMATS = ("coo", "csr", "dia", "ell", "sell")
+
+#: --precision sweep variants: (name, index_dtype knob, value_dtype knob).
+#: "int32-f32" is the uncompressed baseline the others are measured against.
+PRECISION_VARIANTS = (
+    ("int32-f32", "int32", "float32"),
+    ("auto-f32", "auto", "float32"),
+    ("auto-bf16", "auto", "bfloat16"),
+    ("auto-f16", "auto", "float16"),
+)
 
 #: scale -> (resident-cols cap, [(size_tag, n)], iters, warmup). The last
 #: size always exceeds the cap, forcing the tiled strategies.
@@ -50,6 +60,12 @@ def _suite(n: int):
     wings = sp.diags([np.ones(n - n // 2)] * 2, [-(n // 2), n // 2], shape=(n, n))
     return [(f"banded_w_{n}", (M.banded(n, 9, seed=0) + wings).tocsr()),
             (f"random_{n}", M.random_uniform(n, min(0.5, 16.0 / n), seed=1))]
+
+
+def _container_bytes(A) -> int:
+    """Device bytes of a container's leaves (arrays + any kernel plan)."""
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(A))
 
 
 def _times_s(fn, *args, iters: int, warmup: int) -> List[float]:
@@ -108,6 +124,7 @@ def collect(scale: str = "quick"):
                         "mode": (mode or "fallback") if backend == "pallas" else "n/a",
                         "median_s": med, "p10_s": float(np.percentile(ts, 10)),
                         "gflops": 2.0 * nnz / med / 1e9,
+                        "bytes_per_nnz": _container_bytes(A) / max(1, nnz),
                         "predicted_format": pred_fmt,
                         "predicted_backend": pred_backend,
                     }
@@ -173,6 +190,118 @@ def prediction_summary(entries):
         "accuracy_near": near / n if n else 0.0,
         "per_matrix": per_matrix,
     }
+
+
+def _plan_index_dtype(A) -> str | None:
+    plan = getattr(A, "plan", None)
+    if plan is None:
+        return None
+    dt = plan.index_dtype()
+    return None if dt is None else str(dt)
+
+
+def collect_precision(scale: str = "quick"):
+    """The ``--precision`` sweep: format × {index, value}-dtype variants on
+    the Pallas backend, bytes-per-nnz measured from the built container and
+    GFLOP/s validated against the roofline bandwidth prediction.
+
+    Returns ``(csv_rows, section)`` where ``section`` is the ``"precision"``
+    block of BENCH_spmv.json: per variant, measured bytes/median/GFLOP/s,
+    the roofline-predicted GFLOP/s and speedup over the int32+f32 baseline,
+    and the measured speedup — the predicted-vs-measured delta the tentpole
+    asks the trajectory to record.
+    """
+    cap, sizes, iters, warmup = SCALES[scale]
+    platform = jax.default_backend()
+    rows, records = [], []
+    for tag, n in sizes:
+        for mat_name, s in _suite(n):
+            s = s.tocsr()
+            x = jnp.asarray(np.random.default_rng(2).standard_normal(n),
+                            jnp.float32)
+            nnz = int(s.nnz)
+            for fmt in FORMATS:
+                if structural_skip(s, fmt) is not None:
+                    continue
+                base_entry = None
+                for vname, idt, vdt in PRECISION_VARIANTS:
+                    pol = ExecutionPolicy(
+                        backends=("pallas", "plain"), max_resident_cols=cap,
+                        index_dtype=idt, value_dtype=vdt)
+                    A = from_dense(s, fmt, col_tile=pol.col_tile(n),
+                                   **pol.storage_kw(fmt))
+                    selected = select_spmv(A, pol).key.backend
+                    fn = jax.jit(lambda A, x, pol=pol: spmv(A, x, policy=pol))
+                    ts = _times_s(fn, A, x, iters=iters, warmup=warmup)
+                    med = float(np.median(ts))
+                    nbytes = _container_bytes(A)
+                    roof = spmv_roofline(nnz, nbytes, *s.shape,
+                                         platform=platform)
+                    entry = {
+                        "matrix": mat_name, "size_tag": tag, "format": fmt,
+                        "variant": vname, "index_dtype": idt,
+                        "value_dtype": vdt,
+                        "plan_index_dtype": _plan_index_dtype(A),
+                        "selected_backend": selected,
+                        "fallback": selected != "pallas",
+                        "mode": pallas_strategy(A, pol) or "fallback",
+                        "nnz": nnz, "nbytes": nbytes,
+                        "bytes_per_nnz": nbytes / max(1, nnz),
+                        "median_s": med,
+                        "gflops": 2.0 * nnz / med / 1e9,
+                        "roofline_gflops": roof.gflops,
+                    }
+                    if vname == "int32-f32":
+                        base_entry = entry
+                    if base_entry is not None:
+                        entry["predicted_speedup"] = (
+                            base_entry["roofline_gflops"] and
+                            roof.gflops / base_entry["roofline_gflops"])
+                        entry["measured_speedup"] = base_entry["median_s"] / med
+                        entry["roofline_delta"] = (entry["predicted_speedup"]
+                                                   - entry["measured_speedup"])
+                    records.append(entry)
+                    rows.append({
+                        "name": f"spmv-prec/{mat_name}/{fmt}/{vname}",
+                        "us_per_call": med * 1e6,
+                        "derived": (f"B/nnz={entry['bytes_per_nnz']:.1f} "
+                                    f"idx={entry['plan_index_dtype']} "
+                                    f"mode={entry['mode']} "
+                                    f"fallback={entry['fallback']}"),
+                    })
+    return rows, {"variants": [v[0] for v in PRECISION_VARIANTS],
+                  "platform": platform, "records": records}
+
+
+def check_precision(section) -> List[str]:
+    """The precision-sweep CI gate: every compressed/narrow variant must
+    stay on the backend its uncompressed baseline ran natively, and its
+    storage must not exceed the baseline's (strictly less wherever the
+    container carries a compressed index plan or a narrower value dtype)."""
+    problems = []
+    base = {(r["matrix"], r["format"]): r for r in section["records"]
+            if r["variant"] == "int32-f32"}
+    for r in section["records"]:
+        if r["variant"] == "int32-f32":
+            continue
+        b = base.get((r["matrix"], r["format"]))
+        if b is None:
+            continue
+        cell = f"{r['matrix']} {r['format']}/{r['variant']}"
+        if not b["fallback"] and r["fallback"]:
+            problems.append(f"{cell}: fell back to "
+                            f"{r['selected_backend']} while the uncompressed "
+                            f"baseline ran pallas natively")
+        if r["nbytes"] > b["nbytes"]:
+            problems.append(f"{cell}: {r['nbytes']}B exceeds the baseline's "
+                            f"{b['nbytes']}B")
+        narrower = (r["value_dtype"] != "float32"
+                    or (r["plan_index_dtype"] not in (None, "int32")
+                        and b["plan_index_dtype"] == "int32"))
+        if narrower and not r["nbytes"] < b["nbytes"]:
+            problems.append(f"{cell}: narrower dtypes but bytes did not "
+                            f"shrink ({r['nbytes']}B vs {b['nbytes']}B)")
+    return problems
 
 
 def run(scale: str = "quick"):

@@ -49,7 +49,8 @@ from .spmv import (
 from .autotune import TuneResult, autotune_spmv, optimal_format_distribution, structural_skip
 from .features import MatrixFeatures, extract_features
 from .select import (
-    Prediction, predict_format, prune_candidates, rank_formats, selection_drifted,
+    Prediction, bytes_per_nnz, plan_index_dtype, predict_format,
+    prune_candidates, rank_formats, selection_drifted, storage_bytes,
 )
 from .registry import SpmvWorkspace, spmv_cached, workspace
 from .dynamic import DEFAULT_DRIFT_THRESHOLD, DeltaOverlay, DriftReport, RefreshResult
@@ -66,8 +67,8 @@ __all__ = [
     "register_spmm", "register_spmv", "select_spmv", "spmm", "spmv",
     "TuneResult", "autotune_spmv", "optimal_format_distribution", "structural_skip",
     "MatrixFeatures", "extract_features",
-    "Prediction", "predict_format", "prune_candidates", "rank_formats",
-    "selection_drifted",
+    "Prediction", "bytes_per_nnz", "plan_index_dtype", "predict_format",
+    "prune_candidates", "rank_formats", "selection_drifted", "storage_bytes",
     "SpmvWorkspace", "spmv_cached", "workspace",
     "DEFAULT_DRIFT_THRESHOLD", "DeltaOverlay", "DriftReport", "RefreshResult",
     "DistributedSpMV", "autotune_distributed", "split_local_remote",

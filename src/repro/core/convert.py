@@ -116,7 +116,7 @@ def to_densefmt(a, dtype=jnp.float32):
 
 
 def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None,
-           col_tile: ColTile = None):
+           col_tile: ColTile = None, index_dtype="auto"):
     s = _as_scipy(a).tocoo()
     order = np.lexsort((s.col, s.row))  # row-major sort (Morpheus sorts too)
     row, col, val = s.row[order], s.col[order], s.data[order]
@@ -124,7 +124,8 @@ def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None,
     plan = None
     if ct is not None:
         plan = tiling.build_coo_col_plan(row, col, val.astype(np.dtype(dtype)),
-                                         tuple(s.shape), ct).jaxify()
+                                         tuple(s.shape), ct,
+                                         index_dtype=index_dtype).jaxify()
     if len(row) == 0:  # degenerate: keep one zero sentinel entry
         row = np.array([s.shape[0]], np.int32)
         col = np.array([0], np.int32)
@@ -138,7 +139,8 @@ def to_coo(a, dtype=jnp.float32, pad_to: Optional[int] = None,
                jnp.asarray(val, dtype), tuple(s.shape), plan)
 
 
-def to_csr(a, dtype=jnp.float32, col_tile: ColTile = None, plan: bool = True):
+def to_csr(a, dtype=jnp.float32, col_tile: ColTile = None, plan: bool = True,
+           index_dtype="auto"):
     """CSR container; with ``plan=True`` (default) a cached SELL-C-σ view
     (the ``"scs"`` KernelPlan) rides along so ``csr``×``pallas`` dispatches a
     native kernel, jit-safely, instead of being a dispatch-table hole."""
@@ -146,8 +148,8 @@ def to_csr(a, dtype=jnp.float32, col_tile: ColTile = None, plan: bool = True):
     scs = None
     if plan and col_tile is not False and col_tile != 0:
         ct = _resolve_col_tile(s.shape[1], col_tile)
-        scs = tiling.build_scs_plan(s, col_tile=ct,
-                                    dtype=np.dtype(dtype)).jaxify()
+        scs = tiling.build_scs_plan(s, col_tile=ct, dtype=np.dtype(dtype),
+                                    index_dtype=index_dtype).jaxify()
     indices, data = s.indices, s.data
     if len(data) == 0:  # degenerate: one pad entry past indptr[-1] (sentinel row)
         indices = np.array([0], np.int32)
@@ -186,7 +188,7 @@ def _row_entry_positions(take: np.ndarray):
 
 
 def to_ell(a, dtype=jnp.float32, width: Optional[int] = None,
-           col_tile: ColTile = None):
+           col_tile: ColTile = None, index_dtype="auto"):
     s = _as_scipy_sorted(a)
     nrows, ncols = s.shape
     counts = np.diff(s.indptr)
@@ -209,12 +211,13 @@ def to_ell(a, dtype=jnp.float32, width: Optional[int] = None,
                 (s.data[keep], s.indices[keep],
                  np.concatenate([[0], np.cumsum(np.minimum(counts, w))])),
                 shape=s.shape)
-        plan = tiling.build_ell_col_plan(sp_plan, ct, np.dtype(dtype)).jaxify()
+        plan = tiling.build_ell_col_plan(sp_plan, ct, np.dtype(dtype),
+                                         index_dtype=index_dtype).jaxify()
     return ELL(jnp.asarray(idx), jnp.asarray(dat, dtype), (nrows, ncols), plan)
 
 
 def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64,
-            col_tile: ColTile = None, plan: bool = True):
+            col_tile: ColTile = None, plan: bool = True, index_dtype="auto"):
     """SELL-C-σ container. With ``plan=True`` (default) the Pallas ``"scs"``
     stream is precomputed here — construction is exactly where the layout is
     concrete, so ``sell``×``pallas`` no longer needs a trace-time rebuild
@@ -248,7 +251,7 @@ def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64,
     if plan and col_tile is not False and col_tile != 0:
         scs = tiling.build_scs_plan(
             s, col_tile=_resolve_col_tile(ncols, col_tile), C=C, sigma=sigma,
-            dtype=np.dtype(dtype)).jaxify()
+            dtype=np.dtype(dtype), index_dtype=index_dtype).jaxify()
     return SELL(jnp.asarray(sptr, jnp.int32), jnp.asarray(idx), jnp.asarray(dat, dtype),
                 jnp.asarray(perm, jnp.int32), (nrows, ncols), C, scs)
 

@@ -10,8 +10,12 @@ All formats carry ``shape`` (static aux data) and expose:
   - ``nnz``         : stored entries (padded entries included where relevant)
   - ``to_dense()``  : densify (reference semantics for every test oracle)
 
-Index dtype is int32 throughout (the paper uses 32-bit indices on the FPGA
-path as well); value dtype is any float dtype, fp32 by default.
+Container-level index dtype is int32 (the paper uses 32-bit indices on the
+FPGA path as well); the *tile-local* column indices inside a container's
+:class:`KernelPlan` may be compressed to int16/int8 when the column-tile
+width bounds their range (``core.tiling.local_index_dtype``). Value dtype is
+any float dtype, fp32 by default; bf16/fp16 storage accumulates in fp32
+inside every kernel.
 """
 from __future__ import annotations
 
@@ -58,9 +62,16 @@ class KernelPlan:
         return int(self.meta[1])
 
     def jaxify(self) -> "KernelPlan":
-        """Numpy-built arrays moved to device (index arrays stay int32)."""
+        """Numpy-built arrays moved to device, dtypes preserved — including
+        int16/int8 tile-local index arrays from compressed plans."""
         return KernelPlan(self.kind, tuple(jnp.asarray(a) for a in self.arrays),
                           self.meta)
+
+    def index_dtype(self):
+        """Dtype of the plan's tile-local column-index array, or None for
+        kinds without per-entry indices ("dia-cols")."""
+        pos = {"ell-cols": 0, "coo-cols": 1, "scs": 3}.get(self.kind)
+        return None if pos is None else jnp.dtype(self.arrays[pos].dtype)
 
 
 jax.tree_util.register_pytree_node(

@@ -13,19 +13,21 @@ import numpy as np
 import scipy.sparse as sp
 
 
-def banded(n: int, band: int = 3, seed: int = 0) -> sp.csr_matrix:
+def banded(n: int, band: int = 3, seed: int = 0,
+           dtype=np.float64) -> sp.csr_matrix:
     """Banded matrix with ``2*band+1`` dense diagonals (FDM-like)."""
     rng = np.random.default_rng(seed)
     diags = [rng.standard_normal(n) for _ in range(2 * band + 1)]
     offsets = list(range(-band, band + 1))
-    return sp.diags(diags, offsets, shape=(n, n), format="csr")
+    return sp.diags(diags, offsets, shape=(n, n),
+                    format="csr").astype(dtype, copy=False)
 
 
-def tridiag(n: int, seed: int = 0) -> sp.csr_matrix:
-    return banded(n, 1, seed)
+def tridiag(n: int, seed: int = 0, dtype=np.float64) -> sp.csr_matrix:
+    return banded(n, 1, seed, dtype=dtype)
 
 
-def fdm27(nx: int, ny: int, nz: int) -> sp.csr_matrix:
+def fdm27(nx: int, ny: int, nz: int, dtype=np.float64) -> sp.csr_matrix:
     """HPCG's 27-point stencil on an nx*ny*nz grid: 26 on the diagonal,
     -1 for each of the up-to-26 neighbours (Dirichlet-style truncation).
     Built vectorised so multigrid hierarchies over large grids are cheap."""
@@ -46,7 +48,7 @@ def fdm27(nx: int, ny: int, nz: int) -> sp.csr_matrix:
                                     26.0 if (di, dj, dk) == (0, 0, 0) else -1.0))
     return sp.csr_matrix((np.concatenate(vals),
                           (np.concatenate(rows), np.concatenate(cols))),
-                         shape=(n, n))
+                         shape=(n, n)).astype(dtype, copy=False)
 
 
 def coarsen_injection(nx: int, ny: int, nz: int) -> np.ndarray:
@@ -65,14 +67,16 @@ def coarsen_injection(nx: int, ny: int, nz: int) -> np.ndarray:
     return fine.astype(np.int64)
 
 
-def random_uniform(n: int, density: float = 0.01, seed: int = 0) -> sp.csr_matrix:
+def random_uniform(n: int, density: float = 0.01, seed: int = 0,
+                   dtype=np.float64) -> sp.csr_matrix:
     rng = np.random.default_rng(seed)
     m = sp.random(n, n, density=density, random_state=rng, format="csr")
     m.data = rng.standard_normal(len(m.data))
-    return m
+    return m.astype(dtype, copy=False)
 
 
-def powerlaw(n: int, avg_nnz: int = 8, alpha: float = 1.8, seed: int = 0) -> sp.csr_matrix:
+def powerlaw(n: int, avg_nnz: int = 8, alpha: float = 1.8, seed: int = 0,
+             dtype=np.float64) -> sp.csr_matrix:
     """Power-law row lengths (graph-like; hostile to ELL, fine for CSR/COO)."""
     rng = np.random.default_rng(seed)
     raw = rng.zipf(alpha, size=n).astype(np.float64)
@@ -82,10 +86,11 @@ def powerlaw(n: int, avg_nnz: int = 8, alpha: float = 1.8, seed: int = 0) -> sp.
     vals = rng.standard_normal(lens.sum())
     m = sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
     m.sum_duplicates()
-    return m
+    return m.astype(dtype, copy=False)
 
 
-def block_random(n: int, bs: int = 32, block_density: float = 0.05, seed: int = 0) -> sp.csr_matrix:
+def block_random(n: int, bs: int = 32, block_density: float = 0.05,
+                 seed: int = 0, dtype=np.float64) -> sp.csr_matrix:
     """Block-sparse (BSR country — MoE-dispatch-shaped)."""
     rng = np.random.default_rng(seed)
     nb = -(-n // bs)
@@ -98,16 +103,18 @@ def block_random(n: int, bs: int = 32, block_density: float = 0.05, seed: int = 
         for i in range(min(bs, n - r0)):
             for j in range(min(bs, n - c0)):
                 rows.append(r0 + i), cols.append(c0 + j), vals.append(blk[i, j])
-    return sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+    return sp.csr_matrix((vals, (rows, cols)),
+                         shape=(n, n)).astype(dtype, copy=False)
 
 
-def diag_plus_noise(n: int, noise_nnz: int = 64, seed: int = 0) -> sp.csr_matrix:
+def diag_plus_noise(n: int, noise_nnz: int = 64, seed: int = 0,
+                    dtype=np.float64) -> sp.csr_matrix:
     """Mostly-diagonal with a few scattered entries (DIA wins, barely)."""
     rng = np.random.default_rng(seed)
     m = sp.diags([rng.standard_normal(n)], [0], shape=(n, n)).tolil()
     for _ in range(noise_nnz):
         m[rng.integers(n), rng.integers(n)] = rng.standard_normal()
-    return m.tocsr()
+    return m.tocsr().astype(dtype, copy=False)
 
 
 def perturb_fdm27(overlay, step: int, nx: int, ny: int, nz: int,
@@ -158,14 +165,18 @@ def perturb_fdm27(overlay, step: int, nx: int, ny: int, nz: int,
 #: must be reproducible across Python versions and refactors;
 #: ``tests/test_formats.py`` pins it.
 SUITE_GENERATORS: Tuple[Tuple[str, object], ...] = (
-    ("banded_b3", lambda s, r: banded(s, 3, seed=r)),
-    ("banded_b9", lambda s, r: banded(s, 9, seed=r)),
-    ("tridiag", lambda s, r: tridiag(s, seed=r)),
-    ("random_d01", lambda s, r: random_uniform(s, 0.01, seed=r)),
-    ("random_d05", lambda s, r: random_uniform(s, 0.05, seed=r)),
-    ("powerlaw", lambda s, r: powerlaw(s, seed=r)),
-    ("block32", lambda s, r: block_random(s, 32, seed=r)),
-    ("diagnoise", lambda s, r: diag_plus_noise(s, seed=r)),
+    ("banded_b3", lambda s, r, dt=np.float64: banded(s, 3, seed=r, dtype=dt)),
+    ("banded_b9", lambda s, r, dt=np.float64: banded(s, 9, seed=r, dtype=dt)),
+    ("tridiag", lambda s, r, dt=np.float64: tridiag(s, seed=r, dtype=dt)),
+    ("random_d01",
+     lambda s, r, dt=np.float64: random_uniform(s, 0.01, seed=r, dtype=dt)),
+    ("random_d05",
+     lambda s, r, dt=np.float64: random_uniform(s, 0.05, seed=r, dtype=dt)),
+    ("powerlaw", lambda s, r, dt=np.float64: powerlaw(s, seed=r, dtype=dt)),
+    ("block32",
+     lambda s, r, dt=np.float64: block_random(s, 32, seed=r, dtype=dt)),
+    ("diagnoise",
+     lambda s, r, dt=np.float64: diag_plus_noise(s, seed=r, dtype=dt)),
 )
 
 #: scale -> (sizes, grids, reps): the other axis of the iteration contract.
@@ -185,21 +196,25 @@ def suite_names(scale: str = "small") -> list:
     return names
 
 
-def suite(scale: str = "small") -> Iterator[Tuple[str, sp.csr_matrix]]:
+def suite(scale: str = "small",
+          dtype=np.float64) -> Iterator[Tuple[str, sp.csr_matrix]]:
     """Labeled matrix collection. ``small`` for tests, ``bench`` for figures.
 
     Iteration order is deterministic and part of the API: exactly
     ``suite_names(scale)``, independent of Python version or dict hashing
-    (generators live in the explicit ``SUITE_GENERATORS`` tuple).
+    (generators live in the explicit ``SUITE_GENERATORS`` tuple). ``dtype``
+    is handed to every generator — the precision lane builds its narrow-
+    storage corpora from the same seeds, so structure (and therefore format
+    choice) is identical across value dtypes.
     """
     sizes, grids, reps = SUITE_SCALES["small" if scale == "small" else "bench"]
     for s in sizes:
         for r in range(reps):
             for key, gen in SUITE_GENERATORS:
-                yield f"{key}_n{s}_s{r}", gen(s, r)
+                yield f"{key}_n{s}_s{r}", gen(s, r, dtype)
     for g in grids:
-        yield f"fdm27_{g[0]}x{g[1]}x{g[2]}", fdm27(*g)
+        yield f"fdm27_{g[0]}x{g[1]}x{g[2]}", fdm27(*g, dtype=dtype)
 
 
-def suite_dict(scale: str = "small") -> Dict[str, sp.csr_matrix]:
-    return dict(suite(scale))
+def suite_dict(scale: str = "small", dtype=np.float64) -> Dict[str, sp.csr_matrix]:
+    return dict(suite(scale, dtype=dtype))

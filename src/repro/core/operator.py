@@ -58,6 +58,30 @@ class ExecutionPolicy:
     kernels; larger ones run the column-tiled kernels over the container's
     convert-time :class:`~repro.core.formats.KernelPlan` (see
     docs/formats.md, "Kernel strategy").
+
+    The precision knobs (docs/formats.md, "Compression and precision"):
+
+    - ``index_dtype``: dtype of *tile-local* column indices inside kernel
+      plans — ``"auto"`` (default) compresses to the narrowest signed dtype
+      the column-tile width allows (int8 for tiles <= 128 columns, int16
+      <= 32768, else int32); an explicit ``"int8"``/``"int16"``/``"int32"``
+      pins it (builds raise when the tile width cannot hold it). Index
+      compression is exact: compressed kernels are bit-identical to int32.
+    - ``value_dtype``: storage dtype of the matrix values (``"float32"``
+      default; ``"bfloat16"``/``"float16"`` halve value bytes at reduced
+      precision).
+    - ``accum_dtype``: accumulation dtype. Only ``"float32"`` is implemented
+      — every Pallas kernel upcasts products to f32 before reducing — and
+      the Pallas ``supports`` predicates reject anything else.
+
+    Example — the precision knobs are plain strings, so policies stay
+    hashable pytree aux data:
+
+        >>> p = ExecutionPolicy(index_dtype="int16", value_dtype="bfloat16")
+        >>> p.index_dtype, str(p.np_value_dtype())
+        ('int16', 'bfloat16')
+        >>> ExecutionPolicy().index_dtype            # default: auto-compress
+        'auto'
     """
 
     backends: Tuple[str, ...] = ("plain",)
@@ -68,9 +92,41 @@ class ExecutionPolicy:
     allow_fallback: bool = True        # walk down the chain on unsupported
     # per-core VMEM the kernels may assume (default: one TPU core)
     vmem_budget_bytes: int = tiling.DEFAULT_VMEM_BUDGET_BYTES
+    # precision knobs — strings (not dtype objects) so the frozen policy
+    # stays hashable; resolved via np_value_dtype() / tiling.local_index_dtype
+    index_dtype: str = "auto"          # "auto" | "int8" | "int16" | "int32"
+    value_dtype: str = "float32"       # "float32" | "bfloat16" | "float16" | "float64"
+    accum_dtype: str = "float32"       # only "float32" is implemented
 
     def replace(self, **kw) -> "ExecutionPolicy":
         return dataclasses.replace(self, **kw)
+
+    def np_value_dtype(self):
+        """The ``value_dtype`` knob resolved to a numpy dtype (bfloat16
+        resolves through JAX's ml_dtypes registration).
+
+        Example:
+            >>> str(ExecutionPolicy(value_dtype="float16").np_value_dtype())
+            'float16'
+        """
+        return np.dtype(jnp.dtype(self.value_dtype))
+
+    def storage_kw(self, fmt: str) -> dict:
+        """Converter kwargs realising this policy's storage dtypes for
+        ``fmt`` — ``dtype`` for every format, plus ``index_dtype`` for the
+        formats whose kernel plans carry per-entry column indices (DIA's
+        plan has none; BSR/dense have no plan at all).
+
+        Example:
+            >>> sorted(ExecutionPolicy().storage_kw("ell"))
+            ['dtype', 'index_dtype']
+            >>> sorted(ExecutionPolicy().storage_kw("dia"))
+            ['dtype']
+        """
+        kw = {"dtype": self.np_value_dtype()}
+        if fmt in ("coo", "csr", "ell", "sell"):
+            kw["index_dtype"] = self.index_dtype
+        return kw
 
     def resident_cols(self) -> int:
         """Columns of f32 x that may stay VMEM-resident (min of the explicit
@@ -197,9 +253,16 @@ class SparseOperator:
 
     @property
     def nbytes(self) -> int:
-        """Device bytes of the container (data + index arrays)."""
+        """Device bytes of the container (data + index arrays + any kernel
+        plan) — dtype-sensitive, so narrower index/value policies shrink it."""
         return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
                    for l in jax.tree_util.tree_leaves(self.container))
+
+    @property
+    def bytes_per_nnz(self) -> float:
+        """Storage bytes per stored entry — the bandwidth-bound SpMV's
+        dominant cost lever (padding entries count: they move bytes too)."""
+        return self.nbytes / max(1, self.nnz)
 
     def __repr__(self):
         pol = "" if self.policy is None else f", backends={self.policy.backends}"
@@ -505,6 +568,10 @@ def as_operator(a, fmt: Optional[str] = None, policy: Optional[ExecutionPolicy] 
             ncols = int(shape[1])
             kw = {**kw, "col_tile": col_tile_for_policy(
                 tgt, ncols, policy.col_tile(ncols))}
+        if policy is not None:
+            # the policy's storage dtypes shape the build too (explicit
+            # converter kwargs win)
+            kw = {**policy.storage_kw(tgt), **kw}
         return SparseOperator(from_dense(a, tgt, **kw), policy)
     if getattr(type(a), "format", None) in registered_formats():
         op = SparseOperator(a, policy)

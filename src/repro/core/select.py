@@ -38,6 +38,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
+from . import tiling
 from .features import MatrixFeatures, extract_features
 from .operator import DEFAULT_POLICY, ExecutionPolicy
 from .spmv import DispatchKey
@@ -155,6 +158,79 @@ def storage_entries(f: MatrixFeatures, fmt: str) -> float:
     return float(f.nnz)
 
 
+def plan_index_dtype(ncols: int, policy: ExecutionPolicy) -> np.dtype:
+    """Index dtype a kernel plan built for an ``ncols``-wide matrix under
+    ``policy`` would carry — the feature-level mirror of what
+    ``tiling.local_index_dtype`` resolves at build time.
+
+    Raises ``ValueError`` when the policy pins a dtype the tile width cannot
+    hold (the same error the build would raise); :func:`rank` treats such a
+    candidate as infeasible rather than proposing it.
+
+    Example:
+        >>> plan_index_dtype(96, DEFAULT_POLICY)
+        dtype('int8')
+    """
+    ct = policy.col_tile(ncols) or max(1, ncols)
+    return tiling.local_index_dtype(ct, policy.index_dtype)
+
+
+def index_bytes(f: MatrixFeatures, fmt: str, policy: ExecutionPolicy,
+                strategy: str) -> float:
+    """Per-stored-entry *index* bytes the SpMV actually streams for this
+    (format, strategy) under the policy's ``index_dtype`` knob.
+
+    Plain/dense backends stream the container's int32 global indices; the
+    column-tiled Pallas strategies (and the csr/sell SCS stream, whose
+    resident mode is the single-tile case of the same plan) stream the
+    plan's tile-local indices, compressed to the dtype the tile width
+    allows. DIA streams offsets only (amortised to ~0 per entry); dense
+    streams none.
+    """
+    if fmt in ("dia", "dense", "bsr"):
+        return 0.0
+    local = (fmt in ("csr", "sell")) or strategy == "tiled"
+    ib = plan_index_dtype(f.ncols, policy).itemsize if local else 4
+    if fmt == "coo":
+        return 4.0 + ib  # int32 global rows ride along with every entry
+    return float(ib)
+
+
+def storage_bytes(f: MatrixFeatures, fmt: str,
+                  policy: Optional[ExecutionPolicy] = None,
+                  strategy: str = "") -> float:
+    """Storage volume in bytes of ``f`` as ``fmt`` under the policy's
+    precision knobs — ``storage_entries`` priced per entry: value bytes from
+    ``value_dtype``, index bytes from :func:`index_bytes`, plus the
+    per-row/per-diagonal metadata the format keeps (CSR's indptr, SELL's
+    sptr+perm, DIA's offsets)."""
+    policy = policy if policy is not None else DEFAULT_POLICY
+    vb = policy.np_value_dtype().itemsize
+    entries = storage_entries(f, fmt)
+    per_entry = vb + index_bytes(f, fmt, policy, strategy)
+    overhead = {"csr": 4.0 * (f.nrows + 1), "sell": 8.0 * f.nrows,
+                "dia": 4.0 * f.ndiags}.get(fmt, 0.0)
+    return entries * per_entry + overhead
+
+
+def bytes_per_nnz(f: MatrixFeatures, fmt: str,
+                  policy: Optional[ExecutionPolicy] = None,
+                  strategy: str = "") -> float:
+    """Streamed bytes per logical nonzero — the bandwidth-bound SpMV's
+    dominant cost lever (Copernicus's compression-ratio axis).
+
+    Example:
+        >>> import scipy.sparse as sp
+        >>> from repro.core.features import extract_features
+        >>> f = extract_features(sp.eye(64, format="csr"))
+        >>> b32 = bytes_per_nnz(f, "ell", DEFAULT_POLICY.replace(index_dtype="int32"))
+        >>> bauto = bytes_per_nnz(f, "ell", DEFAULT_POLICY, strategy="tiled")
+        >>> bauto < b32   # int8 local indices beat int32 global ones
+        True
+    """
+    return storage_bytes(f, fmt, policy, strategy) / max(1, f.nnz)
+
+
 def infeasible(f: MatrixFeatures, fmt: str,
                dia_max_diags: int = DIA_MAX_DIAGS,
                ell_max_width_factor: float = ELL_MAX_WIDTH_FACTOR,
@@ -175,6 +251,11 @@ def infeasible(f: MatrixFeatures, fmt: str,
         if f.rownnz_max > ell_max_width_factor * mean_w + 8:
             return f"max_row={f.rownnz_max} >> mean={mean_w:.1f}"
     return None
+
+
+#: the uncompressed pricing baseline of the analytic bandwidth scaling —
+#: int32 indices, f32 values, whatever tile geometry the default budget gives
+_UNCOMPRESSED = ExecutionPolicy(index_dtype="int32", value_dtype="float32")
 
 
 def _platform() -> str:
@@ -203,13 +284,22 @@ def pallas_strategy_for(f: MatrixFeatures, policy: ExecutionPolicy,
 def estimate_us(f: MatrixFeatures, key: DispatchKey,
                 policy: Optional[ExecutionPolicy] = None,
                 platform: Optional[str] = None) -> float:
-    """The model's time estimate for running SpMV as ``key`` on ``f``."""
+    """The model's time estimate for running SpMV as ``key`` on ``f``.
+
+    On the analytic (bandwidth) tables the volume terms are scaled by the
+    variant's bytes-per-entry ratio against the uncompressed int32+f32
+    baseline — compressed indices / narrow values move fewer bytes, and a
+    bandwidth-bound estimate should say so. The calibrated ``"cpu"`` table
+    describes *interpreted* Pallas, whose run time does not track storage
+    width, so it stays unscaled.
+    """
     policy = policy if policy is not None else DEFAULT_POLICY
     platform = platform or _platform()
     # unknown platforms (gpu, new accelerators) compile Pallas natively, so
     # they take the analytic bandwidth table — the "cpu" table's coefficients
     # describe *interpreted* Pallas and would wrongly condemn every native
     # Pallas cell
+    analytic = platform not in COST or platform == "tpu"
     table = COST[platform] if platform in COST else COST["tpu"]
     strategy = (pallas_strategy_for(f, policy, key.format)
                 if key.backend == "pallas" else "")
@@ -218,10 +308,14 @@ def estimate_us(f: MatrixFeatures, key: DispatchKey,
         return float("inf")
     krows = f.nrows / 1e3
     kentries = storage_entries(f, key.format) / 1e3
+    ratio = 1.0
+    if analytic:
+        base = storage_bytes(f, key.format, _UNCOMPRESSED, strategy)
+        ratio = storage_bytes(f, key.format, policy, strategy) / max(base, 1.0)
 
     def _affine(c4):
         a, b, c, d = c4
-        return a + b * krows + c * kentries + d * krows * kentries
+        return a + (b * krows + (c * kentries + d * krows * kentries) * ratio)
 
     est = _affine(coef)
     if strategy == "tiled":
@@ -274,11 +368,17 @@ def rank(a, policy: Optional[ExecutionPolicy] = None,
         why = infeasible(f, key.format, dia_max_diags, ell_max_width_factor)
         if why is not None:
             continue
-        est = estimate_us(f, key, policy, platform)
         strategy = (pallas_strategy_for(f, policy, key.format)
                     if key.backend == "pallas" else "")
+        if key.backend == "pallas" and key.format not in ("dia", "bsr", "dense"):
+            try:  # a pinned index dtype the tile width cannot hold: the
+                plan_index_dtype(f.ncols, policy)  # build would raise, so
+            except ValueError:                     # never propose the cell
+                continue
+        est = estimate_us(f, key, policy, platform)
         reason = (f"{storage_entries(f, key.format):.0f} stored entries"
-                  + (f", {strategy}" if strategy else ""))
+                  + (f", {strategy}" if strategy else "")
+                  + f", {bytes_per_nnz(f, key.format, policy, strategy):.1f} B/nnz")
         out.append(Prediction(key, est, reason))
     out.sort(key=lambda p: (p.est_us, p.key.format, p.key.backend))
     return out

@@ -370,7 +370,10 @@ def dia_spmv_plain(A: DIA, x):
         xk = x[jnp.clip(k, 0, ncols - 1)]
         return y + jnp.where(valid, A.data[d] * xk, 0)
 
-    return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), A.dtype))
+    # carry in the promoted product dtype, not the storage dtype: narrow
+    # (bf16/f16) containers against f32 x accumulate in f32
+    acc = jnp.promote_types(A.dtype, x.dtype)
+    return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), acc))
 
 
 @register_spmv("ell", "plain")
@@ -449,7 +452,10 @@ def dia_masked_spmv_plain(A: DIA, x, row_mask):
         xk = x[jnp.clip(k, 0, ncols - 1)]
         return y + jnp.where(valid, A.data[d] * xk, 0)
 
-    return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), A.dtype))
+    # carry in the promoted product dtype, not the storage dtype: narrow
+    # (bf16/f16) containers against f32 x accumulate in f32
+    acc = jnp.promote_types(A.dtype, x.dtype)
+    return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), acc))
 
 
 # ------------------------------------------------------- dense fallback ----

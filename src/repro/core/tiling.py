@@ -42,6 +42,41 @@ DEFAULT_VMEM_BUDGET_BYTES = 16 << 20  # one TPU core's VMEM
 MIN_COL_TILE = 8
 MAX_COL_TILE = 1 << 14
 
+#: Index dtypes a plan's tile-local column arrays may use, narrowest first.
+#: All signed: -1 is the universal pad sentinel, so an index dtype is feasible
+#: for a tile of ``ct`` columns iff it can hold ``ct - 1`` (int8 -> ct <= 128,
+#: int16 -> ct <= 32768; anything wider stays int32).
+INDEX_DTYPES = ("int8", "int16", "int32")
+
+
+def index_dtype_fits(index_dtype, col_tile: int) -> bool:
+    """True when ``index_dtype`` can hold every tile-local column of a
+    ``col_tile``-wide tile (ids in ``[0, col_tile)``) plus the -1 pad."""
+    if str(index_dtype) == "auto":
+        return True
+    dt = np.dtype(index_dtype)
+    return dt.kind == "i" and int(np.iinfo(dt).max) >= col_tile - 1
+
+
+def local_index_dtype(col_tile: int, index_dtype="auto") -> np.dtype:
+    """Resolve the plan-local column-index dtype for a ``col_tile``-wide tile.
+
+    ``"auto"`` picks the narrowest signed dtype that holds ``col_tile - 1``
+    (the widest tile-local id); an explicit dtype is validated against the
+    tile width so a policy can never silently truncate indices.
+    """
+    if str(index_dtype) != "auto":
+        dt = np.dtype(index_dtype)
+        if not index_dtype_fits(dt, col_tile):
+            raise ValueError(
+                f"index dtype {dt} cannot hold tile-local columns of a "
+                f"{col_tile}-wide tile")
+        return dt
+    for name in INDEX_DTYPES:
+        if int(np.iinfo(np.dtype(name)).max) >= col_tile - 1:
+            return np.dtype(name)
+    return np.dtype(np.int32)
+
 
 def resident_cols(max_resident_cols: int = DEFAULT_MAX_RESIDENT_COLS,
                   vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET_BYTES) -> int:
@@ -92,24 +127,27 @@ def _cumcount_sorted(group: np.ndarray) -> np.ndarray:
 # ------------------------------------------------------------ ELL splitter ----
 
 
-def build_ell_col_plan(s, col_tile: int, dtype=np.float32) -> KernelPlan:
+def build_ell_col_plan(s, col_tile: int, dtype=np.float32,
+                       index_dtype="auto") -> KernelPlan:
     """Split a (sorted) scipy CSR matrix into per-column-tile ELL blocks.
 
-    Arrays: ``idx_t (ntiles, nrows, W)`` int32 tile-local columns (-1 pad)
+    Arrays: ``idx_t (ntiles, nrows, W)`` tile-local columns (-1 pad) in the
+    narrowest dtype the tile width allows (see :func:`local_index_dtype`)
     and ``dat_t`` alike; ``W`` is the max per-(row, tile) entry count. Each
     grid step of the tiled ELL kernel owns one dense (row-block, tile) pair.
     """
     nrows, ncols = s.shape
     ntiles = max(1, _cdiv(ncols, col_tile))
+    idt = local_index_dtype(col_tile, index_dtype)
     counts = np.diff(s.indptr)
     r = np.repeat(np.arange(nrows, dtype=np.int64), counts)
     c = s.indices.astype(np.int64)
     t = c // col_tile
     j = _cumcount_sorted(r * ntiles + t)  # CSR order: sorted by (row, col)
     width = int(j.max()) + 1 if len(j) else 1  # max group size, O(nnz)
-    idx_t = np.full((ntiles, nrows, width), -1, np.int32)
+    idx_t = np.full((ntiles, nrows, width), -1, idt)
     dat_t = np.zeros((ntiles, nrows, width), dtype)
-    idx_t[t, r, j] = (c - t * col_tile).astype(np.int32)
+    idx_t[t, r, j] = (c - t * col_tile).astype(idt)
     dat_t[t, r, j] = s.data
     return KernelPlan("ell-cols", (idx_t, dat_t), (col_tile, ntiles, width))
 
@@ -133,6 +171,10 @@ def build_dia_col_plan(offsets: np.ndarray, data: np.ndarray,
     ct)``. Row ``i`` of diagonal ``(t, d)`` lives at window position
     ``i + off - t*ct`` — the same coordinate the haloed x tile uses, so the
     kernel reads both with one clamped dynamic slice.
+
+    DIA carries no per-entry column indices (offsets are scalar-prefetched
+    into SMEM and must stay int32), so index compression does not apply —
+    DIA participates in the precision lane through its value dtype only.
     """
     nrows, ncols = shape
     ntiles = max(1, _cdiv(ncols, col_tile))
@@ -162,7 +204,8 @@ def build_dia_col_plan(offsets: np.ndarray, data: np.ndarray,
 
 def build_coo_col_plan(row: np.ndarray, col: np.ndarray, val: np.ndarray,
                        shape: Tuple[int, int], col_tile: int,
-                       slice_rows: int = 512, tile: int = 512) -> KernelPlan:
+                       slice_rows: int = 512, tile: int = 512,
+                       index_dtype="auto") -> KernelPlan:
     """Sliced-COO layout bucketed by (row slice, column tile).
 
     The stream is row-slice-major, column-tile-minor: all of a slice's tiles
@@ -172,12 +215,14 @@ def build_coo_col_plan(row: np.ndarray, col: np.ndarray, val: np.ndarray,
     always written. Pad entries carry ``row = slice_start, col = 0, val = 0``
     — the contribution lands on the window's first row and is exactly zero.
 
-    Arrays: ``row (B*T,)`` global rows, ``col (B*T,)`` tile-local columns,
-    ``val (B*T,)``, ``sid (B,)`` per-block slice id, ``ctile (B,)`` per-block
-    column tile.
+    Arrays: ``row (B*T,)`` global rows (always int32 — they span the whole
+    matrix), ``col (B*T,)`` tile-local columns in the narrowest dtype the
+    tile width allows, ``val (B*T,)``, ``sid (B,)`` per-block slice id,
+    ``ctile (B,)`` per-block column tile.
     """
     nrows, ncols = shape
     ntiles = max(1, _cdiv(ncols, col_tile))
+    idt = local_index_dtype(col_tile, index_dtype)
     nsl = max(1, _cdiv(nrows, slice_rows))
     row = np.asarray(row, np.int64)
     keep = row < nrows  # drop (row=nrows,...) pad sentinels
@@ -207,7 +252,7 @@ def build_coo_col_plan(row: np.ndarray, col: np.ndarray, val: np.ndarray,
     ctile = np.repeat(np.tile(np.arange(ntiles), nsl), blocks).astype(np.int32)
     return KernelPlan(
         "coo-cols",
-        (row_arr.astype(np.int32), col_arr.astype(np.int32), val_arr, sid, ctile),
+        (row_arr.astype(np.int32), col_arr.astype(idt), val_arr, sid, ctile),
         (col_tile, ntiles, slice_rows, tile))
 
 
@@ -216,7 +261,8 @@ def build_coo_col_plan(row: np.ndarray, col: np.ndarray, val: np.ndarray,
 
 def build_scs_plan(s, col_tile: Optional[int] = None, C: int = 8,
                    sigma: int = 64, slice_window: int = 4,
-                   jstep_block: int = 32, dtype=np.float32) -> KernelPlan:
+                   jstep_block: int = 32, dtype=np.float32,
+                   index_dtype="auto") -> KernelPlan:
     """SELL-C-σ stream for the native Pallas CSR/SELL kernel.
 
     Rows are permuted by descending nnz inside σ-windows (Kreutzer et al.'s
@@ -231,12 +277,14 @@ def build_scs_plan(s, col_tile: Optional[int] = None, C: int = 8,
 
     Arrays: ``btile (B,)``, ``bwin (B,)`` int32 per-block; ``lsl (B*JB,)``
     int32 window-local slice of each j-step; ``idx2/dat2 (B*JB, C)``
-    tile-local columns (-1 pad) / values; ``perm (nrows_pad,)`` the σ-sorted
-    row permutation that un-permutes y.
+    tile-local columns (-1 pad, narrowest dtype the tile width allows) /
+    values; ``perm (nrows_pad,)`` the σ-sorted row permutation that
+    un-permutes y.
     """
     nrows, ncols = s.shape
     ct = int(col_tile) if col_tile else max(1, ncols)
     ntiles = max(1, _cdiv(max(1, ncols), ct))
+    idt = local_index_dtype(ct, index_dtype)
     sw, jb = slice_window, jstep_block
     counts = np.diff(s.indptr)
     nrows_pad = _cdiv(max(nrows, 1), C) * C
@@ -275,10 +323,10 @@ def build_scs_plan(s, col_tile: Optional[int] = None, C: int = 8,
     off_sl_t = (group_off[:, None, :] + pre).reshape(nslices_pad, ntiles)
 
     total_j = int(nj_pad.sum())
-    idx2 = np.full((total_j, C), -1, np.int32)
+    idx2 = np.full((total_j, C), -1, idt)
     dat2 = np.zeros((total_j, C), dtype)
     jrow = off_sl_t[sl, t] + j
-    idx2[jrow, lane] = (c - t * ct).astype(np.int32)
+    idx2[jrow, lane] = (c - t * ct).astype(idt)
     dat2[jrow, lane] = s.data
 
     lsl = np.zeros(total_j, np.int32)

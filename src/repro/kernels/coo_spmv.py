@@ -171,7 +171,9 @@ def scoo_spmv(row, col, val, slice_ids, x, nrows: int, slice_rows: int = 512,
 def _kernel_tiled(slice_ids_ref, ctile_ref, x_ref, row_ref, col_ref, val_ref,
                   y_ref, *, tile: int, rw: int):
     rows = row_ref[...]
-    cols = col_ref[...]           # tile-local column ids
+    # tile-local column ids, possibly int16/int8-compressed (the tile width
+    # bounds their range); widen for the gather
+    cols = col_ref[...].astype(jnp.int32)
     vals = val_ref[...].astype(jnp.float32)
     t = pl.program_id(0)
     w0 = slice_ids_ref[t] * rw

@@ -105,7 +105,8 @@ def ell_spmv_tiled(idx_t: jnp.ndarray, dat_t: jnp.ndarray, x: jnp.ndarray,
     nrows_pad = -(-nrows // br) * br
     grid = nrows_pad // br
 
-    idx_pad = jnp.full((ntiles, nrows_pad, width), -1, jnp.int32).at[:, :nrows].set(idx_t)
+    # pad keeps the plan's (possibly int16/int8-compressed) index dtype
+    idx_pad = jnp.full((ntiles, nrows_pad, width), -1, idx_t.dtype).at[:, :nrows].set(idx_t)
     dat_pad = jnp.zeros((ntiles, nrows_pad, width), dat_t.dtype).at[:, :nrows].set(dat_t)
     x_pad = jnp.zeros((ntiles * col_tile,), x.dtype).at[: x.shape[0]].set(x)
 

@@ -40,6 +40,21 @@ from .sell_spmv import scs_spmv_from_plan
 # --------------------------------------------------- capability predicates ----
 
 
+#: Value dtypes the Pallas kernels handle: each one upcasts products to f32
+#: before reducing (the storage/accumulation split of the precision lane);
+#: f64 never lowers on TPU and is left to the plain/dense backends.
+_PALLAS_VALUE_DTYPES = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _precision_ok(A, policy) -> bool:
+    """The policy's precision knobs are executable on the Pallas backend:
+    f32 accumulation (the only mode the kernels implement) over a storage
+    dtype they can upcast from. Static metadata only — trace-safe."""
+    accum = getattr(policy, "accum_dtype", "float32")
+    return (accum == "float32"
+            and jnp.dtype(A.dtype) in (jnp.dtype(d) for d in _PALLAS_VALUE_DTYPES))
+
+
 def _plan_ok(A, policy, kind: str) -> bool:
     """A column-tile plan of ``kind`` whose tile fits the policy's budget.
     Static metadata only — safe under jit tracing."""
@@ -71,7 +86,8 @@ def _dia_resident(A: DIA, policy) -> bool:
 
 
 def _dia_ok(A: DIA, policy) -> bool:
-    return _dia_resident(A, policy) or _plan_ok(A, policy, "dia-cols")
+    return _precision_ok(A, policy) and (
+        _dia_resident(A, policy) or _plan_ok(A, policy, "dia-cols"))
 
 
 def _ell_resident(A: ELL, policy) -> bool:
@@ -79,7 +95,8 @@ def _ell_resident(A: ELL, policy) -> bool:
 
 
 def _ell_ok(A: ELL, policy) -> bool:
-    return _ell_resident(A, policy) or _plan_ok(A, policy, "ell-cols")
+    return _precision_ok(A, policy) and (
+        _ell_resident(A, policy) or _plan_ok(A, policy, "ell-cols"))
 
 
 def _coo_resident(A: COO, policy) -> bool:
@@ -89,14 +106,15 @@ def _coo_resident(A: COO, policy) -> bool:
 
 
 def _coo_ok(A: COO, policy) -> bool:
-    return _coo_resident(A, policy) or _plan_ok(A, policy, "coo-cols")
+    return _precision_ok(A, policy) and (
+        _coo_resident(A, policy) or _plan_ok(A, policy, "coo-cols"))
 
 
 def _scs_ok(A, policy) -> bool:
     # sell/csr run the native SELL-C-σ stream cached at convert time; the
     # static plan check replaces the old concrete-arrays-only restriction,
     # so the kernel now runs under jit
-    return _plan_ok(A, policy, "scs")
+    return _precision_ok(A, policy) and _plan_ok(A, policy, "scs")
 
 
 def pallas_strategy(A, policy) -> str | None:
@@ -105,6 +123,8 @@ def pallas_strategy(A, policy) -> str | None:
     falls down the chain). The introspection twin of the wrappers below;
     ``benchmarks/spmv_bench.py`` records it per entry."""
     fmt = A.format
+    if not _precision_ok(A, policy):
+        return None
     if fmt == "dia":
         if _dia_resident(A, policy):
             return "resident"
@@ -199,7 +219,7 @@ def ell_masked_spmv_pallas(A: ELL, x, row_mask, policy):
                           x, col_tile=A.plan.ct)
 
 
-@register_spmm("bsr", "pallas")
+@register_spmm("bsr", "pallas", supports=_precision_ok)
 def bsr_spmm_pallas(A: BSR, X):
     nbcols = -(-A.shape[1] // A.bs)
     Xp = jnp.zeros((nbcols * A.bs, X.shape[1]), X.dtype).at[: X.shape[0]].set(X)
@@ -207,6 +227,6 @@ def bsr_spmm_pallas(A: BSR, X):
     return Y[: A.shape[0]].astype(X.dtype)
 
 
-@register_spmv("bsr", "pallas")
+@register_spmv("bsr", "pallas", supports=_precision_ok)
 def bsr_spmv_pallas(A: BSR, x):
     return bsr_spmm_pallas(A, x[:, None])[:, 0]

@@ -142,3 +142,67 @@ def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
     if cfg.is_encdec:
         total += cfg.n_layers * 2 * B * cfg.frontend_tokens * cfg.n_kv_heads * cfg.hd * 2.0
     return total
+
+
+# ---------------------------------------------------------------- SpMV ----
+#
+# The SpMV lane of the same idea: SpMV performs 2 FLOPs per nonzero against
+# a stream of (value + index) bytes, so it lives on the bandwidth roof at
+# every practical density and its speed is set by bytes-per-nnz — the lever
+# the compression/precision policies (core.select.storage_bytes) pull.
+# benchmarks/spmv_bench.py --precision validates these predictions against
+# measured GFLOP/s per variant.
+
+#: streaming-bandwidth assumptions per platform (bytes/s). The tpu number
+#: matches core.select's analytic cost table (~900 GB/s HBM per core); cpu
+#: is a typical server-DRAM figure — on this repo's CPU runners Pallas
+#: interprets, so cpu predictions bound the *native* kernels, not the
+#: interpreter.
+SPMV_BANDWIDTH = {"tpu": 900e9, "gpu": 1500e9, "cpu": 20e9}
+
+#: fixed per-dispatch overhead (s): kernel launch + grid setup.
+SPMV_LATENCY_S = {"tpu": 8e-6, "gpu": 10e-6, "cpu": 5e-6}
+
+
+@dataclass
+class SpmvRoofline:
+    """Bandwidth-model prediction for one SpMV (format, precision) variant."""
+
+    streamed_bytes: float   # matrix storage + x/y traffic
+    time_s: float
+    gflops: float
+    bytes_per_nnz: float
+
+
+def spmv_roofline(nnz: int, matrix_bytes: float, nrows: int, ncols: int,
+                  platform: str = "tpu",
+                  bandwidth: float | None = None,
+                  x_bytes_per_col: float = 4.0) -> SpmvRoofline:
+    """Predict SpMV time/GFLOP/s from streamed bytes on the bandwidth roof.
+
+    ``matrix_bytes`` is the variant's storage volume (e.g.
+    ``SparseOperator.nbytes`` or ``core.select.storage_bytes``); x is read
+    once and y written once (f32), which is exact for the streaming kernels
+    and a lower bound for gather-heavy ones.
+    """
+    bw = bandwidth if bandwidth is not None else SPMV_BANDWIDTH.get(
+        platform, SPMV_BANDWIDTH["tpu"])
+    lat = SPMV_LATENCY_S.get(platform, SPMV_LATENCY_S["tpu"])
+    streamed = float(matrix_bytes) + x_bytes_per_col * (nrows + ncols)
+    t = lat + streamed / bw
+    flops = 2.0 * max(1, nnz)
+    return SpmvRoofline(streamed, t, flops / t / 1e9,
+                        float(matrix_bytes) / max(1, nnz))
+
+
+def spmv_predicted_speedup(base_bytes: float, variant_bytes: float,
+                           nnz: int, nrows: int, ncols: int,
+                           platform: str = "tpu",
+                           bandwidth: float | None = None) -> float:
+    """Predicted throughput ratio variant/baseline from their storage
+    volumes alone — the bandwidth saving a compressed/narrow variant buys.
+    >1 means the variant should be faster; latency and x/y traffic damp the
+    ratio below the raw byte ratio."""
+    a = spmv_roofline(nnz, base_bytes, nrows, ncols, platform, bandwidth)
+    b = spmv_roofline(nnz, variant_bytes, nrows, ncols, platform, bandwidth)
+    return a.time_s / b.time_s

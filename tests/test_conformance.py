@@ -105,3 +105,112 @@ def test_masked_spmv_entries_are_a_subset():
     masked = set(dispatch_table("masked_spmv"))
     unmasked = set(dispatch_table("spmv"))
     assert masked <= unmasked, masked - unmasked
+
+
+# --------------------------------------------------------------------------
+# Precision-aware grid: the same cells again under compressed-index and
+# narrow-value storage policies. Index compression must be *bit-identical*
+# to the int32 baseline (the kernels widen tile-local indices back to int32
+# before the gather, so the arithmetic is unchanged); narrow value storage
+# must match the oracle within a tolerance scaled by the storage dtype's
+# eps x the worst row's nnz (one rounding per stored entry, f32 accumulate).
+# --------------------------------------------------------------------------
+
+#: index policies of the grid: int8 is feasible here because the forced
+#: column tile (<= _PCAP) is far below int8's 127-column ceiling
+INDEX_POLICIES = ("int16", "int8")
+VALUE_POLICIES = ("bfloat16", "float16")
+
+_PN = 64
+_PCAP = 32  # resident cap << _PN: every plan-carrying format runs tiled
+_PS = (M.banded(_PN, 3, seed=5) + M.random_uniform(_PN, 0.05, seed=6)).tocsr()
+_PX = np.random.default_rng(7).standard_normal(_PN).astype(np.float32)
+_PXM = np.random.default_rng(8).standard_normal((_PN, 4)).astype(np.float32)
+_PMASK = np.random.default_rng(9).random(_PN) < 0.5
+_ROWNNZ_MAX = int(np.diff(_PS.indptr).max())
+_PCONTAINERS = {}  # (fmt, index_dtype, value_dtype) -> container
+
+
+def _pcontainer(fmt, index_dtype="int32", value_dtype="float32"):
+    key = (fmt, index_dtype, value_dtype)
+    if key not in _PCONTAINERS:
+        pol = ExecutionPolicy(max_resident_cols=_PCAP,
+                              index_dtype=index_dtype, value_dtype=value_dtype)
+        kw = dict(pol.storage_kw(fmt))
+        if fmt in ("coo", "csr", "dia", "ell", "sell"):
+            kw["col_tile"] = pol.col_tile(_PN)
+        _PCONTAINERS[key] = from_dense(_PS, fmt, **kw)
+    return _PCONTAINERS[key]
+
+
+def _papply(op, A, backend, index_dtype="auto", value_dtype="float32"):
+    policy = ExecutionPolicy(backends=(backend,), allow_fallback=False,
+                             max_resident_cols=_PCAP,
+                             index_dtype=index_dtype, value_dtype=value_dtype)
+    if op == "spmv":
+        return np.asarray(spmv(A, jnp.asarray(_PX), policy=policy), np.float32)
+    if op == "spmm":
+        return np.asarray(spmm(A, jnp.asarray(_PXM), policy=policy), np.float32)
+    return np.asarray(masked_spmv(A, jnp.asarray(_PX), jnp.asarray(_PMASK),
+                                  policy=policy), np.float32)
+
+
+def _precision_cells(variants):
+    for op in OPS:
+        for fmt in FORMATS:
+            for backend in BACKENDS:
+                for var in variants:
+                    marks = ()
+                    if (fmt, backend) in KNOWN_GAPS:
+                        marks = (pytest.mark.xfail(
+                            reason=KNOWN_GAPS[(fmt, backend)], strict=True),)
+                    yield pytest.param(op, fmt, backend, var,
+                                       id=f"{op}-{fmt}-{backend}-{var}",
+                                       marks=marks)
+
+
+@pytest.mark.parametrize("op,fmt,backend,idx",
+                         list(_precision_cells(INDEX_POLICIES)))
+def test_compressed_index_cell_bit_identical(op, fmt, backend, idx):
+    """A container built under a pinned narrow index policy must produce the
+    *bit-identical* result of the int32 build: compression changes the bytes
+    the kernel streams, never the arithmetic. Formats without an index
+    stream (dia/bsr/dense) build identical containers and pass trivially —
+    keeping them in the grid is what makes the coverage assertion total."""
+    base = _papply(op, _pcontainer(fmt, "int32"), backend, index_dtype="int32")
+    got = _papply(op, _pcontainer(fmt, idx), backend, index_dtype=idx)
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("op,fmt,backend,vdt",
+                         list(_precision_cells(VALUE_POLICIES)))
+def test_narrow_value_cell_within_scaled_tolerance(op, fmt, backend, vdt):
+    """Narrow-value storage must match the f32 view of its own (quantized)
+    container within ``8 * eps(storage dtype) * max-row-nnz``: one rounding
+    of eps per stored entry across a row's accumulation, with headroom for
+    backends that accumulate in the storage dtype (plain on bf16)."""
+    A = _pcontainer(fmt, "int32", vdt)
+    assert jnp.dtype(A.dtype) == jnp.dtype(vdt)
+    dense = np.asarray(A.to_dense(), np.float32)  # quantization-free oracle
+    got = _papply(op, A, backend, index_dtype="int32", value_dtype=vdt)
+    tol = 8 * float(jnp.finfo(jnp.dtype(vdt)).eps) * _ROWNNZ_MAX
+    if op == "spmv":
+        ref = dense @ _PX
+    elif op == "spmm":
+        ref = dense @ _PXM
+    else:
+        ref = np.where(_PMASK, dense @ _PX, 0)
+    np.testing.assert_allclose(got, ref, rtol=tol, atol=tol)
+
+
+def test_precision_grid_covers_every_registered_spmv_entry():
+    """The precision grids enumerate exactly the registered dispatch cells:
+    no kernel escapes the compressed-index or narrow-value oracle."""
+    registered = {(k.format, k.backend) for k in dispatch_table("spmv")}
+    for variants in (INDEX_POLICIES, VALUE_POLICIES):
+        cells = {(f, b) for (_, f, b, _) in
+                 (p.values for p in _precision_cells(variants))
+                 if (f, b) not in KNOWN_GAPS}
+        assert cells == registered, (
+            f"precision grid drift: only-in-grid={cells - registered}, "
+            f"only-in-table={registered - cells}")

@@ -103,6 +103,27 @@ def test_bsr_spmm_sweep(bs, nf):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("bs", [16, 32])
+def test_bsr_spmm_matches_dense_oracle(dtype, bs):
+    """bsr_spmm against the container's own dense view (not the jnp ref
+    kernel): the MXU path must agree with plain A @ X for every storage
+    dtype of the precision lane — blocks upcast to f32 inside the kernel,
+    so narrow storage costs only the one quantisation at convert time."""
+    n = 96
+    s = M.block_random(n, bs=bs, block_density=0.2, seed=11)
+    A = from_dense(s, "bsr", bs=bs, dtype=dtype)
+    X = jnp.asarray(np.random.default_rng(12).standard_normal((n, 7)),
+                    jnp.float32)
+    Xp = jnp.zeros((A.bcols.shape[0] * bs, 7), jnp.float32).at[:n].set(X)
+    got = np.asarray(bsr_spmm(A.bcols, A.blocks, Xp))[:n]
+    dense = np.asarray(A.to_dense(), np.float32)  # quantised oracle
+    want = dense @ np.asarray(X)
+    # the oracle reads the same quantised storage and the kernel upcasts to
+    # f32 before the dot, so the tolerance is f32-level for every dtype
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
 def test_kernels_jit_cacheable():
     """Same shapes => no retrace (the ArmPL-handle analogy: compile once)."""
     s = _mat(128, 128, 10, "banded")

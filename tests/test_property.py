@@ -299,6 +299,100 @@ def test_dia_banded_exact(band_lo, band_hi, seed):
     np.testing.assert_allclose(np.asarray(A.to_dense()), s.toarray(), rtol=1e-6)
 
 
+# --------------------------------------- compressed indices / precision ----
+
+
+INDEXED_FORMATS = ["coo", "csr", "ell", "sell"]  # formats with an index stream
+_PLAN_IDX_POS = {"ell-cols": 0, "coo-cols": 1, "scs": 3}
+
+
+def _plan_arrays(A):
+    """(local-index array, the other plan arrays) of a plan container."""
+    pos = _PLAN_IDX_POS[A.plan.kind]
+    arrs = [np.asarray(a) for a in A.plan.arrays]
+    return arrs[pos], [a for i, a in enumerate(arrs) if i != pos]
+
+
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrices(max_n=40), st.sampled_from(INDEXED_FORMATS),
+       st.sampled_from([4, 8, 16]))
+def test_compressed_plan_roundtrip_bit_identical(s, fmt, ct):
+    """A plan built under the auto (compressed) index policy is the int32
+    plan with its local indices merely narrowed: widening them back is
+    bit-for-bit the int32 plan, and every other plan array is untouched."""
+    A32 = from_dense(s, fmt, col_tile=ct, index_dtype="int32")
+    An = from_dense(s, fmt, col_tile=ct, index_dtype="auto")
+    idx32, rest32 = _plan_arrays(A32)
+    idxn, restn = _plan_arrays(An)
+    assert idx32.dtype == np.int32
+    assert idxn.dtype == np.int8  # ct <= 16 always fits int8
+    np.testing.assert_array_equal(idxn.astype(np.int32), idx32)
+    for a, b in zip(restn, rest32):
+        np.testing.assert_array_equal(a, b)
+    assert A32.plan.meta == An.plan.meta
+
+
+@settings(max_examples=15, deadline=None)
+@given(sparse_matrices(max_n=40), st.sampled_from(FORMATS))
+def test_nbytes_strictly_decreases_under_narrower_dtypes(s, fmt):
+    """Narrower storage really shrinks the container: halving the value
+    dtype strictly reduces device bytes for every format, and compressing
+    the index stream strictly reduces them for every plan-carrying format."""
+    import jax
+
+    def nbytes(**kw):
+        A = from_dense(s, fmt, **kw)
+        return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree_util.tree_leaves(A))
+
+    tile = {"col_tile": 8} if fmt in ("coo", "csr", "dia", "ell", "sell") else {}
+    assert nbytes(dtype=jnp.bfloat16, **tile) < nbytes(dtype=jnp.float32, **tile)
+    if fmt in INDEXED_FORMATS:
+        assert (nbytes(index_dtype="auto", **tile)
+                < nbytes(index_dtype="int32", **tile))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 1_000_000),
+       st.sampled_from(["auto", "int8", "int16", "int32"]))
+def test_index_dtype_feasibility_never_overflows(ct, req):
+    """local_index_dtype never hands out a dtype that cannot hold the
+    tile's largest local column (ct - 1): infeasible pins raise, auto picks
+    the narrowest feasible signed dtype."""
+    from repro.core import tiling
+
+    if not tiling.index_dtype_fits(req, ct):
+        with pytest.raises(ValueError):
+            tiling.local_index_dtype(ct, req)
+    else:
+        dt = tiling.local_index_dtype(ct, req)
+        assert dt.kind == "i" and np.iinfo(dt).max >= ct - 1
+    auto = tiling.local_index_dtype(ct, "auto")
+    assert np.iinfo(auto).max >= ct - 1
+    for name in tiling.INDEX_DTYPES:  # narrowest: anything below won't fit
+        if np.iinfo(np.dtype(name)).max < np.iinfo(auto).max:
+            assert np.iinfo(np.dtype(name)).max < ct - 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 500_000), st.sampled_from(["auto", "int16", "int32"]))
+def test_selector_proposes_only_feasible_index_dtypes(ncols, idx):
+    """The cost model's plan_index_dtype answers with a dtype that holds
+    every tile-local column of the policy's tile choice for ``ncols``."""
+    from repro.core.operator import ExecutionPolicy
+    from repro.core.select import plan_index_dtype
+
+    pol = ExecutionPolicy(index_dtype=idx)
+    ct = pol.col_tile(ncols) or max(1, ncols)
+    try:
+        dt = plan_index_dtype(ncols, pol)
+    except ValueError:
+        from repro.core import tiling
+        assert not tiling.index_dtype_fits(idx, ct)
+        return
+    assert np.iinfo(dt).max >= ct - 1
+
+
 # -------------------------------------------------------- dynamic overlay ----
 
 

@@ -1,0 +1,258 @@
+"""Chaos trajectory: seeded traffic replayed under a fault plan ->
+BENCH_chaos.json.
+
+The resilience counterpart of ``serve_bench.py`` (docs/resilience.md,
+"Chaos-bench methodology"). Per mix, the same seeded request stream runs
+three times through identically-configured engines:
+
+  - **clean**   — no fault plan armed: the availability/latency baseline.
+  - **chaos**   — a recoverable smoke :class:`~repro.resilience.faults.
+    FaultPlan` armed: a burst of kernel failures on the preferred backend
+    (drives quarantine -> degraded serving -> probe -> recovery), one
+    non-finite corruption (caught by ``check_finite``), one admission build
+    failure (absorbed by retry), one planner failure (degraded FIFO
+    planning). Every fault is recoverable by design, so the gate demands
+    **100% request success** — resilience means degraded, never down.
+  - **parity**  — the clean stream twice through the *production* engine
+    (no plan, ``check_finite`` off, jitted lanes): kernel-dispatch counts
+    and results must match bit-for-bit, proving the fault hooks are no-ops
+    when inactive.
+
+The recorded figures of merit: success rate (must be 1.0), degraded share,
+p99 inflation (chaos p99 / clean p99 — both eager, so the ratio isolates
+fault handling), and breaker recovery time. ``check`` is the CI
+``chaos-smoke`` gate.
+"""
+from __future__ import annotations
+
+import platform
+from typing import Dict, List, Tuple
+
+import importlib
+import time
+
+import jax
+import numpy as np
+
+# the package re-exports a `spmv` *function*, which shadows the submodule
+# on attribute-style imports — resolve the module explicitly
+spmv_mod = importlib.import_module("repro.core.spmv")
+from repro.core.health import HealthRegistry
+from repro.core.operator import ExecutionPolicy
+from repro.serve import ServeEngine, ServeError, TrafficGenerator, TrafficSpec
+from repro.resilience import FaultPlan, FaultSpec
+
+#: scale -> traffic/engine knobs (mirrors serve_bench.SCALES; smaller,
+#: because every chaos run is eager by construction).
+SCALES: Dict[str, Dict] = {
+    "smoke": dict(n=64, requests=32, flush_every=8, max_batch=8,
+                  capacity=4, n_matrices=4, mixes=("hot",)),
+    "quick": dict(n=128, requests=64, flush_every=16, max_batch=8,
+                  capacity=4, n_matrices=6, mixes=("hot", "churn")),
+    "bench": dict(n=256, requests=128, flush_every=16, max_batch=16,
+                  capacity=6, n_matrices=8, mixes=("hot", "churn", "mixed")),
+}
+
+#: Breaker cooldown for the bench engines: longer than a steady-state flush,
+#: so quarantined flushes actually serve the degraded lane (a too-short
+#: cooldown makes every flush a probe and the degraded share vacuously 0);
+#: the recovery tail in ``_drive`` waits it out so every run ends recovered.
+COOLDOWN_S = 0.15
+
+
+def smoke_plan(seed: int = 0) -> FaultPlan:
+    """The recoverable fault mix the chaos gate replays: every injected
+    failure has a degraded lane or a retry that absorbs it."""
+    return FaultPlan([
+        # burst of pallas kernel failures: 2 trip the breaker, the 3rd hits
+        # the post-cooldown probe (re-quarantine), then recovery
+        FaultSpec(site="kernel", key="pallas", times=3),
+        # one corrupted output — check_finite turns it into a chain step
+        FaultSpec(site="nonfinite", key="pallas", start=0, times=1),
+        # one admission build failure — absorbed by the retry budget
+        FaultSpec(site="admission", times=1),
+        # one planner failure — degraded FIFO planning, still served
+        FaultSpec(site="plan", times=1),
+    ], seed=seed)
+
+
+def _engine(cfg: Dict, *, check_finite: bool) -> ServeEngine:
+    """One bench engine: fixed csr x (pallas->plain) lane — no tuning, so
+    the fault targets and the degraded lane are the same in every run."""
+    return ServeEngine(
+        capacity=cfg["capacity"], max_batch=cfg["max_batch"],
+        policy=ExecutionPolicy.for_impl("pallas"), fmt="csr", tune_mode=None,
+        check_finite=check_finite, max_retries=1, admission_retries=2,
+        health=HealthRegistry(cooldown_s=COOLDOWN_S))
+
+
+def _drive(engine: ServeEngine, cfg: Dict, seed: int):
+    """Replay one seeded stream; returns ``(summary, results, errors)`` —
+    results are the served arrays in rid order, errors the ServeErrors.
+    Nothing may propagate out of submit/flush/result (the gate counts it)."""
+    spec = TrafficSpec(mix=cfg["mix"], n=cfg["n"],
+                       n_matrices=cfg["n_matrices"], seed=seed)
+    gen = TrafficGenerator(spec)
+    tickets = []
+    for i, (_name, mat, rhs) in enumerate(gen.requests(cfg["requests"])):
+        tickets.append(engine.submit(mat, rhs))
+        if (i + 1) % cfg["flush_every"] == 0:
+            engine.flush()
+    engine.flush()
+    # recovery tail: while the breaker is open, wait out the cooldown and
+    # send probe traffic until every key recovers (bounded — a key that
+    # cannot recover is exactly what the gate should catch)
+    tail = 0
+    while engine.health.any_quarantined() and tail < 5:
+        time.sleep(COOLDOWN_S)
+        for _name, mat, rhs in gen.requests(1):
+            tickets.append(engine.submit(mat, rhs))
+        engine.flush()
+        tail += 1
+    results, errors = [], []
+    for t in tickets:
+        try:
+            results.append(np.asarray(t.result()))
+        except ServeError as e:
+            results.append(None)
+            errors.append(e)
+    return engine.summary(), results, errors
+
+
+def _counted_drive(engine: ServeEngine, cfg: Dict, seed: int):
+    """`_drive` with every ``KernelEntry.call`` counted — the parity probe."""
+    calls = {"n": 0}
+    orig = spmv_mod.KernelEntry.call
+
+    def counting(self, *a, **kw):
+        calls["n"] += 1
+        return orig(self, *a, **kw)
+
+    spmv_mod.KernelEntry.call = counting
+    try:
+        out = _drive(engine, cfg, seed)
+    finally:
+        spmv_mod.KernelEntry.call = orig
+    return out, calls["n"]
+
+
+def _bitwise_equal(a: List, b: List) -> bool:
+    return len(a) == len(b) and all(
+        (x is None and y is None) or
+        (x is not None and y is not None and np.array_equal(x, y))
+        for x, y in zip(a, b))
+
+
+def collect(scale: str = "quick", seed: int = 0) -> Tuple[List[dict], Dict]:
+    """Returns ``(csv_rows, chaos_doc)``; the doc is the BENCH_chaos.json
+    payload (one clean/chaos/parity record per mix)."""
+    cfg_all = SCALES[scale]
+    rows, mixes = [], {}
+    for mix in cfg_all["mixes"]:
+        cfg = dict(cfg_all, mix=mix)
+        # clean baseline — same eager configuration as the chaos run
+        clean, _clean_res, clean_errs = _drive(
+            _engine(cfg, check_finite=True), cfg, seed)
+        # chaos run under the armed plan
+        plan = smoke_plan(seed)
+        with plan:
+            chaos, _chaos_res, chaos_errs = _drive(
+                _engine(cfg, check_finite=True), cfg, seed)
+        # parity probe: production engines, no plan, jitted lanes
+        (p1, res1, errs1), calls1 = _counted_drive(
+            _engine(cfg, check_finite=False), cfg, seed)
+        (_p2, res2, errs2), calls2 = _counted_drive(
+            _engine(cfg, check_finite=False), cfg, seed)
+        p99_clean = clean["latency_p99_s"]
+        p99_chaos = chaos["latency_p99_s"]
+        entry = {
+            "requests": cfg["requests"],
+            "injected": len(plan.events),
+            "injected_by_site": {s: plan.fired(s) for s in
+                                 ("kernel", "nonfinite", "plan", "admission")},
+            "success_rate": chaos["availability"],
+            "propagated_exceptions": 0,  # _drive absorbed everything to get here
+            "errors": chaos["errors"],
+            "error_kinds": chaos["error_kinds"],
+            "degraded_share": chaos["degraded_fraction"],
+            "retries": chaos["retries"],
+            "batch_splits": chaos["batch_splits"],
+            "plan_failures": chaos["plan_failures"],
+            "admission_retries": chaos["admission_retries"],
+            "p99_clean_s": p99_clean,
+            "p99_chaos_s": p99_chaos,
+            "p99_inflation": (p99_chaos / p99_clean) if p99_clean > 0 else 0.0,
+            "health": chaos["health"],
+            "recovery_s": chaos["health"]["max_recovery_s"],
+            "quarantined_now": chaos["health"]["quarantined_now"],
+            "clean_errors": len(clean_errs) + len(errs1) + len(errs2),
+            "parity": {
+                "dispatch_calls": [calls1, calls2],
+                "dispatch_parity": calls1 == calls2,
+                "bit_identical": _bitwise_equal(res1, res2),
+                "availability": p1["availability"],
+            },
+        }
+        mixes[mix] = entry
+        rows.append({
+            "name": f"chaos/{mix}/n{cfg['n']}",
+            "us_per_call": p99_chaos * 1e6,
+            "derived": (f"success={entry['success_rate']:.0%} "
+                        f"degraded={entry['degraded_share']:.0%} "
+                        f"inflation={entry['p99_inflation']:.2f}x "
+                        f"recov={entry['recovery_s']*1e3:.1f}ms "
+                        f"injected={entry['injected']}"),
+        })
+    doc = {
+        "schema": 1,
+        "scale": scale,
+        "seed": seed,
+        "cooldown_s": COOLDOWN_S,
+        "jax_backend": jax.default_backend(),
+        "interpret": jax.default_backend() != "tpu",
+        "python": platform.python_version(),
+        "mixes": mixes,
+    }
+    return rows, doc
+
+
+def check(doc: Dict) -> List[str]:
+    """The chaos-smoke gate (CI fails on any entry):
+
+      - success rate under the recoverable plan must be exactly 1.0
+      - faults must actually have been injected (a vacuous pass is a bug)
+      - every quarantined key must have recovered by end of run
+      - the inactive-hook parity probe must hold (dispatch counts equal,
+        results bit-identical, availability 1.0)
+      - nothing may have errored in the clean/parity runs
+    """
+    problems = []
+    if not doc.get("mixes"):
+        problems.append("no mixes recorded")
+    for mix, out in doc.get("mixes", {}).items():
+        if out.get("success_rate", 0.0) < 1.0:
+            problems.append(
+                f"{mix}: success rate {out['success_rate']:.2%} < 100% "
+                f"under the recoverable plan (kinds={out['error_kinds']})")
+        if out.get("injected", 0) == 0:
+            problems.append(f"{mix}: fault plan never fired — vacuous run")
+        if out.get("quarantined_now", 0):
+            problems.append(f"{mix}: {out['quarantined_now']} keys still "
+                            f"quarantined at end of run (no recovery)")
+        if out.get("propagated_exceptions", 0):
+            problems.append(f"{mix}: {out['propagated_exceptions']} "
+                            f"exceptions propagated out of the engine")
+        if out.get("clean_errors", 0):
+            problems.append(f"{mix}: {out['clean_errors']} errors in the "
+                            f"clean/parity runs")
+        par = out.get("parity", {})
+        if not par.get("dispatch_parity", False):
+            problems.append(f"{mix}: inactive-hook dispatch counts differ "
+                            f"{par.get('dispatch_calls')}")
+        if not par.get("bit_identical", False):
+            problems.append(f"{mix}: inactive-hook results not bit-identical")
+    return problems
+
+
+def run(scale: str = "quick"):
+    return collect(scale)[0]

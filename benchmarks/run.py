@@ -26,6 +26,13 @@ the cross-PR perf + prediction record).
       # compressed variant falls back while its uncompressed baseline ran
       # natively, or narrower dtypes fail to shrink storage (the CI
       # precision-smoke gate)
+  PYTHONPATH=src python -m benchmarks.run --chaos [--smoke]
+      # fault-injected resilience trajectory: seeded traffic replayed under
+      # a recoverable FaultPlan -> BENCH_chaos.json (success rate, degraded
+      # share, p99 inflation, breaker recovery time, inactive-hook parity);
+      # exits non-zero when success rate < 100%, a quarantined key fails to
+      # recover, or the fault hooks are not no-ops when inactive (the CI
+      # chaos-smoke gate)
   PYTHONPATH=src python -m benchmarks.run --dynamic [--smoke]
       # dynamic-matrix trajectory: mutation scenarios (FDM assembly,
       # pruning) driven across the drift threshold -> BENCH_dynamic.json;
@@ -52,12 +59,14 @@ MODULES = [
     "spmv_bench",
     "serve_bench",
     "dynamic_bench",
+    "chaos_bench",
 ]
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_JSON = os.path.join(REPO_ROOT, "BENCH_spmv.json")
 DEFAULT_SERVE_JSON = os.path.join(REPO_ROOT, "BENCH_serve.json")
 DEFAULT_DYNAMIC_JSON = os.path.join(REPO_ROOT, "BENCH_dynamic.json")
+DEFAULT_CHAOS_JSON = os.path.join(REPO_ROOT, "BENCH_chaos.json")
 
 
 def _load_doc(path: str) -> dict:
@@ -128,6 +137,25 @@ def _write_dynamic_json(path: str, doc: dict) -> int:
     print(f"# wrote {len(scen)} dynamic scenarios to {path} "
           + " ".join(f"{s}:retunes={o['retunes']}/{len(o['steps'])}"
                      f"/final={o['final_key']}" for s, o in scen.items()),
+          file=sys.stderr)
+    return len(problems)
+
+
+def _write_chaos_json(path: str, doc: dict) -> int:
+    """Write the chaos trajectory and run the chaos-smoke gate; returns
+    the number of gate failures."""
+    from benchmarks.chaos_bench import check
+
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    problems = check(doc)
+    for p in problems:
+        print(f"CHAOS: {p}", file=sys.stderr)
+    mixes = doc.get("mixes", {})
+    print(f"# wrote {len(mixes)} chaos mixes to {path} "
+          + " ".join(f"{m}:success={o['success_rate']:.0%}"
+                     f"/degraded={o['degraded_share']:.0%}"
+                     f"/injected={o['injected']}" for m, o in mixes.items()),
           file=sys.stderr)
     return len(problems)
 
@@ -252,6 +280,15 @@ def main() -> None:
     ap.add_argument("--serve-json", default=DEFAULT_SERVE_JSON,
                     help="where to write the serving trajectory "
                          "(BENCH_serve.json)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injected traffic replays only -> "
+                         "BENCH_chaos.json; fail when success rate < 100%%, "
+                         "a quarantined backend never recovers, or the "
+                         "fault hooks are not inactive no-ops (the CI "
+                         "chaos-smoke gate)")
+    ap.add_argument("--chaos-json", default=DEFAULT_CHAOS_JSON,
+                    help="where to write the chaos trajectory "
+                         "(BENCH_chaos.json)")
     ap.add_argument("--dynamic", action="store_true",
                     help="dynamic-matrix mutation scenarios only -> "
                          "BENCH_dynamic.json; fail when refresh() never "
@@ -301,6 +338,16 @@ def main() -> None:
             print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
         sys.exit(1 if _write_serve_json(args.serve_json, doc) else 0)
 
+    if args.chaos:
+        from benchmarks import chaos_bench
+
+        scale = "smoke" if args.smoke else args.scale
+        rows, doc = chaos_bench.collect(scale)
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        sys.exit(1 if _write_chaos_json(args.chaos_json, doc) else 0)
+
     if args.dynamic:
         from benchmarks import dynamic_bench
 
@@ -327,6 +374,7 @@ def main() -> None:
     entries = None
     serve_doc = None
     dynamic_doc = None
+    chaos_doc = None
     for m in mods:
         try:
             mod = importlib.import_module(f"benchmarks.{m}")
@@ -336,6 +384,8 @@ def main() -> None:
                 rows, serve_doc = mod.collect(args.scale)
             elif m == "dynamic_bench":
                 rows, dynamic_doc = mod.collect(args.scale)
+            elif m == "chaos_bench":
+                rows, chaos_doc = mod.collect(args.scale)
             else:
                 rows = mod.run(args.scale)
             for row in rows:
@@ -350,6 +400,8 @@ def main() -> None:
         failed += _write_serve_json(args.serve_json, serve_doc)
     if dynamic_doc is not None:
         failed += _write_dynamic_json(args.dynamic_json, dynamic_doc)
+    if chaos_doc is not None:
+        failed += _write_chaos_json(args.chaos_json, chaos_doc)
     if failed:
         sys.exit(1)
 

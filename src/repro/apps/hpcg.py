@@ -32,7 +32,8 @@ import numpy as np
 
 from repro.core import DispatchKey, as_operator, autotune_spmv
 from repro.core import matrices as M
-from repro.solvers import build_mg, cg, cg_solve, pcg_solve  # noqa: F401  (cg_solve re-exported)
+from repro.core.errors import SolverDivergenceError
+from repro.solvers import build_mg, cg, cg_solve, diagnose_cg, pcg_solve  # noqa: F401  (cg_solve re-exported)
 
 REFERENCE_CANDIDATES = (DispatchKey("csr", "plain"),)
 
@@ -65,6 +66,19 @@ def _time(fn, *args, reps=3):
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+def _guard_phase(info, phase: str, *, tol, maxiter):
+    """Fail loudly when a convergence phase went non-finite (a corrupted
+    kernel or broken halo exchange must not masquerade as ``valid=False``).
+    The conv solvers are jitted, so this runs post-hoc on concrete results;
+    a merely *stalled* run stays a validation failure, not an exception."""
+    diag = diagnose_cg(info, tol=tol, maxiter=maxiter)
+    if not diag.finite:
+        raise SolverDivergenceError(
+            f"HPCG {phase} phase diverged: non-finite residual after "
+            f"{diag.iters} iterations")
+    return diag
 
 
 def _solver_pair(A_op, mg, iters, tol):
@@ -103,6 +117,7 @@ def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3, candidates=None,
     mg_ref = build_mg(nx, ny, nz, depth=depth, fmt="csr") if precond else None
     ref_timed, ref_conv = _solver_pair(A_ref, mg_ref, iters, tol)
     ref = ref_conv(b)
+    _guard_phase(ref, "reference", tol=tol, maxiter=iters)
     x_ref = ref.x
 
     # Phase 3: optimisation setup (per-level formats, Table III style).
@@ -135,6 +150,7 @@ def run_hpcg(nx=16, ny=16, nz=16, iters=50, reps=3, candidates=None,
                    and int(chk.iters) == int(ref.iters))
     #  (b) tolerance: the tuned run must converge and agree with the reference
     opt = opt_conv(b)
+    _guard_phase(opt, "optimised", tol=tol, maxiter=iters)
     rel = float(jnp.linalg.norm(opt.x - x_ref)
                 / jnp.maximum(jnp.linalg.norm(x_ref), 1e-30))
     valid = bitwise and rel < 1e-3 and float(opt.rel_res) <= tol

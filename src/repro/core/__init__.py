@@ -19,9 +19,21 @@ Public API:
                (per-rank formats, rowblock exact mode, masked matvec)
                lives in ``repro.distributed_op``
 """
+from .errors import (
+    AdmissionError,
+    InjectedFault,
+    KernelExecutionError,
+    ResilienceError,
+    SolverDivergenceError,
+    SparseInputError,
+    validate_container,
+    validate_rhs,
+)
 from .formats import (
     BSR, COO, CSR, DIA, ELL, SELL, Dense, KernelPlan, format_class, registered_formats,
 )
+from .health import HealthRegistry, KeyHealth, use_health
+from .health import registry as health_registry
 from .convert import convert, from_dense, to_bsr, to_coo, to_csr, to_dia, to_ell, to_sell
 from .operator import (
     DEFAULT_POLICY,
@@ -72,4 +84,8 @@ __all__ = [
     "SpmvWorkspace", "spmv_cached", "workspace",
     "DEFAULT_DRIFT_THRESHOLD", "DeltaOverlay", "DriftReport", "RefreshResult",
     "DistributedSpMV", "autotune_distributed", "split_local_remote",
+    "AdmissionError", "InjectedFault", "KernelExecutionError",
+    "ResilienceError", "SolverDivergenceError", "SparseInputError",
+    "validate_container", "validate_rhs",
+    "HealthRegistry", "KeyHealth", "health_registry", "use_health",
 ]

@@ -97,6 +97,13 @@ class ExecutionPolicy:
     index_dtype: str = "auto"          # "auto" | "int8" | "int16" | "int32"
     value_dtype: str = "float32"       # "float32" | "bfloat16" | "float16" | "float64"
     accum_dtype: str = "float32"       # only "float32" is implemented
+    # resilience knob (docs/resilience.md): validate concrete operands at the
+    # operator boundary (non-finite rhs, malformed container indices ->
+    # SparseInputError) and concrete kernel outputs inside dispatch (a
+    # non-finite result counts as a kernel failure and degrades down the
+    # chain). Tracers pass untouched, so jitted lanes are unaffected; the
+    # serving engine runs eagerly when it wants these checks enforced.
+    check_finite: bool = False
 
     def replace(self, **kw) -> "ExecutionPolicy":
         return dataclasses.replace(self, **kw)
@@ -336,9 +343,15 @@ class SparseOperator:
         if other.shape[0] != self.shape[1]:
             raise ValueError(f"shape mismatch: {self.shape} @ {tuple(other.shape)} "
                              f"(the plain kernels would silently clamp gathers)")
+        pol = self._effective_policy()
+        if pol.check_finite:
+            from .errors import validate_container, validate_rhs
+
+            validate_rhs(other, context=f"rhs of {self.format} @")
+            validate_container(self.container)
         if other.ndim == 1:
-            return _dispatch_spmv(self.container, other, self._effective_policy())
-        return _dispatch_spmm(self.container, other, self._effective_policy())
+            return _dispatch_spmv(self.container, other, pol)
+        return _dispatch_spmm(self.container, other, pol)
 
     def matvec(self, x) -> jnp.ndarray:
         """``A @ x`` for a 1-D ``x`` — alias of the ``@`` operator."""

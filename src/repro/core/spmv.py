@@ -17,15 +17,27 @@ dispatch walks the policy's backend chain and falls back to the next backend
 when a predicate rejects. ``spmv(A, x, impl=...)`` / ``spmm(A, X, impl=...)``
 remain as thin back-compat shims over the policy path and return bit-identical
 results to the old string-dispatch API.
+
+Dispatch is also the resilience lane's enforcement point (docs/resilience.md):
+every kernel outcome feeds the ambient ``repro.core.health`` registry, a
+quarantined ``DispatchKey`` is ordered behind its healthy chain peers, a
+kernel that *raises* falls down the same chain (the failure is wrapped in
+``KernelExecutionError`` only when the chain is exhausted), and under
+``policy.check_finite`` a concrete non-finite result counts as a failure.
+The ``fire``/``corrupt`` hooks of an active ``FaultPlan``
+(``repro.resilience.faults``) are consulted at the same spots and are a
+single ``None``-check when no plan is armed.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from . import health as _health
+from .errors import BackendUnsupportedError, KernelExecutionError, _all_finite
 from .formats import BSR, COO, CSR, DIA, ELL, SELL, Dense
 from .operator import ExecutionPolicy, current_policy, policy_for_impl
 
@@ -177,21 +189,27 @@ def _ensure_pallas():
         _PALLAS_LOADED = True
 
 
-class BackendUnsupportedError(RuntimeError):
-    """Raised when fallback is disabled and the preferred backend rejects."""
+# BackendUnsupportedError is defined in .errors (the shared resilience
+# taxonomy) and re-exported here for back-compat with every existing caller.
 
 
-def select_spmv(A, policy: ExecutionPolicy) -> KernelEntry:
-    """Walk the policy's backend chain; first registered + supporting entry
-    wins. With ``allow_fallback=False`` a rejecting predicate raises instead
-    of silently degrading."""
+def _spmv_chain(A, policy: ExecutionPolicy) -> List[KernelEntry]:
+    """Every registered + supporting entry along the policy's backend chain,
+    healthy entries first (quarantined keys keep chain order *after* them —
+    they still run when nothing healthy is left). With
+    ``allow_fallback=False`` only the preferred backend is considered and a
+    rejecting predicate raises instead of silently degrading."""
     if "pallas" in policy.backends:
         _ensure_pallas()
     tried: List[str] = []
+    cands: List[KernelEntry] = []
     for backend in policy.backends:
         entry = _SPMV.get(DispatchKey(A.format, backend))
         if entry is not None and entry.ok(A, policy):
-            return entry
+            if not policy.allow_fallback:
+                return [entry]
+            cands.append(entry)
+            continue
         why = "unregistered" if entry is None else "unsupported"
         if not policy.allow_fallback:
             # fallback disabled: the preferred backend must run, whether it
@@ -200,33 +218,116 @@ def select_spmv(A, policy: ExecutionPolicy) -> KernelEntry:
                 f"backend {backend!r} {why} for {A.format} matrix of shape "
                 f"{tuple(A.shape)} under {policy} and fallback is disabled")
         tried.append(f"{backend}: {why}")
-    raise KeyError(
-        f"no SpMV for format {A.format!r} under backend chain {policy.backends}; "
-        f"tried [{'; '.join(tried)}]; registered: {sorted((k.format, k.backend) for k in _SPMV)}")
+    if not cands:
+        raise KeyError(
+            f"no SpMV for format {A.format!r} under backend chain {policy.backends}; "
+            f"tried [{'; '.join(tried)}]; registered: {sorted((k.format, k.backend) for k in _SPMV)}")
+    return _health.registry().order(cands)
+
+
+def select_spmv(A, policy: ExecutionPolicy) -> KernelEntry:
+    """Walk the policy's backend chain; first registered + supporting entry
+    wins, with quarantined keys (see ``repro.core.health``) deprioritised
+    behind healthy ones. With ``allow_fallback=False`` a rejecting predicate
+    raises instead of silently degrading (health is not consulted — strict
+    mode means *this* backend or an error)."""
+    return _spmv_chain(A, policy)[0]
+
+
+def _run_chain(steps: List[Tuple[DispatchKey, Callable]],
+               policy: ExecutionPolicy, opname: str):
+    """Execute the first step that completes; a step that raises (or returns
+    non-finite output under ``check_finite``) records a failure against its
+    key and control falls to the next step. The last step's failure is
+    wrapped in ``KernelExecutionError`` — by then the chain is exhausted."""
+    reg = _health.registry()
+    plan = _health._FAULT_PLAN
+    last_exc: Optional[Exception] = None
+    for i, (key, thunk) in enumerate(steps):
+        final = (i == len(steps) - 1) or not policy.allow_fallback
+        try:
+            if plan is not None:
+                plan.fire("kernel", key)
+            y = thunk()
+            if plan is not None:
+                y = plan.corrupt("nonfinite", key, y)
+        except Exception as e:
+            reg.record_failure(key)
+            if final:
+                raise KernelExecutionError(
+                    f"{opname} kernel {key.format}x{key.backend} failed with "
+                    f"{type(e).__name__} and the chain {policy.backends} is "
+                    f"exhausted") from e
+            last_exc = e
+            continue
+        if policy.check_finite and not _all_finite(y):
+            reg.record_nonfinite(key)
+            err = KernelExecutionError(
+                f"{opname} kernel {key.format}x{key.backend} produced "
+                f"non-finite output (policy.check_finite)")
+            if final:
+                raise err
+            last_exc = err
+            continue
+        reg.record_success(key)
+        return y
+    raise last_exc  # pragma: no cover — loop always returns or raises
 
 
 def _dispatch_spmv(A, x, policy: ExecutionPolicy) -> jnp.ndarray:
-    return select_spmv(A, policy).call(A, x, policy=policy)
+    steps = [(e.key, (lambda e=e: e.call(A, x, policy=policy)))
+             for e in _spmv_chain(A, policy)]
+    return _run_chain(steps, policy, "SpMV")
 
 
 def _dispatch_spmm(A, X, policy: ExecutionPolicy) -> jnp.ndarray:
     """SpMM: native kernel when one is registered along the chain (BSR has a
-    true MXU kernel — that is the point of the format), else vmapped SpMV."""
+    true MXU kernel — that is the point of the format), else vmapped SpMV.
+    A native kernel that raises, is quarantined, or emits non-finite output
+    degrades to the vmapped-SpMV lane (which walks its own health-aware
+    chain)."""
     if "pallas" in policy.backends:
         _ensure_pallas()
+    reg = _health.registry()
+    plan = _health._FAULT_PLAN
     for backend in policy.backends:
         entry = _SPMM.get(DispatchKey(A.format, backend))
-        if entry is not None:
-            if entry.ok(A, policy):
-                return entry.call(A, X, policy=policy)
+        if entry is None:
+            if not policy.allow_fallback:
+                # no native SpMM for the preferred backend: the vmapped-SpMV
+                # path below still enforces strictness through select_spmv
+                break
+            continue
+        if not entry.ok(A, policy):
             if not policy.allow_fallback:
                 raise BackendUnsupportedError(
                     f"SpMM backend {backend!r} rejected {A.format} matrix of shape "
                     f"{tuple(A.shape)} under {policy} and fallback is disabled")
-        elif not policy.allow_fallback:
-            # no native SpMM for the preferred backend: the vmapped-SpMV path
-            # below still enforces strictness through select_spmv
+            continue
+        if policy.allow_fallback and reg.blocked(entry.key):
+            continue  # quarantined native kernel: next backend / vmapped lane
+        try:
+            if plan is not None:
+                plan.fire("kernel", entry.key)
+            Y = entry.call(A, X, policy=policy)
+            if plan is not None:
+                Y = plan.corrupt("nonfinite", entry.key, Y)
+        except Exception as e:
+            reg.record_failure(entry.key)
+            if not policy.allow_fallback:
+                raise KernelExecutionError(
+                    f"SpMM kernel {entry.key.format}x{entry.key.backend} failed "
+                    f"with {type(e).__name__} and fallback is disabled") from e
+            break  # degrade to the vmapped-SpMV lane
+        if policy.check_finite and not _all_finite(Y):
+            reg.record_nonfinite(entry.key)
+            if not policy.allow_fallback:
+                raise KernelExecutionError(
+                    f"SpMM kernel {entry.key.format}x{entry.key.backend} produced "
+                    f"non-finite output (policy.check_finite)")
             break
+        reg.record_success(entry.key)
+        return Y
     return jax.vmap(lambda col: _dispatch_spmv(A, col, policy),
                     in_axes=1, out_axes=1)(X)
 
@@ -238,27 +339,43 @@ def _dispatch_masked_spmv(A, x, row_mask, policy: ExecutionPolicy) -> jnp.ndarra
     (predicated early, skipping unmasked rows' work) wins, otherwise the
     *same backend's* unmasked kernel runs and the mask is applied after —
     so masked callers inherit every format/backend the dispatch table knows.
+    Health and fault injection apply per (format, backend) key exactly as in
+    unmasked dispatch (one breaker per key, masked and unmasked lanes share
+    it: a broken kernel family is broken for both).
     """
     if "pallas" in policy.backends:
         _ensure_pallas()
     tried: List[str] = []
+    steps: List[Tuple[DispatchKey, Callable]] = []
     for backend in policy.backends:
         key = DispatchKey(A.format, backend)
         entry = _SPMV_MASKED.get(key)
         if entry is not None and entry.ok(A, policy):
-            return entry.call(A, x, row_mask, policy=policy)
+            steps.append((key, (lambda entry=entry:
+                                entry.call(A, x, row_mask, policy=policy))))
+            if not policy.allow_fallback:
+                break
+            continue
         base = _SPMV.get(key)
         if base is not None and base.ok(A, policy):
-            return jnp.where(row_mask, base.call(A, x, policy=policy), 0)
+            steps.append((key, (lambda base=base:
+                                jnp.where(row_mask,
+                                          base.call(A, x, policy=policy), 0))))
+            if not policy.allow_fallback:
+                break
+            continue
         why = "unregistered" if (entry is None and base is None) else "unsupported"
         if not policy.allow_fallback:
             raise BackendUnsupportedError(
                 f"masked SpMV backend {backend!r} {why} for {A.format} matrix of "
                 f"shape {tuple(A.shape)} under {policy} and fallback is disabled")
         tried.append(f"{backend}: {why}")
-    raise KeyError(
-        f"no masked SpMV for format {A.format!r} under chain {policy.backends}; "
-        f"tried [{'; '.join(tried)}]")
+    if not steps:
+        raise KeyError(
+            f"no masked SpMV for format {A.format!r} under chain {policy.backends}; "
+            f"tried [{'; '.join(tried)}]")
+    steps = _health.registry().order(steps, key_of=lambda s: s[0])
+    return _run_chain(steps, policy, "masked SpMV")
 
 
 def masked_spmv(A, x: jnp.ndarray, row_mask: jnp.ndarray,
@@ -363,6 +480,9 @@ def dia_spmv_plain(A: DIA, x):
     loads of x, no horizontal reduction)."""
     nrows, ncols = A.shape
     i = jnp.arange(nrows, dtype=jnp.int32)
+    # the gather index is traced inside fori_loop — a raw numpy x cannot be
+    # fancy-indexed by a tracer, so coerce up front
+    x = jnp.asarray(x)
 
     def body(d, y):
         k = i + A.offsets[d]
@@ -445,6 +565,8 @@ def ell_masked_spmv_plain(A: ELL, x, row_mask):
 def dia_masked_spmv_plain(A: DIA, x, row_mask):
     nrows, ncols = A.shape
     i = jnp.arange(nrows, dtype=jnp.int32)
+    # same coercion as dia_spmv_plain: the fori_loop gather traces the index
+    x = jnp.asarray(x)
 
     def body(d, y):
         k = i + A.offsets[d]

@@ -50,6 +50,7 @@ import scipy.sparse as sp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core import health as _health
 from repro.core.convert import _as_scipy
 from repro.core.distributed import (
     _take_part,
@@ -82,6 +83,17 @@ def as_dispatch_key(k: KeyLike) -> DispatchKey:
         return DispatchKey(k, "plain")
     fmt, backend = k
     return DispatchKey(fmt, backend)
+
+
+def _maybe_drop_halo(xr):
+    """Fault-injection site "halo": an armed plan may zero the exchanged
+    window (a dropped neighbour message) so tests can prove the distributed
+    result goes detectably wrong rather than silently so. One ``None`` check
+    when no plan is armed."""
+    plan = _health.fault_plan()
+    if plan is None:
+        return xr
+    return plan.drop("halo", None, xr)
 
 
 def _per_part_keys(spec, nparts: int) -> Tuple[DispatchKey, ...]:
@@ -338,6 +350,8 @@ class DistributedOperator:
             xr = jax.lax.all_gather(x, self.axis, tiled=True)
         elif rc:
             xr = self._exchange(x)
+        if xr is not None:
+            xr = _maybe_drop_halo(xr)
         # 2) local contribution (each rank's own x shard, or the gathered x
         #    in rowblock mode)
         mr = self.shape[0] // self.nparts

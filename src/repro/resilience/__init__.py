@@ -1,0 +1,25 @@
+"""repro.resilience — fault tolerance for the serving deployment story.
+
+    monitor : HeartbeatMonitor / StragglerMonitor / RestartPolicy /
+              Supervisor — the launcher-facing liveness + restart layer
+              (clock-injectable, deterministic under test)
+    faults  : seeded deterministic FaultPlan injection driving the chaos
+              bench (benchmarks/chaos_bench.py) and tests/test_chaos.py
+
+The dispatch-level circuit breaker itself lives in ``repro.core.health``
+(core must not depend on this package); docs/resilience.md maps the layers.
+"""
+from .faults import SITES, FaultPlan, FaultSpec
+from .monitor import (
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerMonitor,
+    Supervisor,
+    serve_under_supervision,
+)
+
+__all__ = [
+    "SITES", "FaultPlan", "FaultSpec",
+    "HeartbeatMonitor", "RestartPolicy", "StragglerMonitor", "Supervisor",
+    "serve_under_supervision",
+]

@@ -15,13 +15,13 @@ from .batcher import (
     coalescible,
     plan_batches,
 )
-from .engine import ServeEngine, Ticket
+from .engine import ServeEngine, ServeError, Ticket
 from .stats import BatchRecord, RequestRecord, ServeStats
 from .traffic import MIXES, TrafficGenerator, TrafficSpec, matrix_pool, run_traffic
 
 __all__ = [
     "BIT_STABLE_BACKENDS", "ServeRequest", "Tile", "coalescible", "plan_batches",
-    "ServeEngine", "Ticket",
+    "ServeEngine", "ServeError", "Ticket",
     "BatchRecord", "RequestRecord", "ServeStats",
     "MIXES", "TrafficGenerator", "TrafficSpec", "matrix_pool", "run_traffic",
 ]

@@ -36,6 +36,7 @@ class ServeRequest:
     fingerprint: str
     rhs: Any                 # (ncols,) array
     t_submit: float
+    deadline: Any = None     # absolute engine-clock deadline, or None
 
 
 @dataclass(frozen=True)

@@ -21,6 +21,35 @@ Request lifecycle (docs/serving.md has the full picture)::
         4. account: per-request queue wait/latency and per-batch size,
            cache hit, exec time land in ServeStats.
 
+**Degraded serving** (docs/resilience.md): a flush never lets a fault take
+the batch down. Failures resolve the affected tickets to a structured
+:class:`ServeError` (``ticket.result()`` raises it; ``flush`` itself only
+propagates programming errors like unknown fingerprints):
+
+  - per-request **deadlines** (``submit(..., deadline_s=)``) expire before
+    execution -> ``kind="deadline"``;
+  - **admission** build failures retry with exponential backoff through the
+    seed :class:`~repro.resilience.monitor.RestartPolicy`; exhausted ->
+    ``kind="admission"`` for every request on that fingerprint this flush;
+  - a failed **coalesced tile** splits and retries per-request, so one
+    poison rhs cannot fail its batch peers (``kind="input"`` for the poison
+    request only);
+  - a failed per-request execution gets bounded **retry-with-degradation**
+    (the policy chain is extended toward plain/dense) -> ``kind="execution"``
+    only when retries are exhausted;
+  - the dispatch **circuit breaker** (``repro.core.health``, one registry
+    per engine, scoped over the flush via ``use_health``) quarantines a
+    repeatedly failing (format, backend) and the tile retargets to the
+    healthy lane — results there are bit-identical to that lane's normal
+    output, which the chaos suite proves.
+
+While a fault plan is armed, ``check_finite`` is on, or any key is
+quarantined, tiles execute **eagerly** instead of through the jitted lanes:
+a fault fired at trace time would be baked into the jit cache (a poisoned
+trace would replay the corruption forever), and probe/recovery accounting
+needs the per-call dispatch path. The healthy steady state keeps the jitted
+lanes exactly as before.
+
 The engine is async-friendly by construction: ``submit`` only appends to
 the queue, ``flush`` is the single execution point, and tickets are
 awaitable (``await ticket`` flushes lazily if needed) — an asyncio front
@@ -30,44 +59,79 @@ thread-safe; shard across engines instead of sharing one.
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import health as _health
+from repro.core.errors import (
+    AdmissionError, KernelExecutionError, SparseInputError,
+)
+from repro.core.health import HealthRegistry, use_health
 from repro.core.operator import ExecutionPolicy, SparseOperator, as_operator
 from repro.core.registry import SpmvWorkspace
 from repro.core.spmv import select_spmv
+from repro.resilience.monitor import RestartPolicy
 
 from .batcher import ServeRequest, Tile, coalescible, plan_batches
 from .stats import BatchRecord, RequestRecord, ServeStats
+
+
+class ServeError(RuntimeError):
+    """Structured per-request failure a :class:`Ticket` resolves to.
+
+    ``kind`` is one of ``"deadline"`` (expired before execution),
+    ``"admission"`` (warm-pool build failed after bounded retries),
+    ``"input"`` (non-finite rhs / malformed container — never retried), or
+    ``"execution"`` (every retry + degradation exhausted). ``cause`` keeps
+    the original exception when there was one."""
+
+    def __init__(self, kind: str, rid: int, fingerprint: str, message: str,
+                 cause: Optional[BaseException] = None):
+        super().__init__(f"[{kind}] request {rid} on {fingerprint[:12]}...: "
+                         f"{message}")
+        self.kind = kind
+        self.rid = rid
+        self.fingerprint = fingerprint
+        self.cause = cause
 
 
 class Ticket:
     """Future-like handle for one submitted request.
 
     ``result()`` (or ``await ticket``) returns the ``(nrows,)`` result,
-    flushing the engine first when the request is still queued. ``record``
-    is the per-request :class:`~repro.serve.stats.RequestRecord` once served.
+    flushing the engine first when the request is still queued; a request
+    that failed raises its :class:`ServeError` instead. ``record`` is the
+    per-request :class:`~repro.serve.stats.RequestRecord` once resolved,
+    ``error`` the structured failure (``None`` when served).
     """
 
-    __slots__ = ("rid", "_engine", "_y", "record")
+    __slots__ = ("rid", "_engine", "_y", "record", "error")
 
     def __init__(self, rid: int, engine: "ServeEngine"):
         self.rid = rid
         self._engine = engine
         self._y = None
         self.record: Optional[RequestRecord] = None
+        self.error: Optional[ServeError] = None
 
     @property
     def done(self) -> bool:
         return self.record is not None
+
+    @property
+    def ok(self) -> bool:
+        """Resolved successfully (False while pending or on error)."""
+        return self.record is not None and self.error is None
 
     def result(self):
         if not self.done:
             self._engine.flush()
         if not self.done:  # flush ran but this rid was not in the queue
             raise RuntimeError(f"request {self.rid} was never served")
+        if self.error is not None:
+            raise self.error
         return self._y
 
     def __await__(self):
@@ -76,6 +140,10 @@ class Ticket:
 
     def _fulfil(self, y, record: RequestRecord) -> None:
         self._y = y
+        self.record = record
+
+    def _fail(self, error: ServeError, record: RequestRecord) -> None:
+        self.error = error
         self.record = record
 
 
@@ -100,6 +168,24 @@ class ServeEngine:
             compacts, never re-tunes).
         clock: injectable monotonic clock (tests pass a fake; benchmarks
             keep ``time.perf_counter``).
+        deadline_s: default per-request deadline (``submit`` may override);
+            ``None`` = no deadline.
+        max_retries: extra per-request attempts after an execution failure
+            (each retry extends the policy chain toward plain/dense).
+        check_finite: enforce ``ExecutionPolicy.check_finite`` on every
+            served operator (inputs validated, non-finite outputs treated
+            as kernel failures). Forces eager execution — opt-in.
+        health: share a :class:`~repro.core.health.HealthRegistry` between
+            engines; default is a per-engine registry on the engine's clock.
+        admission_retries: admission build attempts before the fingerprint's
+            requests fail with ``kind="admission"`` (per flush; a later
+            flush starts a fresh attempt).
+        admission_backoff_s: base of the admission retry backoff
+            (``RestartPolicy`` doubles it per consecutive failure). The
+            delay is *recorded* (``stats.admission_retries``, the policy's
+            ``next_allowed_at``) and only slept when ``sleep`` is set.
+        sleep: optional ``sleep_fn`` for real backoff (``time.sleep`` in
+            production; tests leave it ``None``).
     """
 
     def __init__(self, *, capacity: int = 32,
@@ -108,7 +194,14 @@ class ServeEngine:
                  fmt: str = "csr", max_batch: int = 32,
                  tune_mode: Optional[str] = "predict",
                  drift_threshold: Optional[float] = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter,
+                 deadline_s: Optional[float] = None,
+                 max_retries: int = 1,
+                 check_finite: bool = False,
+                 health: Optional[HealthRegistry] = None,
+                 admission_retries: int = 2,
+                 admission_backoff_s: float = 0.0,
+                 sleep=None):
         from repro.core.dynamic import DEFAULT_DRIFT_THRESHOLD
 
         self.drift_threshold = (DEFAULT_DRIFT_THRESHOLD
@@ -121,11 +214,20 @@ class ServeEngine:
         self.max_batch = int(max_batch)
         self.tune_mode = tune_mode
         self.clock = clock
+        self.deadline_s = deadline_s
+        self.max_retries = int(max_retries)
+        self.check_finite = bool(check_finite)
+        self.health = health if health is not None \
+            else HealthRegistry(clock=clock)
+        self.admission_retries = int(admission_retries)
+        self.admission_backoff_s = float(admission_backoff_s)
+        self._sleep = sleep
         self.stats = ServeStats()
         self._queue: List[ServeRequest] = []
         self._tickets: Dict[int, Ticket] = {}
         self._matrices: Dict[str, Any] = {}  # fp -> source matrix (rebuilds
         #                                      after eviction re-tune from it)
+        self._admission_policies: Dict[str, RestartPolicy] = {}
         self._next_rid = 0
         self._t_first_submit: Optional[float] = None
         self._t_last_done: float = 0.0
@@ -142,13 +244,17 @@ class ServeEngine:
         matrix itself once the engine has seen it."""
         return SpmvWorkspace.fingerprint(matrix)
 
-    def submit(self, matrix_or_fingerprint: Union[str, Any], rhs) -> Ticket:
+    def submit(self, matrix_or_fingerprint: Union[str, Any], rhs,
+               deadline_s: Optional[float] = None) -> Ticket:
         """Enqueue ``A @ rhs``; returns a :class:`Ticket`. Never executes.
 
         ``matrix_or_fingerprint`` is either a matrix-like (scipy sparse,
         dense, registered container, ``SparseOperator``) or the fingerprint
         string of a matrix this engine has already seen — unknown
-        fingerprints raise ``KeyError`` at flush time.
+        fingerprints raise ``KeyError`` at flush time. ``deadline_s``
+        (relative to now on the engine's clock; default: the engine's
+        ``deadline_s``) expires the request if execution has not *started*
+        by then — an expired ticket resolves to ``ServeError("deadline")``.
         """
         if isinstance(matrix_or_fingerprint, str):
             fp = matrix_or_fingerprint
@@ -160,11 +266,14 @@ class ServeEngine:
         now = self.clock()
         if self._t_first_submit is None:
             self._t_first_submit = now
+        rel = deadline_s if deadline_s is not None else self.deadline_s
+        deadline = (now + rel) if rel is not None else None
         rid = self._next_rid
         self._next_rid += 1
         ticket = Ticket(rid, self)
         self._tickets[rid] = ticket
-        self._queue.append(ServeRequest(rid, fp, jnp.asarray(rhs), now))
+        self._queue.append(ServeRequest(rid, fp, jnp.asarray(rhs), now,
+                                        deadline))
         return ticket
 
     def __len__(self) -> int:
@@ -178,6 +287,9 @@ class ServeEngine:
         built = {"tuned": False}
 
         def build() -> SparseOperator:
+            plan = _health.fault_plan()
+            if plan is not None:
+                plan.fire("admission", fp)
             if fp not in self._matrices:
                 raise KeyError(
                     f"fingerprint {fp[:12]}... unknown: submit the matrix "
@@ -195,37 +307,177 @@ class ServeEngine:
                                     fallback=selected != preferred)
         return op, hit
 
+    def _admit_guarded(self, fp: str):
+        """Admission with bounded retry + exponential backoff (the seed
+        ``RestartPolicy`` drives the budget); raises :class:`AdmissionError`
+        when exhausted. Unknown fingerprints are a caller bug and keep
+        raising ``KeyError`` — that is not a fault to absorb."""
+        pol = self._admission_policies.get(fp)
+        if pol is None:
+            pol = self._admission_policies[fp] = RestartPolicy(
+                max_restarts=self.admission_retries,
+                backoff_base_s=self.admission_backoff_s,
+                clock=self.clock, sleep_fn=self._sleep)
+        while True:
+            try:
+                out = self._admit(fp)
+            except KeyError:
+                raise
+            except Exception as e:
+                self.stats.admission_failures += 1
+                if pol.on_failure() == "abort":
+                    # fresh incident next flush — the docstring's "per flush"
+                    self._admission_policies.pop(fp, None)
+                    raise AdmissionError(
+                        f"admission of {fp[:12]}... failed after "
+                        f"{len(pol.history) - 1} retries: "
+                        f"{type(e).__name__}: {e}") from e
+                self.stats.admission_retries += 1
+                continue
+            pol.reset()  # a success closes the incident
+            return out
+
     # -- execution ----------------------------------------------------------
+
+    def _fail_request(self, req: ServeRequest, kind: str, exc,
+                      t_start: float, retries: int = 0,
+                      batch_size: int = 1) -> None:
+        """Resolve one ticket to a structured error (never propagates)."""
+        t_done = self.clock()
+        self._t_last_done = max(self._t_last_done, t_done)
+        rec = RequestRecord(
+            rid=req.rid, fingerprint=req.fingerprint, batch_size=batch_size,
+            cache_hit=False, coalesced=False,
+            queue_wait_s=max(0.0, t_start - req.t_submit),
+            latency_s=max(0.0, t_done - req.t_submit),
+            ok=False, error_kind=kind, retries=retries)
+        self.stats.record_error(rec)
+        err = ServeError(kind, req.rid, req.fingerprint, str(exc),
+                         cause=exc if isinstance(exc, BaseException) else None)
+        self._tickets.pop(req.rid)._fail(err, rec)
+
+    def _fail_tile(self, tile: Tile, kind: str, exc, t_start: float) -> None:
+        for req in tile.requests:
+            self._fail_request(req, kind, exc, t_start)
+
+    def _degraded_policy(self, pol: ExecutionPolicy) -> ExecutionPolicy:
+        """Extend the chain toward the always-correct lanes for a retry."""
+        chain = tuple(pol.backends)
+        for b in ("plain", "dense"):
+            if b not in chain:
+                chain = chain + (b,)
+        return pol.replace(backends=chain, allow_fallback=True)
+
+    def _serve_one(self, op: SparseOperator, req: ServeRequest,
+                   eager: bool) -> Tuple[Optional[jnp.ndarray], int, Optional[tuple]]:
+        """One request with bounded retry-with-degradation; returns
+        ``(y, retries, error)`` where error is ``(kind, exc)`` or None."""
+        pol = op._effective_policy()
+        attempt = 0
+        while True:
+            try:
+                target = op.with_policy(pol)
+                if eager:
+                    y = jax.block_until_ready(target @ req.rhs)
+                else:
+                    y = jax.block_until_ready(self._mv(target, req.rhs))
+                return y, attempt, None
+            except SparseInputError as e:
+                # poisoned input: retrying burns budget for the same answer
+                return None, attempt, ("input", e)
+            except Exception as e:
+                if attempt >= self.max_retries:
+                    return None, attempt, ("execution", e)
+                attempt += 1
+                self.stats.retries += 1
+                pol = self._degraded_policy(pol)
 
     def _serve_tile(self, tile: Tile, op: SparseOperator, hit: bool) -> None:
         t_start = self.clock()
-        coalesce = tile.size > 1 and coalescible(op)
+        live: List[ServeRequest] = []
+        for req in tile.requests:
+            if req.deadline is not None and t_start > req.deadline:
+                self._fail_request(req, "deadline",
+                                   "deadline expired before execution",
+                                   t_start)
+            else:
+                live.append(req)
+        if not live:
+            return
+        base_pol = op._effective_policy()
+        if self.check_finite and not base_pol.check_finite:
+            base_pol = base_pol.replace(check_finite=True)
+            op = op.with_policy(base_pol)
+        plan = _health.fault_plan()
+        # Health-aware lane selection: when the breaker quarantined the
+        # preferred backend, retarget the executed policy so (a) dispatch
+        # serves the healthy lane and (b) the jit cache keys on what
+        # actually runs (policy is pytree aux data).
+        degraded = False
+        exec_op = op
+        if self.health.any_quarantined():
+            selected = select_spmv(op.container, base_pol).key.backend
+            if selected != base_pol.backends[0]:
+                degraded = True
+                exec_op = op.with_policy(base_pol.preferring(selected))
+        # Faults at trace time would be baked into the jit cache (a poisoned
+        # trace replays its corruption forever) and probe accounting needs
+        # the eager dispatch path — serve eagerly in any abnormal state.
+        eager = (plan is not None or base_pol.check_finite
+                 or self.health.any_quarantined())
+        coalesce = len(live) > 1 and coalescible(exec_op)
+        results: Optional[List[tuple]] = None
         if coalesce:
-            xs = jnp.stack([r.rhs for r in tile.requests])
-            ys = jax.block_until_ready(self._mm(op, xs))
-            results = [ys[i] for i in range(tile.size)]
-        else:
-            results = [jax.block_until_ready(self._mv(op, r.rhs))
-                       for r in tile.requests]
+            try:
+                xs = jnp.stack([r.rhs for r in live])
+                if eager:
+                    ys = jax.block_until_ready(exec_op.batched_matvec(xs))
+                else:
+                    ys = jax.block_until_ready(self._mm(exec_op, xs))
+                if base_pol.check_finite and not bool(jnp.all(jnp.isfinite(ys))):
+                    raise KernelExecutionError(
+                        "coalesced tile produced non-finite rows")
+                results = [(ys[i], 0, None) for i in range(len(live))]
+            except Exception:
+                # one poison request must not fail its batch peers: split
+                # and retry per-request (kind-level blame lands below)
+                self.stats.batch_splits += 1
+                coalesce = False
+        if results is None:
+            results = [self._serve_one(exec_op, r, eager) for r in live]
         t_done = self.clock()
         self._t_last_done = max(self._t_last_done, t_done)
+        served = [(req, y, nretry) for req, (y, nretry, err) in zip(live, results)
+                  if err is None]
+        for req, (y, nretry, err) in zip(live, results):
+            if err is not None:
+                kind, exc = err
+                self._fail_request(req, kind, exc, t_start, retries=nretry,
+                                   batch_size=len(live))
+        if not served:
+            return
         records = []
-        for req, y in zip(tile.requests, results):
+        for req, y, nretry in served:
             rec = RequestRecord(
                 rid=req.rid, fingerprint=req.fingerprint,
-                batch_size=tile.size, cache_hit=hit, coalesced=coalesce,
+                batch_size=len(served), cache_hit=hit, coalesced=coalesce,
                 queue_wait_s=t_start - req.t_submit,
-                latency_s=t_done - req.t_submit)
+                latency_s=t_done - req.t_submit,
+                degraded=degraded, retries=nretry)
+            if degraded:
+                self.stats.degraded_requests += 1
             records.append(rec)
             self._tickets.pop(req.rid)._fulfil(y, rec)
         self.stats.record_batch(
-            BatchRecord(fingerprint=tile.fingerprint, size=tile.size,
+            BatchRecord(fingerprint=tile.fingerprint, size=len(served),
                         coalesced=coalesce, cache_hit=hit,
                         exec_s=t_done - t_start),
             records)
 
     def flush(self) -> int:
-        """Serve everything queued; returns the number of requests served.
+        """Serve everything queued; returns the number of requests processed
+        (served or resolved to a structured error — flush itself only
+        propagates programming errors, never faults).
 
         One admission per (fingerprint, flush) group — multiple tiles of the
         same matrix in one flush share the warm-pool entry they admitted.
@@ -233,13 +485,34 @@ class ServeEngine:
         if not self._queue:
             return 0
         queue, self._queue = self._queue, []
-        tiles = plan_batches(queue, self.max_batch)
-        admitted: Dict[str, tuple] = {}
-        for tile in tiles:
-            if tile.fingerprint not in admitted:
-                admitted[tile.fingerprint] = self._admit(tile.fingerprint)
-            op, hit = admitted[tile.fingerprint]
-            self._serve_tile(tile, op, hit)
+        with use_health(self.health):
+            plan = _health.fault_plan()
+            try:
+                if plan is not None:
+                    plan.fire("plan", None)
+                tiles = plan_batches(queue, self.max_batch)
+            except ValueError:
+                raise  # max_batch < 1 is a configuration error, not a fault
+            except Exception:
+                # degraded planning: FIFO, one request per tile — no
+                # coalescing, but every ticket still resolves
+                self.stats.plan_failures += 1
+                tiles = [Tile(r.fingerprint, (r,)) for r in queue]
+            admitted: Dict[str, tuple] = {}
+            failed: Dict[str, AdmissionError] = {}
+            for tile in tiles:
+                fp = tile.fingerprint
+                if fp not in admitted and fp not in failed:
+                    try:
+                        admitted[fp] = self._admit_guarded(fp)
+                    except AdmissionError as e:
+                        failed[fp] = e
+                if fp in failed:
+                    self._fail_tile(tile, "admission", failed[fp],
+                                    self.clock())
+                    continue
+                op, hit = admitted[fp]
+                self._serve_tile(tile, op, hit)
         return len(queue)
 
     async def aflush(self) -> int:
@@ -307,7 +580,8 @@ class ServeEngine:
 
     def summary(self) -> Dict:
         """``ServeStats.summary`` over the engine's own wall clock, plus the
-        warm pool's LRU counters."""
+        warm pool's LRU counters and the health registry's breaker state."""
         out = self.stats.summary(self.wall_s)
         out["workspace"] = self.workspace.stats()
+        out["health"] = self.health.snapshot()
         return out

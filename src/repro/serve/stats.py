@@ -14,17 +14,22 @@ Counter invariants (asserted by ``tests/test_serve.py``):
     (fingerprint, flush) group)
   - ``coalesced_requests <= requests``; every batch size is ``<= max_batch``
   - ``0 <= queue_wait_s <= latency_s`` per request, so ``p50 <= p99``
+
+Failed requests (``ok=False``) land in ``failures``, *not* ``requests`` —
+the invariants above stay exact under faults, and ``availability`` is
+``served / (served + failed)`` (the chaos gate requires 1.0 under the
+recoverable smoke fault plan — see docs/resilience.md).
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclass(frozen=True)
 class RequestRecord:
-    """One served request, written when its result is scattered back."""
+    """One finished request — served (``ok``) or resolved to an error."""
 
     rid: int
     fingerprint: str
@@ -33,6 +38,10 @@ class RequestRecord:
     coalesced: bool          # served by the SpMM tile (vs per-request SpMV)
     queue_wait_s: float      # submit -> batch execution start
     latency_s: float         # submit -> result ready
+    ok: bool = True          # False: the ticket resolved to a ServeError
+    error_kind: Optional[str] = None  # "deadline"|"admission"|"input"|"execution"
+    degraded: bool = False   # served off the preferred backend by the breaker
+    retries: int = 0         # extra attempts the retry-with-degradation spent
 
 
 @dataclass(frozen=True)
@@ -73,6 +82,17 @@ class ServeStats:
     refresh_retunes: int = 0   # refreshes whose drift crossed the threshold
     #                            (tune re-ran, fingerprint re-admitted)
     refresh_reselects: int = 0  # retunes that changed (format, backend)
+    # -- resilience lane (docs/resilience.md) -------------------------------
+    failures: List[RequestRecord] = field(default_factory=list)
+    errors: int = 0            # tickets resolved to a ServeError
+    error_kinds: Dict[str, int] = field(default_factory=dict)
+    deadline_misses: int = 0   # requests expired before execution
+    degraded_requests: int = 0  # served off the preferred backend (breaker)
+    retries: int = 0           # per-request retry-with-degradation attempts
+    batch_splits: int = 0      # coalesced tiles that failed and re-ran split
+    plan_failures: int = 0     # flushes that fell back to trivial planning
+    admission_retries: int = 0  # admission rebuild attempts after a failure
+    admission_failures: int = 0  # individual admission build failures
 
     # -- feeding ------------------------------------------------------------
 
@@ -82,6 +102,16 @@ class ServeStats:
         self.cache_misses += not hit
         self.tunes += tuned
         self.dispatch_fallbacks += fallback
+
+    def record_error(self, rec: RequestRecord) -> None:
+        """A request resolved to a structured error (never lands in
+        ``requests`` — the served-side invariants stay exact)."""
+        self.failures.append(rec)
+        self.errors += 1
+        kind = rec.error_kind or "unknown"
+        self.error_kinds[kind] = self.error_kinds.get(kind, 0) + 1
+        if kind == "deadline":
+            self.deadline_misses += 1
 
     def record_refresh(self, retuned: bool, reselected: bool) -> None:
         self.refreshes += 1
@@ -116,6 +146,18 @@ class ServeStats:
         n = len(self.requests)
         return sum(r.coalesced for r in self.requests) / n if n else 0.0
 
+    @property
+    def availability(self) -> float:
+        """Served / finished — 1.0 when every ticket resolved to a result."""
+        total = len(self.requests) + self.errors
+        return len(self.requests) / total if total else 1.0
+
+    @property
+    def degraded_fraction(self) -> float:
+        """Fraction of *served* requests that ran on a degraded lane."""
+        n = len(self.requests)
+        return self.degraded_requests / n if n else 0.0
+
     def throughput(self, wall_s: float) -> float:
         return len(self.requests) / wall_s if wall_s > 0 else 0.0
 
@@ -143,4 +185,15 @@ class ServeStats:
             "queue_wait_p99_s": self.queue_wait_percentile(99),
             "wall_s": wall_s,
             "throughput_rps": self.throughput(wall_s),
+            "errors": self.errors,
+            "error_kinds": dict(self.error_kinds),
+            "availability": self.availability,
+            "deadline_misses": self.deadline_misses,
+            "degraded_requests": self.degraded_requests,
+            "degraded_fraction": self.degraded_fraction,
+            "retries": self.retries,
+            "batch_splits": self.batch_splits,
+            "plan_failures": self.plan_failures,
+            "admission_retries": self.admission_retries,
+            "admission_failures": self.admission_failures,
         }

@@ -11,7 +11,10 @@ HPCG preconditioner retargets across formats/backends like a single SpMV —
 and, via ``distribute_vcycle`` / ``SymGS.distribute`` and the sharding-
 transparent CG reductions (``pdot``/``pnorm``/``axpy``), across devices.
 """
-from .cg import CGInfo, as_matvec, axpy, cg, cg_solve, pcg_solve, pdot, pnorm
+from .cg import (
+    CGDiagnostics, CGInfo, as_matvec, axpy, cg, cg_guarded, cg_solve,
+    diagnose_cg, pcg_solve, pdot, pnorm,
+)
 from .symgs import SymGS, greedy_coloring
 from .mg import (
     MGLevel,
@@ -24,8 +27,8 @@ from .mg import (
 )
 
 __all__ = [
-    "CGInfo", "as_matvec", "axpy", "cg", "cg_solve", "pcg_solve",
-    "pdot", "pnorm",
+    "CGDiagnostics", "CGInfo", "as_matvec", "axpy", "cg", "cg_guarded",
+    "cg_solve", "diagnose_cg", "pcg_solve", "pdot", "pnorm",
     "SymGS", "greedy_coloring",
     "MGLevel", "VCycle", "build_mg", "coarsenable", "distributable_depth",
     "distribute_vcycle", "injection_operators",

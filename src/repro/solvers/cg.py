@@ -197,7 +197,10 @@ def cg(A, b: jnp.ndarray, *, tol: float = 1e-6, maxiter: int = 500,
 
     def cond(state):
         _, r, _, _, k = state
-        return (pnorm(r) > tol * bnorm) & (k < maxiter)
+        rn = pnorm(r)
+        # non-finite residual must exit the loop, not spin to maxiter: the
+        # NaN case already does (NaN > t is False) but +Inf would not
+        return jnp.isfinite(rn) & (rn > tol * bnorm) & (k < maxiter)
 
     def body(state):
         x, r, p, rz, k = state
@@ -215,3 +218,84 @@ def cg(A, b: jnp.ndarray, *, tol: float = 1e-6, maxiter: int = 500,
     state = (x0, b, z0, pdot(b, z0), jnp.int32(0))
     x, r, _, _, k = jax.lax.while_loop(cond, body, state)
     return CGInfo(x, k, pnorm(r) / bnorm)
+
+
+class CGDiagnostics(NamedTuple):
+    """Post-run divergence analysis of a :class:`CGInfo` (host-side bools —
+    build it on *concrete* results, after the jitted solve returned)."""
+
+    converged: bool   # rel_res <= tol
+    finite: bool      # rel_res (and hence the residual) is finite
+    stalled: bool     # hit maxiter with rel_res still above tol
+    rel_res: float
+    iters: int
+
+
+def diagnose_cg(info: CGInfo, *, tol: float, maxiter: int) -> CGDiagnostics:
+    """Classify a finished CG run: converged / non-finite / stalled.
+
+    Example:
+        >>> import jax.numpy as jnp
+        >>> info = CGInfo(jnp.zeros(2), jnp.int32(500), jnp.float32(0.5))
+        >>> d = diagnose_cg(info, tol=1e-6, maxiter=500)
+        >>> (d.converged, d.finite, d.stalled)
+        (False, True, True)
+    """
+    rel = float(info.rel_res)
+    iters = int(info.iters)
+    finite = bool(jnp.isfinite(info.rel_res))
+    converged = finite and rel <= tol
+    stalled = finite and not converged and iters >= maxiter
+    return CGDiagnostics(converged=converged, finite=finite, stalled=stalled,
+                         rel_res=rel, iters=iters)
+
+
+def cg_guarded(A, b: jnp.ndarray, *, tol: float = 1e-6, maxiter: int = 500,
+               precond: Optional[Callable] = None,
+               restart: bool = False):
+    """:func:`cg` that fails loudly on divergence instead of returning junk.
+
+    Runs :func:`cg`, then :func:`diagnose_cg` on the concrete result. A
+    non-finite residual (a NaN/Inf matvec — e.g. a corrupted kernel) or a
+    stalled run (``maxiter`` without reaching ``tol``) raises
+    :class:`~repro.core.errors.SolverDivergenceError` carrying the
+    diagnostics; with ``restart=True`` a non-finite run first retries once
+    on the always-correct degraded matvec (``plain``-chain dispatch) before
+    giving up — the solver-side analogue of the engine's
+    retry-with-degradation.
+
+    Returns:
+        ``(CGInfo, CGDiagnostics)`` on success.
+    """
+    from repro.core.errors import SolverDivergenceError
+
+    info = cg(A, b, tol=tol, maxiter=maxiter, precond=precond)
+    diag = diagnose_cg(info, tol=tol, maxiter=maxiter)
+    if not diag.finite and restart:
+        info = cg(_degraded_matvec(A), b, tol=tol, maxiter=maxiter,
+                  precond=precond)
+        diag = diagnose_cg(info, tol=tol, maxiter=maxiter)
+    if not diag.finite:
+        raise SolverDivergenceError(
+            f"CG produced a non-finite residual after {diag.iters} "
+            f"iterations (rel_res={diag.rel_res}) — kernel fault or "
+            f"ill-posed input")
+    if diag.stalled:
+        raise SolverDivergenceError(
+            f"CG stalled: {diag.iters} iterations reached rel_res="
+            f"{diag.rel_res:.3e}, target {tol:.3e}")
+    return info, diag
+
+
+def _degraded_matvec(A) -> Callable:
+    """The restart lane: ``A``'s matvec forced onto the plain-first chain
+    (reference kernels, fallback allowed) when ``A`` carries a policy;
+    callables and policy-less operators pass through unchanged."""
+    pol = getattr(A, "_effective_policy", None)
+    with_policy = getattr(A, "with_policy", None)
+    if pol is None or with_policy is None:
+        return as_matvec(A)
+    base = pol()
+    chain = ("plain",) + tuple(b for b in base.backends if b != "plain")
+    return as_matvec(with_policy(base.replace(backends=chain,
+                                              allow_fallback=True)))

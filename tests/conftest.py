@@ -41,6 +41,42 @@ def kernel_dispatch_counter(monkeypatch):
     return counts
 
 
+@pytest.fixture
+def chain_failure_injector(monkeypatch):
+    """Force selected ``DispatchKey``s' kernels to raise while recording every
+    dispatch attempt — the chain-coverage fixture: a failing (or rejected)
+    entry must hand control to the next chain entry exactly once.
+
+    Usage: ``inj["fail"].add(key)`` to make ``key`` raise; ``inj["attempts"]``
+    is the ordered list of keys dispatch actually invoked."""
+    import importlib
+
+    spmv_mod = importlib.import_module("repro.core.spmv")
+
+    state = {"fail": set(), "attempts": []}
+    orig = spmv_mod.KernelEntry.call
+
+    def failing(self, A, *operands, policy):
+        state["attempts"].append(self.key)
+        if self.key in state["fail"]:
+            raise RuntimeError(f"forced failure for {self.key}")
+        return orig(self, A, *operands, policy=policy)
+
+    monkeypatch.setattr(spmv_mod.KernelEntry, "call", failing)
+    return state
+
+
+@pytest.fixture
+def fresh_health():
+    """A scoped ``HealthRegistry`` so forced kernel failures cannot leak
+    quarantine state into the ambient default registry other tests share."""
+    from repro.core.health import HealthRegistry, use_health
+
+    reg = HealthRegistry()
+    with use_health(reg):
+        yield reg
+
+
 @pytest.fixture(scope="session")
 def suite_small():
     """``matrices.suite('small')`` materialised once per session — the

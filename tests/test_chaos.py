@@ -1,0 +1,484 @@
+"""Fault-injected resilience lane: the PR acceptance suite (docs/resilience.md).
+
+Everything runs on fake clocks, so quarantine, cooldown, probe, and recovery
+are fully deterministic. The acceptance block pins:
+
+  - under the recoverable smoke FaultPlan the run completes with 100%
+    request success and zero propagated exceptions;
+  - every degraded-lane result is bit-identical to that lane's normal
+    output (degraded means *rerouted*, never *approximate*);
+  - a quarantined key recovers via the first probe once the configured
+    cooldown has elapsed;
+  - the fault-injection hooks are no-ops when no plan is armed
+    (kernel-dispatch-count parity + bit-identical results).
+
+The chain-coverage block walks every registered SpMV DispatchKey and proves
+a raising kernel (or a rejecting ``supports`` predicate) hands control to
+the next chain entry exactly once, and that ``BackendUnsupportedError``
+escapes only when the chain is exhausted.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+
+from repro.core import (
+    AdmissionError,
+    BackendUnsupportedError,
+    ExecutionPolicy,
+    InjectedFault,
+    KernelExecutionError,
+    SparseInputError,
+    as_operator,
+    from_dense,
+    spmv,
+)
+from repro.core import matrices as M
+from repro.core.health import HealthRegistry, use_health
+from repro.core.spmv import DispatchKey, dispatch_table, select_spmv
+from repro.resilience import FaultPlan, FaultSpec
+from repro.serve import ServeEngine, ServeError
+
+_N = 32
+_A = (M.banded(_N, 3, seed=0) + M.random_uniform(_N, 0.05, seed=1)).tocsr()
+_RHS = [np.random.default_rng(50 + i).standard_normal(_N).astype(np.float32)
+        for i in range(8)]
+
+
+class FakeClock:
+    """Deterministic monotonic clock: every read advances 1ms; tests jump
+    it explicitly to cross breaker cooldowns."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        self.t += 1e-3
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+COOLDOWN = 10.0  # far beyond what auto-advance reaches inside one test
+
+
+def _engine(clk=None, **kw):
+    clk = clk or FakeClock()
+    kw.setdefault("policy", ExecutionPolicy.for_impl("pallas"))
+    kw.setdefault("fmt", "csr")
+    kw.setdefault("tune_mode", None)
+    kw.setdefault("capacity", 4)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("check_finite", True)
+    kw.setdefault("health", HealthRegistry(cooldown_s=COOLDOWN, clock=clk))
+    return ServeEngine(clock=clk, **kw), clk
+
+
+# ------------------------------------------------------------- acceptance ----
+
+
+def test_chaos_acceptance_fake_clock():
+    """The headline acceptance run: recoverable faults at every site, 100%
+    success, degraded bit-identity, probe recovery within the cooldown."""
+    clk = FakeClock()
+    engine, _ = _engine(clk, admission_retries=2)
+    plain_ref = as_operator(_A, "csr").using("plain")
+
+    plan = FaultPlan([
+        FaultSpec(site="kernel", key="pallas", times=2),  # trips the breaker
+        FaultSpec(site="admission", times=1),             # absorbed by retry
+        FaultSpec(site="plan", times=1),                  # degraded planning
+    ], seed=0)
+    with plan:
+        tickets = [engine.submit(_A, r) for r in _RHS[:4]]
+        engine.flush()  # must not raise: zero propagated exceptions
+        # breaker is now open (2 kernel failures); within the cooldown the
+        # next flush serves the degraded lane
+        t_deg = engine.submit(_A, _RHS[4])
+        engine.flush()
+
+    # 100% success
+    assert all(t.ok for t in tickets) and t_deg.ok
+    assert engine.stats.availability == 1.0
+    assert engine.stats.errors == 0
+    # each site actually fired
+    assert plan.fired("kernel") == 2
+    assert plan.fired("admission") == 1
+    assert plan.fired("plan") == 1
+    assert engine.stats.plan_failures == 1
+    assert engine.stats.admission_retries == 1
+    # the breaker opened and the degraded request was recorded as such
+    assert engine.health.any_quarantined()
+    assert engine.stats.degraded_requests >= 1
+    assert t_deg.record.degraded
+
+    # degraded bit-identity: the rerouted lane's result is bit-for-bit the
+    # plain lane's normal output
+    np.testing.assert_array_equal(np.asarray(t_deg.result()),
+                                  np.asarray(plain_ref @ _RHS[4]))
+    # every result (including the chain-fallback ones) matches the plain lane
+    for t, r in zip(tickets, _RHS[:4]):
+        np.testing.assert_array_equal(np.asarray(t.result()),
+                                      np.asarray(plain_ref @ r))
+
+    # probe recovery: once the cooldown elapses, the very next dispatch is
+    # the probe and it restores the pallas lane
+    clk.advance(COOLDOWN)
+    t_rec = engine.submit(_A, _RHS[5])
+    engine.flush()
+    assert t_rec.ok
+    assert not engine.health.any_quarantined()
+    snap = engine.health.snapshot()
+    assert snap["recoveries"] == 1 and snap["probes"] >= 1
+    assert snap["quarantined_now"] == []
+    # summary surfaces the whole story
+    out = engine.summary()
+    assert out["availability"] == 1.0
+    assert out["health"]["recoveries"] == 1
+
+
+def test_fault_hooks_are_noops_when_inactive(kernel_dispatch_counter):
+    """No plan armed: two identical runs produce identical dispatch counts
+    and bit-identical results — the injection sites cost one None-check."""
+    from repro.core.health import fault_plan
+
+    assert fault_plan() is None
+    results, counts = [], []
+    for _ in range(2):
+        engine, _ = _engine(check_finite=False)
+        before = kernel_dispatch_counter["calls"]
+        tickets = [engine.submit(_A, r) for r in _RHS[:4]]
+        engine.flush()
+        counts.append(kernel_dispatch_counter["calls"] - before)
+        results.append([np.asarray(t.result()) for t in tickets])
+    assert counts[0] == counts[1]
+    for a, b in zip(results[0], results[1]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_plan_cannot_nest_and_clears_on_exit():
+    plan = FaultPlan([FaultSpec(site="kernel")])
+    with plan:
+        with pytest.raises(RuntimeError, match="already"):
+            with FaultPlan([FaultSpec(site="plan")]):
+                pass
+    from repro.core.health import fault_plan
+
+    assert fault_plan() is None
+
+
+# ---------------------------------------------------------- chain coverage ----
+
+
+def _matrix_for(fmt: str):
+    d = np.asarray(M.banded(8, 2, seed=3).todense(), np.float32)
+    return from_dense(d, fmt)
+
+
+def test_every_key_hands_off_exactly_once(chain_failure_injector, fresh_health):
+    """For every registered SpMV DispatchKey: force its kernel to raise and
+    assert dispatch reaches the next chain entry exactly once (and still
+    returns the correct product)."""
+    x = np.ones(8, np.float32)
+    table = dispatch_table("spmv")
+    covered = 0
+    for key, entry in sorted(table.items(),
+                             key=lambda kv: (kv[0].format, kv[0].backend)):
+        A = _matrix_for(key.format)
+        chain = (key.backend,) + tuple(
+            b for b in ("plain", "dense") if b != key.backend)
+        pol = ExecutionPolicy(backends=chain)
+        if not entry.ok(A, pol):
+            # a rejecting predicate: the chain must skip the key entirely
+            assert select_spmv(A, pol).key != key
+            continue
+        fresh_health.reset()
+        chain_failure_injector["fail"] = {key}
+        chain_failure_injector["attempts"] = []
+        y = spmv(A, x, policy=pol)
+        attempts = chain_failure_injector["attempts"]
+        assert attempts.count(key) == 1, (key, attempts)
+        assert len(attempts) == 2, (key, attempts)  # failed key -> next, once
+        assert attempts[0] == key and attempts[1] != key
+        ref = np.asarray(A.to_dense() @ x)
+        np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5)
+        covered += 1
+    assert covered >= 6  # every format's preferred cell took the error path
+
+
+def test_backend_unsupported_only_when_chain_exhausted(chain_failure_injector,
+                                                       fresh_health):
+    A = _matrix_for("csr")
+    x = np.ones(8, np.float32)
+    # strict mode: unregistered backend raises immediately
+    with pytest.raises(BackendUnsupportedError):
+        spmv(A, x, policy=ExecutionPolicy(backends=("no-such-backend",),
+                                          allow_fallback=False))
+    # fallback mode: nothing registered along the chain is a KeyError
+    with pytest.raises(KeyError):
+        spmv(A, x, policy=ExecutionPolicy(backends=("no-such-backend",)))
+    # fallback mode with every entry raising: the *last* failure surfaces as
+    # KernelExecutionError — the chain really was walked to exhaustion
+    chain = ExecutionPolicy(backends=("plain", "dense"))
+    chain_failure_injector["fail"] = {DispatchKey("csr", "plain"),
+                                      DispatchKey("csr", "dense")}
+    with pytest.raises(KernelExecutionError, match="exhausted"):
+        spmv(A, x, policy=chain)
+    assert [k.backend for k in chain_failure_injector["attempts"]] == \
+        ["plain", "dense"]
+    # healthy chain: no error, no extra attempts
+    chain_failure_injector["fail"] = set()
+    chain_failure_injector["attempts"] = []
+    spmv(A, x, policy=chain)
+    assert len(chain_failure_injector["attempts"]) == 1
+
+
+def test_strict_mode_failure_raises_and_skips_health(chain_failure_injector,
+                                                     fresh_health):
+    """allow_fallback=False means *this backend or an error* — a raising
+    kernel must not silently degrade."""
+    A = _matrix_for("csr")
+    x = np.ones(8, np.float32)
+    chain_failure_injector["fail"] = {DispatchKey("csr", "plain")}
+    with pytest.raises(KernelExecutionError):
+        spmv(A, x, policy=ExecutionPolicy(backends=("plain", "dense"),
+                                          allow_fallback=False))
+    assert len(chain_failure_injector["attempts"]) == 1
+
+
+# ------------------------------------------------------------- the breaker ----
+
+
+def test_health_registry_quarantine_probe_recover_cycle():
+    t = {"now": 0.0}
+    reg = HealthRegistry(failure_threshold=2, cooldown_s=5.0,
+                         clock=lambda: t["now"])
+    key = DispatchKey("csr", "pallas")
+    reg.record_failure(key)
+    assert not reg.quarantined(key)
+    reg.record_failure(key)
+    assert reg.quarantined(key) and reg.blocked(key)
+    # within the cooldown the key stays blocked; after it, probe-eligible
+    t["now"] = 4.9
+    assert reg.blocked(key)
+    t["now"] = 5.1
+    assert not reg.blocked(key) and reg.quarantined(key)
+    # a failed probe re-quarantines and restarts the cooldown
+    reg.record_failure(key)
+    assert reg.blocked(key)
+    t["now"] = 10.3
+    assert not reg.blocked(key)
+    reg.record_success(key)
+    assert not reg.quarantined(key)
+    assert [e[0] for e in reg.events] == \
+        ["quarantine", "probe", "requarantine", "probe", "recover"]
+    snap = reg.snapshot()
+    assert snap["quarantines"] == 2 and snap["recoveries"] == 1
+    assert snap["quarantined_now"] == []
+    assert snap["max_recovery_s"] == pytest.approx(10.3 - 0.0)
+
+
+def test_health_registry_nonfinite_threshold_and_order():
+    reg = HealthRegistry(nonfinite_threshold=1, cooldown_s=5.0,
+                         clock=lambda: 0.0)
+    k1, k2 = DispatchKey("csr", "pallas"), DispatchKey("csr", "plain")
+    reg.record_nonfinite(k1)  # threshold 1: quarantined on first sight
+    assert reg.quarantined(k1)
+
+    class E:  # minimal stand-in for KernelEntry
+        def __init__(self, key):
+            self.key = key
+
+    ordered = reg.order([E(k1), E(k2)])
+    assert [e.key for e in ordered] == [k2, k1]  # blocked key demoted
+    # an unrelated healthy registry keeps order untouched (zero-cost path)
+    assert [e.key for e in HealthRegistry().order([E(k1), E(k2)])] == [k1, k2]
+
+
+# ------------------------------------------------------- degraded serving ----
+
+
+def test_deadline_expiry_resolves_structured_error():
+    engine, clk = _engine()
+    t = engine.submit(_A, _RHS[0], deadline_s=0.5)
+    clk.advance(1.0)  # the request expires before the flush executes it
+    engine.flush()
+    assert t.done and not t.ok
+    with pytest.raises(ServeError) as ei:
+        t.result()
+    assert ei.value.kind == "deadline"
+    assert engine.stats.deadline_misses == 1
+    assert engine.stats.availability == 0.0
+
+
+def test_poison_request_cannot_fail_its_batch():
+    """A coalesced tile with one NaN rhs splits and retries per-request: the
+    poison request resolves to kind='input', its peers serve bit-identically
+    to an unpoisoned run."""
+    engine, _ = _engine(policy=ExecutionPolicy.for_impl("plain"))
+    good, bad = _RHS[0], _RHS[1].copy()
+    bad[3] = np.nan
+    t_good = engine.submit(_A, good)
+    t_bad = engine.submit(_A, bad)
+    engine.flush()
+    assert engine.stats.batch_splits == 1
+    assert t_good.ok and not t_bad.ok
+    assert t_bad.error.kind == "input"
+    assert isinstance(t_bad.error.cause, SparseInputError)
+    ref = as_operator(_A, "csr").using("plain") @ good
+    np.testing.assert_array_equal(np.asarray(t_good.result()),
+                                  np.asarray(ref))
+    assert engine.stats.error_kinds == {"input": 1}
+
+
+def test_admission_retry_backoff_then_success():
+    engine, _ = _engine(admission_retries=2, admission_backoff_s=1.0)
+    with FaultPlan([FaultSpec(site="admission", times=2)]):
+        t = engine.submit(_A, _RHS[0])
+        engine.flush()
+    assert t.ok
+    assert engine.stats.admission_failures == 2
+    assert engine.stats.admission_retries == 2
+    assert engine.stats.availability == 1.0
+
+
+def test_admission_exhaustion_fails_fingerprint_group():
+    engine, _ = _engine(admission_retries=0)
+    with FaultPlan([FaultSpec(site="admission", times=1)]):
+        t1 = engine.submit(_A, _RHS[0])
+        t2 = engine.submit(_A, _RHS[1])
+        engine.flush()  # flush itself must not raise
+    for t in (t1, t2):
+        assert t.done and not t.ok and t.error.kind == "admission"
+        assert isinstance(t.error.cause, AdmissionError)
+    assert engine.stats.error_kinds == {"admission": 2}
+    # the incident is per-flush: with the fault exhausted, a retry succeeds
+    t3 = engine.submit(_A, _RHS[2])
+    engine.flush()
+    assert t3.ok
+
+
+def test_unknown_fingerprint_still_raises_keyerror():
+    """An unknown fingerprint is a caller bug, not a fault to absorb."""
+    engine, _ = _engine()
+    t = engine.submit("deadbeef" * 8, _RHS[0])
+    with pytest.raises(KeyError, match="unknown"):
+        engine.flush()
+    assert not t.done
+
+
+def test_execution_retry_with_degradation():
+    """A kernel that keeps raising exhausts the chain; the per-request retry
+    re-runs on an extended (plain/dense-terminated) chain and still serves."""
+    engine, _ = _engine(max_retries=1)
+    # 4 faults: attempt 0 burns 2 (pallas, plain both fail), the retry's
+    # extended chain burns 2 more and its dense tail serves
+    with FaultPlan([FaultSpec(site="kernel", times=4)]):
+        t = engine.submit(_A, _RHS[0])
+        engine.flush()
+    assert t.ok
+    assert t.record.retries >= 1
+    assert engine.stats.retries >= 1
+
+
+# ----------------------------------------------------- determinism of faults ----
+
+
+def test_fault_plan_is_seed_deterministic():
+    def run(seed):
+        plan = FaultPlan([FaultSpec(site="kernel", key="pallas", p=0.5,
+                                    times=3)], seed=seed)
+        engine, _ = _engine()
+        with plan:
+            for r in _RHS[:6]:
+                engine.submit(_A, r)
+            engine.flush()
+        return tuple(plan.events)
+
+    assert run(7) == run(7)
+
+
+def test_fault_spec_matching_and_validation():
+    with pytest.raises(ValueError, match="site"):
+        FaultSpec(site="not-a-site")
+    spec = FaultSpec(site="kernel", key=("csr", "pallas"))
+    assert spec.matches(DispatchKey("csr", "pallas"))
+    assert not spec.matches(DispatchKey("ell", "pallas"))
+    by_backend = FaultSpec(site="kernel", key="pallas")
+    assert by_backend.matches(DispatchKey("ell", "pallas"))
+    assert not by_backend.matches(DispatchKey("ell", "plain"))
+    anyk = FaultSpec(site="plan")
+    assert anyk.matches(None)
+
+
+def test_injected_fault_outside_resilience_taxonomy():
+    from repro.core import ResilienceError
+
+    assert not issubclass(InjectedFault, ResilienceError)
+
+
+# ------------------------------------------------------------- halo + solver ----
+
+
+def test_halo_drop_detectably_corrupts_distributed_matvec():
+    import jax
+    from jax.sharding import Mesh
+    from repro.distributed_op import DistributedOperator
+
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    s = M.banded(8, 1, seed=0)
+    op = DistributedOperator.build(s, mesh, "data", local="csr",
+                                   mode="rowblock")
+    x = np.arange(1, 9, dtype=np.float32)
+    y_ok = np.asarray(op @ x)
+    with FaultPlan([FaultSpec(site="halo", times=1)]) as plan:
+        y_bad = np.asarray(op @ x)
+    assert plan.fired("halo") == 1
+    assert not np.allclose(y_bad, y_ok)  # a dropped exchange is loud
+    np.testing.assert_allclose(np.asarray(op @ x), y_ok)  # and transient
+
+
+def test_cg_exits_on_nonfinite_residual():
+    from repro.solvers import cg
+
+    info = cg(lambda p: p * jnp.inf, np.ones(8, np.float32), maxiter=100)
+    assert int(info.iters) < 100  # no spin-to-maxiter on Inf
+    assert not bool(jnp.isfinite(info.rel_res))
+
+
+def test_cg_guarded_raises_on_divergence_and_stall():
+    from repro.core import SolverDivergenceError
+    from repro.solvers import cg_guarded, diagnose_cg
+
+    b = np.ones(8, np.float32)
+    with pytest.raises(SolverDivergenceError, match="non-finite"):
+        cg_guarded(lambda p: p * jnp.nan, b)
+    # a stalled run (maxiter hit, tol unmet) is loud too
+    rng = np.random.default_rng(0)
+    d = rng.standard_normal((8, 8)).astype(np.float32)
+    spd = d @ d.T + 8 * np.eye(8, dtype=np.float32)
+    A = as_operator(sp.csr_matrix(spd))
+    with pytest.raises(SolverDivergenceError, match="stalled"):
+        cg_guarded(A, b, tol=1e-12, maxiter=1)
+    info, diag = cg_guarded(A, b, tol=1e-5, maxiter=200)
+    assert diag.converged and diag.finite and not diag.stalled
+    assert diagnose_cg(info, tol=1e-5, maxiter=200).converged
+
+
+def test_cg_guarded_restart_recovers_on_degraded_matvec():
+    """restart=True retries a non-finite run on the plain-chain lane."""
+    from repro.solvers import cg_guarded
+    from repro.solvers.cg import _degraded_matvec
+
+    spd = sp.csr_matrix(4.0 * sp.eye(8, format="csr", dtype=np.float32))
+    A = as_operator(spd).using("pallas")
+    b = np.ones(8, np.float32)
+    # the degraded lane prepends plain to the chain
+    mv = _degraded_matvec(A)
+    np.testing.assert_allclose(np.asarray(mv(b)), np.asarray(A @ b))
+    # with a one-shot pallas corruption, restart lands on the plain lane
+    with FaultPlan([FaultSpec(site="kernel", key="pallas", times=50)]):
+        info, diag = cg_guarded(A, b, tol=1e-8, restart=True)
+    assert diag.converged
+    np.testing.assert_allclose(np.asarray(info.x), 0.25 * b, rtol=1e-6)

@@ -24,9 +24,11 @@ DOCTEST_MODULES = [
     "repro.solvers.mg",
     "repro.distributed_op.operator",
     "repro.distributed_op.tune",
+    "repro.core.health",
 ]
 
-REQUIRED_DOCS = ["architecture.md", "formats.md", "hpcg.md", "serving.md"]
+REQUIRED_DOCS = ["architecture.md", "formats.md", "hpcg.md", "serving.md",
+                 "resilience.md"]
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 

@@ -114,6 +114,109 @@ def test_supervisor_gives_up_on_persistent_failure():
     assert sup.restarts == 2
 
 
+def test_median_even_window_is_true_median():
+    """Even-length windows take the mean of the two middle elements — the old
+    upper-median (`sorted(...)[n // 2]`) inflated the straggler threshold by
+    up to the inter-element gap."""
+    from repro.resilience.monitor import _median
+
+    assert _median([1.0, 2.0, 3.0]) == 2.0
+    assert _median([1.0, 2.0, 3.0, 4.0]) == 2.5       # not 3.0
+    assert _median([0.1, 0.9]) == pytest.approx(0.5)  # not 0.9
+
+    m = StragglerMonitor(window=4, factor=2.0)
+    for t in (0.1, 0.2, 0.3, 0.4):
+        m.record(t)
+    assert m.median == pytest.approx(0.25)            # upper median was 0.3
+
+
+def test_straggler_threshold_uses_even_median():
+    """A step just above 2x the true median but below 2x the upper median
+    must be flagged — exactly the case the upper-median bias used to miss."""
+    m = StragglerMonitor(window=6, factor=2.0)
+    for t in (0.10, 0.10, 0.10, 0.20, 0.20, 0.20):
+        m.record(t)
+    # true median 0.15 -> threshold 0.30; upper median 0.20 -> 0.40
+    assert m.record(0.35) is True
+
+
+def test_restart_policy_backoff_on_fake_clock():
+    """Exponential backoff doubles per recent failure, is recorded in
+    last_delay_s/next_allowed_at, and sleeps only through sleep_fn."""
+    t = {"now": 0.0}
+    sleeps = []
+    p = RestartPolicy(max_restarts=3, window_s=1000.0, backoff_base_s=2.0,
+                      clock=lambda: t["now"], sleep_fn=sleeps.append)
+    assert p.on_failure() == "restart"
+    assert p.last_delay_s == 2.0 and p.next_allowed_at == 2.0
+    t["now"] = 10.0
+    assert p.on_failure() == "restart"
+    assert p.last_delay_s == 4.0 and p.next_allowed_at == 14.0
+    t["now"] = 20.0
+    assert p.on_failure() == "restart"
+    assert p.last_delay_s == 8.0 and p.next_allowed_at == 28.0
+    assert sleeps == [2.0, 4.0, 8.0]
+    assert p.on_failure() == "abort"
+    # a success closes the incident: counters and history reset
+    p.reset()
+    assert p.history == [] and p.last_delay_s == 0.0
+    assert p.on_failure() == "restart" and p.last_delay_s == 2.0
+    # sleep_fn=None records the schedule without blocking
+    q = RestartPolicy(max_restarts=1, backoff_base_s=5.0,
+                      clock=lambda: 100.0, sleep_fn=None)
+    assert q.on_failure() == "restart"
+    assert q.next_allowed_at == 105.0
+
+
+def test_serve_under_supervision_with_real_engine():
+    """The Supervisor wired to a real ServeEngine: a clean run needs no
+    restarts; a flush whose tickets resolve to ServeError restores to the
+    last completed batch and replays it to completion."""
+    from repro.core import ExecutionPolicy
+    from repro.core import matrices as M
+    from repro.resilience import FaultPlan, FaultSpec
+    from repro.resilience.monitor import serve_under_supervision
+    from repro.serve import ServeEngine
+
+    A = M.banded(16, 2, seed=0).tocsr()
+    rng = np.random.default_rng(3)
+    batches = [[(A, rng.standard_normal(16).astype(np.float32))
+                for _ in range(2)] for _ in range(3)]
+    tick = {"now": 0.0}
+
+    def clock():
+        tick["now"] += 1e-3
+        return tick["now"]
+
+    def fresh_engine():
+        return ServeEngine(policy=ExecutionPolicy.for_impl("plain"),
+                           fmt="csr", tune_mode=None, capacity=4,
+                           max_batch=4, admission_retries=0, clock=clock)
+
+    # clean run: every batch serves first try
+    results, sup = serve_under_supervision(fresh_engine(), batches,
+                                           clock=clock)
+    assert sup.restarts == 0 and len(results) == 3
+    ref = [np.asarray(A @ r) for _, r in batches[0]]
+    for got, want in zip(results[0], ref):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+
+    # one admission fault (and no in-engine retry budget): the step fails,
+    # the Supervisor restores to the last completed batch and replays
+    engine = fresh_engine()
+    with FaultPlan([FaultSpec(site="admission", times=1)]):
+        results, sup = serve_under_supervision(
+            engine, batches, policy=RestartPolicy(max_restarts=2,
+                                                  window_s=1000.0,
+                                                  clock=clock),
+            clock=clock)
+    assert sup.restarts >= 1
+    assert len(results) == 3 and all(len(b) == 2 for b in results)
+    for got, (_, r) in zip(results[-1], batches[-1]):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(A @ r),
+                                   rtol=1e-5)
+
+
 def test_zero_master_optimizer_matches_f32():
     """Mixed-precision ZeRO: bf16 params + f32 master must track the pure-f32
     optimizer (master carries the precision)."""

@@ -1,0 +1,166 @@
+"""BSR vs CSR/SELL trajectory: GFLOP/s as block density varies -> the
+``"bsr"`` section of BENCH_spmv.json.
+
+The axis that decides the block lane is *intra-block fill*: BSR stores
+``4/fill`` value bytes per logical nonzero (zero-padded 32x32 tiles) against
+CSR's ~8 B/nnz (f32 value + int32 index), so the bandwidth roofline predicts
+BSR wins above fill ~0.5 and loses below — exactly the crossover this sweep
+records.  Each matrix is a ``block_random`` block skeleton thinned to a
+target fill; per (matrix, format, backend) cell the sweep records measured
+GFLOP/s, the roofline-predicted GFLOP/s from the *built container's* bytes,
+and the dispatch fallback flag.  ``check`` is the CI bsr-smoke gate: the
+committed fixture block matrix must be present and no feasible bsr x pallas
+cell may silently fall back.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ExecutionPolicy, from_dense, select_spmv, spmv, structural_skip,
+)
+from repro.core import matrices as M
+from repro.kernels.ops import pallas_strategy
+from repro.roofline.analytic import spmv_roofline
+
+from benchmarks.spmv_bench import _container_bytes, _times_s
+
+FORMATS = ("bsr", "csr", "sell")
+
+#: intra-block fills swept, densest first; the roofline crossover vs CSR
+#: sits near 0.5, so the grid brackets it from both sides
+FILLS = (1.0, 0.5, 0.25, 0.1)
+
+#: scale -> (n, occupied-block fraction, iters, warmup)
+SCALES: Dict[str, Tuple[int, float, int, int]] = {
+    "smoke": (96, 0.3, 3, 1),
+    "quick": (512, 0.1, 10, 3),
+    "bench": (2048, 0.05, 20, 5),
+}
+
+FIXTURE = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "tests", "fixtures", "corpus", "block32_n96.mtx")
+
+
+def _thin_blocks(s, fill: float, seed: int = 3):
+    """Keep a ``fill`` fraction of the entries of each dense block — the
+    block *skeleton* stays put, only the intra-block density drops."""
+    if fill >= 1.0:
+        return s.tocsr()
+    rng = np.random.default_rng(seed)
+    c = s.tocoo(copy=True)
+    keep = rng.random(c.nnz) < fill
+    c.data = np.where(keep, c.data, 0.0)
+    out = c.tocsr()
+    out.eliminate_zeros()
+    return out
+
+
+def _suite(scale: str):
+    n, bfrac, _, _ = SCALES[scale]
+    base = M.block_random(n, bs=32, block_density=bfrac, seed=8)
+    mats = [(f"block32_n{n}_fill{fill:g}", _thin_blocks(base, fill))
+            for fill in FILLS]
+    if os.path.exists(FIXTURE):
+        from scipy.io import mmread
+
+        mats.append(("fixture/block32_n96", mmread(FIXTURE).tocsr()))
+    return mats
+
+
+def collect(scale: str = "quick"):
+    """Returns ``(csv_rows, section)`` — ``section`` is the ``"bsr"`` block
+    of BENCH_spmv.json."""
+    _, _, iters, warmup = SCALES[scale]
+    platform = jax.default_backend()
+    base = ExecutionPolicy()
+    rows, records = [], []
+    for mat_name, s in _suite(scale):
+        n = int(s.shape[1])
+        x = jnp.asarray(np.random.default_rng(2).standard_normal(n), jnp.float32)
+        nnz = int(s.nnz)
+        group = []
+        for fmt in FORMATS:
+            why = structural_skip(s, fmt)
+            if why is not None and fmt != "bsr":
+                records.append({"matrix": mat_name, "format": fmt,
+                                "skipped": why})
+                continue
+            # bsr is measured even below the selector's block-fill guard —
+            # the sweep's whole point is recording WHERE it starts losing;
+            # the guard verdict rides along in the record instead
+            kw = {"col_tile": base.col_tile(n)} if fmt != "bsr" else {}
+            A = from_dense(s, fmt, **kw)
+            nbytes = _container_bytes(A)
+            roof = spmv_roofline(nnz, nbytes, *s.shape, platform=platform)
+            for backend in ("plain", "pallas"):
+                pol = base.replace(backends=(backend, "plain"))
+                selected = select_spmv(A, pol).key.backend
+                fn = jax.jit(lambda A, x, pol=pol: spmv(A, x, policy=pol))
+                ts = _times_s(fn, A, x, iters=iters, warmup=warmup)
+                med = float(np.median(ts))
+                entry = {
+                    "matrix": mat_name, "nrows": int(s.shape[0]),
+                    "ncols": n, "nnz": nnz, "format": fmt,
+                    "backend": backend, "selected_backend": selected,
+                    "fallback": selected != backend,
+                    "mode": ((pallas_strategy(A, pol) or "fallback")
+                             if backend == "pallas" else "n/a"),
+                    "median_s": med,
+                    "gflops": 2.0 * nnz / med / 1e9,
+                    "nbytes": nbytes,
+                    "bytes_per_nnz": nbytes / max(1, nnz),
+                    "roofline_gflops": roof.gflops,
+                    "guard": why,
+                }
+                group.append(entry)
+                rows.append({
+                    "name": f"bsr/{mat_name}/{fmt}/{backend}",
+                    "us_per_call": med * 1e6,
+                    "derived": (f"gflops={entry['gflops']:.3f} "
+                                f"B/nnz={entry['bytes_per_nnz']:.1f} "
+                                f"roof={roof.gflops:.2f} "
+                                f"fallback={entry['fallback']}"),
+                })
+        if group:
+            # the crossover record: does the container-bytes roofline pick
+            # the same format the measurements do?
+            honest = [e for e in group if not e["fallback"]]
+            meas = min(honest or group, key=lambda e: e["median_s"])
+            pred = max(group, key=lambda e: e["roofline_gflops"])
+            for e in group:
+                e["winner_format"] = meas["format"]
+                e["winner_backend"] = meas["backend"]
+                e["roofline_winner_format"] = pred["format"]
+            records.extend(group)
+    return rows, {"platform": platform, "fills": list(FILLS),
+                  "records": records}
+
+
+def check(section) -> List[str]:
+    """The bsr-smoke CI gate: the fixture block matrix must be measured and
+    every feasible bsr x pallas cell must run the block kernel natively."""
+    problems = []
+    records = section.get("records", [])
+    fixture = [r for r in records
+               if r.get("matrix", "").startswith("fixture/")
+               and r.get("format") == "bsr" and "skipped" not in r]
+    if not fixture:
+        problems.append("fixture block matrix missing from the bsr sweep "
+                        "(tests/fixtures/corpus/block32_n96.mtx)")
+    for r in records:
+        if r.get("format") != "bsr" or "skipped" in r:
+            continue
+        if r["backend"] == "pallas" and r["fallback"]:
+            problems.append(f"{r['matrix']}: bsr x pallas fell back to "
+                            f"{r['selected_backend']}")
+    return problems
+
+
+def run(scale: str = "quick"):
+    return collect(scale)[0]

@@ -1,13 +1,33 @@
 """Beyond-paper: MoE token dispatch as runtime-switchable SpMM (the Morpheus
-idea inside the LM). Compares the three dispatch implementations."""
+idea inside the LM).
+
+All sparse lanes ('coo', 'bsr') route their dispatch/combine products
+through the ``SparseOperator`` facade, so the ambient ``use_policy`` scope
+picks the kernel backend exactly like every other dispatch site — the rows
+record each lane under the plain chain and, for the operator lanes, under a
+pallas-preferring policy too (on CPU that is interpreted Pallas: expect it
+slower; the row exists to keep the lane honest, not to win).
+"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, MoECfg
+from repro.core.operator import ExecutionPolicy, use_policy
 from repro.models import moe as moe_mod
+
 from .common import time_us
+
+#: dispatch lanes x policy scopes: operator-API lanes get a pallas scope
+LANES = (
+    ("sort", None),
+    ("onehot", None),
+    ("coo", None),
+    ("coo", "pallas"),
+    ("bsr", None),
+    ("bsr", "pallas"),
+)
 
 
 def run(scale="quick"):
@@ -20,11 +40,16 @@ def run(scale="quick"):
     x = jax.random.normal(jax.random.PRNGKey(1), (T, D), jnp.float32)
     rows = []
     base = None
-    for impl in ["sort", "onehot", "coo"]:
+    for impl, backend in LANES:
         mcfg = dataclasses.replace(cfg.moe, dispatch_impl=impl)
         f = jax.jit(lambda p, x, mcfg=mcfg: moe_mod.moe_ffn(p, x, cfg, mcfg)[0])
-        t = time_us(f, p, x, iters=5, warmup=2)
+        if backend is None:
+            t = time_us(f, p, x, iters=5, warmup=2)
+        else:
+            with use_policy(ExecutionPolicy(backends=(backend, "plain"))):
+                t = time_us(f, p, x, iters=5, warmup=2)
         base = base or t
-        rows.append({"name": f"moe_dispatch/{impl}/T{T}xD{D}", "us_per_call": t,
+        tag = impl if backend is None else f"{impl}-{backend}"
+        rows.append({"name": f"moe_dispatch/{tag}/T{T}xD{D}", "us_per_call": t,
                      "derived": f"vs_sort={base/t:.2f}"})
     return rows

@@ -26,6 +26,12 @@ the cross-PR perf + prediction record).
       # compressed variant falls back while its uncompressed baseline ran
       # natively, or narrower dtypes fail to shrink storage (the CI
       # precision-smoke gate)
+  PYTHONPATH=src python -m benchmarks.run --bsr [--smoke]
+      # block-sparse sweep: BSR vs CSR/SELL GFLOP/s as intra-block fill
+      # varies, with the container-bytes roofline predicting the crossover
+      # -> "bsr" section of BENCH_spmv.json; exits non-zero when the fixture
+      # block matrix is missing or any bsr x pallas cell silently fell back
+      # (the CI bsr-smoke gate)
   PYTHONPATH=src python -m benchmarks.run --chaos [--smoke]
       # fault-injected resilience trajectory: seeded traffic replayed under
       # a recoverable FaultPlan -> BENCH_chaos.json (success rate, degraded
@@ -55,6 +61,7 @@ MODULES = [
     "fig6_kernel_variants",
     "fig8_hpcg",
     "moe_dispatch",
+    "bsr_bench",
     "roofline_table",
     "spmv_bench",
     "serve_bench",
@@ -182,6 +189,29 @@ def _write_precision_json(path: str, scale: str, section: dict) -> int:
     return len(problems)
 
 
+def _write_bsr_json(path: str, scale: str, section: dict) -> int:
+    """Write the block-sparse sweep into the ``"bsr"`` section of the SpMV
+    trajectory and run its gate; returns the number of gate failures."""
+    from benchmarks.bsr_bench import check
+
+    doc = _load_doc(path)  # keep entries/corpus/precision sections
+    doc["schema"] = 2
+    doc["bsr"] = {"scale": scale, **section}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    problems = check(section)
+    for p in problems:
+        print(f"BSR: {p}", file=sys.stderr)
+    recs = [r for r in section["records"] if "skipped" not in r]
+    bsr_pallas = [r for r in recs
+                  if r["format"] == "bsr" and r["backend"] == "pallas"]
+    print(f"# wrote {len(recs)} bsr-sweep records to {path} "
+          f"({len(bsr_pallas)} bsr x pallas cells, "
+          f"{sum(r['fallback'] for r in bsr_pallas)} fallbacks)",
+          file=sys.stderr)
+    return len(problems)
+
+
 def _check_native(entries) -> int:
     """Expected-native cells that silently fell back (the smoke gate)."""
     bad = [e for e in entries if e["expect_native"] and e["fallback"]]
@@ -298,6 +328,11 @@ def main() -> None:
     ap.add_argument("--dynamic-json", default=DEFAULT_DYNAMIC_JSON,
                     help="where to write the dynamic-matrix trajectory "
                          "(BENCH_dynamic.json)")
+    ap.add_argument("--bsr", action="store_true",
+                    help="block-sparse BSR vs CSR/SELL sweep only -> 'bsr' "
+                         "section of BENCH_spmv.json; fail when the fixture "
+                         "block matrix is missing or a bsr x pallas cell "
+                         "fell back (the CI bsr-smoke gate)")
     ap.add_argument("--precision", action="store_true",
                     help="compressed-index / mixed-precision sweep only -> "
                          "'precision' section of BENCH_spmv.json; fail on "
@@ -317,6 +352,16 @@ def main() -> None:
                   f"{args.accuracy_floor:.0%}", file=sys.stderr)
             sys.exit(1)
         return
+
+    if args.bsr:
+        from benchmarks import bsr_bench
+
+        scale = "smoke" if args.smoke else args.scale
+        rows, section = bsr_bench.collect(scale)
+        print("name,us_per_call,derived")
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+        sys.exit(1 if _write_bsr_json(args.json, scale, section) else 0)
 
     if args.precision:
         from benchmarks import spmv_bench

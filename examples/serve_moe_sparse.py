@@ -66,7 +66,8 @@ def serve(cfg, model, params, B=8, S=32, G=16):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--impl", default="sort", choices=["sort", "onehot", "coo"])
+    ap.add_argument("--impl", default="sort",
+                    choices=["sort", "onehot", "coo", "bsr"])
     ap.add_argument("--tune", action="store_true",
                     help="run-first auto-tune the dispatch impl, then serve")
     ap.add_argument("--spmv-backend", default=None, choices=["plain", "pallas", "dense"],
@@ -78,7 +79,7 @@ def main():
     with policy_scope:
         if args.tune:
             best, best_tps = None, 0.0
-            for impl in ["sort", "onehot", "coo"]:
+            for impl in ["sort", "onehot", "coo", "bsr"]:
                 cfg, model, params = build(impl)
                 tps, _ = serve(cfg, model, params, G=8)
                 print(f"  dispatch={impl:7s}: {tps:.1f} tok/s")

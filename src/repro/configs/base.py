@@ -22,7 +22,7 @@ class MoECfg:
     d_shared_ff: int = 0
     capacity_factor: float = 1.25
     router_dtype: str = "float32"
-    dispatch_impl: str = "sort"  # 'sort' | 'onehot' | 'coo' | 'grouped'
+    dispatch_impl: str = "sort"  # 'sort' | 'onehot' | 'coo' | 'bsr' | 'grouped'
     n_groups: int = 0            # grouped dispatch: 0 = auto (DP degree)
 
 

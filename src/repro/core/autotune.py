@@ -32,6 +32,7 @@ DEFAULT_CANDIDATES: Tuple[DispatchKey, ...] = (
     DispatchKey("dia", "plain"), DispatchKey("dia", "pallas"),
     DispatchKey("ell", "plain"), DispatchKey("ell", "pallas"),
     DispatchKey("sell", "plain"), DispatchKey("sell", "pallas"),
+    DispatchKey("bsr", "plain"), DispatchKey("bsr", "pallas"),
     DispatchKey("dense", "dense"),
 )
 
@@ -81,14 +82,16 @@ def _normalize_candidates(candidates) -> Tuple[Tuple[str, str], ...]:
 
 
 def structural_skip(s, fmt: str, dia_max_diags: int = 512,
-                    ell_max_width_factor: float = 4.0) -> Optional[str]:
+                    ell_max_width_factor: float = 4.0,
+                    bsr_min_block_fill: float = 0.125) -> Optional[str]:
     """Why ``fmt`` should not even be *built* for matrix ``s`` — or ``None``.
 
     The practical limits Morpheus applies before racing a candidate
     (paper §V calls out DIA's memory blow-up on the FPGA): DIA is skipped
     when the matrix has too many distinct diagonals, ELL when the max row
-    width far exceeds the mean (power-law rows pad catastrophically).
-    Shared by the single-matrix tuner below and the per-partition
+    width far exceeds the mean (power-law rows pad catastrophically), BSR
+    when the 32-edge block fill is so low its zero-padded blocks blow up
+    storage. Shared by the single-matrix tuner below and the per-partition
     distributed tuner, so every tuning path applies identical guards.
 
     Args:
@@ -97,6 +100,8 @@ def structural_skip(s, fmt: str, dia_max_diags: int = 512,
         dia_max_diags: max distinct diagonals before DIA is skipped.
         ell_max_width_factor: max ``max_row_nnz / mean_row_nnz`` before ELL
             is skipped.
+        bsr_min_block_fill: min nnz / occupied 32-block area before BSR is
+            skipped.
 
     Returns:
         A human-readable skip reason, or ``None`` when the format is fine.
@@ -125,6 +130,14 @@ def structural_skip(s, fmt: str, dia_max_diags: int = 512,
         mean_w = max(1.0, counts.mean() if len(counts) else 1.0)
         if len(counts) and counts.max() > ell_max_width_factor * mean_w + 8:
             return f"max_row={counts.max()} >> mean={mean_w:.1f}"
+    if fmt == "bsr" and s.nnz:
+        from .features import BSR_FEATURE_BLOCK, block_density
+
+        coo = s.tocoo()
+        fill = block_density(coo.row, coo.col, s.shape[0], s.shape[1],
+                             BSR_FEATURE_BLOCK)
+        if fill < bsr_min_block_fill:
+            return f"block_fill={fill:.3f}<{bsr_min_block_fill}"
     return None
 
 

@@ -256,9 +256,31 @@ def to_sell(a, dtype=jnp.float32, C: int = 8, sigma: int = 64,
                 jnp.asarray(perm, jnp.int32), (nrows, ncols), C, scs)
 
 
-def to_bsr(a, dtype=jnp.float32, bs: int = 32, bwidth: Optional[int] = None):
+def to_bsr(a, dtype=jnp.float32, bs: int = 32, bwidth: Optional[int] = None,
+           block_size=None):
+    """Dense/scipy/container -> :class:`BSR` (ELL-of-blocks, ``bcol=-1`` pads).
+
+    ``block_size`` is the preferred spelling of ``bs`` and also accepts
+    ``"auto"``: scan the candidate edges (64, 32, 16, 8) and keep the largest
+    whose occupied-block fill stays >= 0.5 — the biggest MXU tile that does
+    not more than double storage — falling back to the best-fill edge when
+    none qualifies (pathologically scattered matrices).
+    """
     s = _as_scipy(a)
     nrows, ncols = s.shape
+    if block_size is not None:
+        if block_size == "auto":
+            from .features import block_density
+
+            coo = s.tocoo()
+            fills = {cand: block_density(coo.row, coo.col, nrows, ncols, cand)
+                     for cand in (64, 32, 16, 8) if cand <= max(nrows, ncols)}
+            if not fills:
+                fills = {8: 1.0}
+            good = [cand for cand, fill in fills.items() if fill >= 0.5]
+            bs = max(good) if good else max(fills, key=fills.get)
+        else:
+            bs = int(block_size)
     nbrows, nbcols = -(-nrows // bs), -(-ncols // bs)
     b = sp.bsr_matrix(s, blocksize=(bs, bs)) if nrows % bs == 0 and ncols % bs == 0 else None
     if b is None:  # pad then re-block

@@ -224,8 +224,9 @@ class DeltaOverlay:
 
     def features(self) -> MatrixFeatures:
         """Features of the mutated matrix from the incremental counters —
-        exact for every field except ``block_density`` and ``dense_cols``
-        (not tracked per-mutation; carried over from the base snapshot)."""
+        exact for every field except ``block_density``/``block_density32``
+        and ``dense_cols`` (not tracked per-mutation; carried over from the
+        base snapshot)."""
         f0 = self.base_features
         nrows, ncols = self.shape
         if self._nnz == 0:
@@ -245,6 +246,7 @@ class DeltaOverlay:
             band_extent=self._band_extent(),
             block_density=f0.block_density,
             dense_cols=f0.dense_cols,
+            block_density32=f0.block_density32,
         )
 
     def _band_extent(self) -> int:

@@ -28,6 +28,12 @@ import numpy as np
 #: kernel layout).
 FEATURE_BLOCK = 8
 
+#: Block edge of the BSR builder's default tile — ``block_density32`` is the
+#: same statistic at this edge, and is what the BSR cost/feasibility rows in
+#: ``core.select`` consume: 1/block_density32 is exactly BSR's storage
+#: blow-up factor at its own granularity.
+BSR_FEATURE_BLOCK = 32
+
 #: A column counts as "dense" when it holds at least this fraction of rows.
 DENSE_COL_FILL = 0.5
 
@@ -56,6 +62,9 @@ class MatrixFeatures:
     band_extent: int      # max |col - row| over nonzeros
     block_density: float  # nnz / (occupied FEATURE_BLOCK^2 blocks * block area)
     dense_cols: int       # columns with fill >= DENSE_COL_FILL
+    # nnz / occupied area at BSR's native 32-edge blocks; defaulted so older
+    # positional constructions (zero-matrix paths) stay valid
+    block_density32: float = 0.0
 
     @property
     def shape(self) -> Tuple[int, int]:
@@ -183,16 +192,6 @@ def extract_features(a) -> MatrixFeatures:
     # row permutation (summation order would otherwise leak last-bit noise)
     diags = col - row
     ndiags = int(np.unique(diags).shape[0])
-    nblockcols = -(-ncols // FEATURE_BLOCK)
-    blocks = np.unique((row // FEATURE_BLOCK) * nblockcols
-                       + col // FEATURE_BLOCK)
-    # occupied area clips edge blocks to the matrix boundary — a ragged
-    # dimension must not inflate the denominator (a dense 4x4 is 1.0 dense,
-    # not 4x4/8x8 = 0.25)
-    b_r, b_c = blocks // nblockcols, blocks % nblockcols
-    b_h = np.minimum(FEATURE_BLOCK, nrows - b_r * FEATURE_BLOCK)
-    b_w = np.minimum(FEATURE_BLOCK, ncols - b_c * FEATURE_BLOCK)
-    block_area = float((b_h * b_w).sum())
     colcounts = np.bincount(col, minlength=max(ncols, 1))
     return MatrixFeatures(
         nrows=nrows,
@@ -206,6 +205,30 @@ def extract_features(a) -> MatrixFeatures:
         ndiags=ndiags,
         diag_fill=nnz / float(max(ndiags * nrows, 1)),
         band_extent=int(np.abs(diags).max()),
-        block_density=nnz / block_area,
+        block_density=block_density(row, col, nrows, ncols, FEATURE_BLOCK),
         dense_cols=int((colcounts >= DENSE_COL_FILL * max(nrows, 1)).sum()),
+        block_density32=block_density(row, col, nrows, ncols,
+                                      BSR_FEATURE_BLOCK),
     )
+
+
+def block_density(row, col, nrows: int, ncols: int, bs: int) -> float:
+    """``nnz / occupied area`` at ``bs``-edge blocks, from entry coordinates.
+
+    Shared by :func:`extract_features` (bs=8 and bs=32 fields) and the
+    structural-guard mirror in ``core.autotune.structural_skip`` so the
+    selector and the tuner judge block fill with bit-identical arithmetic.
+    """
+    row = np.asarray(row, dtype=np.int64)
+    col = np.asarray(col, dtype=np.int64)
+    if row.shape[0] == 0:
+        return 0.0
+    nblockcols = -(-ncols // bs)
+    blocks = np.unique((row // bs) * nblockcols + col // bs)
+    # occupied area clips edge blocks to the matrix boundary — a ragged
+    # dimension must not inflate the denominator (a dense 4x4 is 1.0 dense,
+    # not 4x4/8x8 = 0.25)
+    b_r, b_c = blocks // nblockcols, blocks % nblockcols
+    b_h = np.minimum(bs, nrows - b_r * bs)
+    b_w = np.minimum(bs, ncols - b_c * bs)
+    return row.shape[0] / float((b_h * b_w).sum())

@@ -49,13 +49,17 @@ from .spmv import DispatchKey
 #: the zero-run feasibility test and the tuner's build guard cannot drift.
 DIA_MAX_DIAGS = 512
 ELL_MAX_WIDTH_FACTOR = 4.0
+#: BSR is refused when the 32-edge block fill drops below this — below it
+#: the zero-padded blocks blow storage past 1/BSR_MIN_BLOCK_FILL x the
+#: logical nonzeros, and the block lane loses to CSR/SELL on pure volume.
+BSR_MIN_BLOCK_FILL = 0.125
 
 #: Calibrated cost tables: platform -> (fmt, backend, strategy) ->
 #: (a_us, b_us_per_krow, c_us_per_kentry, d_us_per_krow_kentry) — the four
 #: coefficients of ``est_us = a + b*krows + c*kentries + d*krows*kentries``.
 #: ``strategy`` is ``""`` for non-Pallas backends and
-#: ``"resident"``/``"tiled"`` for Pallas, chosen per call from the policy's
-#: VMEM budget (the same decision dispatch makes).
+#: ``"resident"``/``"tiled"`` (or BSR's ``"block"`` grid) for Pallas, chosen
+#: per call from the policy's VMEM budget (the same decision dispatch makes).
 #: The ``"cpu"`` table is fit by ``benchmarks/calibrate_select.py`` from
 #: measured autotune tables on the reference CPU runner (Pallas interprets,
 #: so its cost scales with row count and column-tiled grids are punitive);
@@ -92,6 +96,12 @@ COST: Dict[str, CostTable] = {
         ("sell", "pallas", "resident"): (114.122, 85.527, 25.383, 24.511),
         ("sell", "pallas", "tiled"): (30.455, 1565.35, 0.0, 108.465),
         ("sell", "plain", ""): (85.504, 0.0, 53.976, 2.465),
+        # bsr rows are hand-fit against block_random timings on the same
+        # reference runner (calibrate_select's suite has no block matrices
+        # yet): plain is a batched einsum over resident blocks, interpreted
+        # Pallas pays the usual per-grid-step row tax
+        ("bsr", "plain", ""): (60.0, 0.0, 1.2, 0.05),
+        ("bsr", "pallas", "block"): (90.0, 420.0, 0.0, 55.0),
     },
     "tpu": {
         ("coo", "plain", ""): (10.0, 0.0, 0.045, 0.0),
@@ -110,6 +120,11 @@ COST: Dict[str, CostTable] = {
         ("dia", "pallas", "tiled"): (12.0, 0.0, 0.007, 0.0),
         ("ell", "pallas", "tiled"): (12.0, 0.0, 0.013, 0.0),
         ("sell", "pallas", "tiled"): (12.0, 0.0, 0.013, 0.0),
+        # storage_entries already prices BSR's zero-padding blow-up, so the
+        # per-entry coefficient is near the streamed floor: dense MXU tiles,
+        # one int32 id per 32x32 block
+        ("bsr", "plain", ""): (10.0, 0.0, 0.02, 0.0),
+        ("bsr", "pallas", "block"): (8.0, 0.0, 0.008, 0.0),
     },
 }
 
@@ -154,7 +169,8 @@ def storage_entries(f: MatrixFeatures, fmt: str) -> float:
     if fmt == "dense":
         return float(f.nrows) * float(f.ncols)
     if fmt == "bsr":
-        return float(f.nnz) / max(f.block_density, 1e-3)
+        # nnz / fill at BSR's own 32-edge granularity = padded block volume
+        return float(f.nnz) / max(f.block_density32, 1e-3)
     return float(f.nnz)
 
 
@@ -234,6 +250,7 @@ def bytes_per_nnz(f: MatrixFeatures, fmt: str,
 def infeasible(f: MatrixFeatures, fmt: str,
                dia_max_diags: int = DIA_MAX_DIAGS,
                ell_max_width_factor: float = ELL_MAX_WIDTH_FACTOR,
+               bsr_min_block_fill: float = BSR_MIN_BLOCK_FILL,
                ) -> Optional[str]:
     """Feature-level mirror of ``autotune.structural_skip``: why ``fmt``
     should not even be built, or ``None``. Computed from features alone so
@@ -250,6 +267,8 @@ def infeasible(f: MatrixFeatures, fmt: str,
         mean_w = max(1.0, f.rownnz_mean)
         if f.rownnz_max > ell_max_width_factor * mean_w + 8:
             return f"max_row={f.rownnz_max} >> mean={mean_w:.1f}"
+    if fmt == "bsr" and f.nnz and f.block_density32 < bsr_min_block_fill:
+        return f"block_fill={f.block_density32:.3f}<{bsr_min_block_fill}"
     return None
 
 
@@ -278,6 +297,10 @@ def pallas_strategy_for(f: MatrixFeatures, policy: ExecutionPolicy,
         if f.nrows <= policy.max_onehot_rows and f.ncols <= policy.resident_cols():
             return "resident"
         return "tiled"
+    if fmt == "bsr":
+        # one strategy: the scalar-prefetched block grid — bwidth is already
+        # the streaming loop, there is no column-tiled variant to pick
+        return "block"
     return "resident" if policy.col_tile(f.ncols) is None else "tiled"
 
 
@@ -304,7 +327,7 @@ def estimate_us(f: MatrixFeatures, key: DispatchKey,
     strategy = (pallas_strategy_for(f, policy, key.format)
                 if key.backend == "pallas" else "")
     coef = table.get((key.format, key.backend, strategy))
-    if coef is None:  # unmodelled cell (e.g. bsr/pallas): rank it last
+    if coef is None:  # unmodelled cell the platform table never measured
         return float("inf")
     krows = f.nrows / 1e3
     kentries = storage_entries(f, key.format) / 1e3

@@ -580,6 +580,16 @@ def dia_masked_spmv_plain(A: DIA, x, row_mask):
     return jax.lax.fori_loop(0, A.ndiags, body, jnp.zeros((nrows,), acc))
 
 
+@register_masked_spmv("bsr", "plain")
+def bsr_masked_spmv_plain(A: BSR, x, row_mask):
+    # block-granular predication: zero masked rows inside each block before
+    # the gather-einsum, so the unmasked reference path runs unchanged
+    nbrows, bs = A.bcols.shape[0], A.bs
+    m = jnp.zeros((nbrows * bs,), jnp.bool_).at[: A.shape[0]].set(row_mask)
+    blocks = A.blocks * m.reshape(nbrows, 1, bs, 1).astype(A.blocks.dtype)
+    return bsr_spmv_plain(BSR(A.bcols, blocks, A.shape), x)
+
+
 # ------------------------------------------------------- dense fallback ----
 
 def _via_dense(A, x):

@@ -9,9 +9,10 @@ DMA of the right X tile), not in the compute: this is the TPU answer to
 SVE's ``svld1_gather_index`` and the same mechanism the megablox MoE kernels
 use for expert offsets.
 
-Grid = (nbrows, bwidth, nftiles); the y tile is revisited across the w
-dimension (sequential on TPU ⇒ safe accumulate); invalid (padding) blocks
-have bcol = -1, are clamped to 0 for the DMA and their contribution masked —
+Grid = (nbrows, nftiles, bwidth); w is the innermost axis (``program_id(2)``)
+so the y tile is revisited across the w dimension (sequential on TPU ⇒ safe
+accumulate); invalid blocks — bcol = -1 padding, or any id outside
+[0, nbcols) — are clamped to 0 for the DMA and their contribution masked:
 predication at block granularity.
 """
 from __future__ import annotations
@@ -56,7 +57,13 @@ def bsr_spmm(bcols: jnp.ndarray, blocks: jnp.ndarray, X: jnp.ndarray,
     nftiles = nf_pad // nf_tile
 
     Xp = jnp.zeros((nbcols * bs, nf_pad), X.dtype).at[:ncols, :nf].set(X)
-    flat_bcols = jnp.maximum(bcols.reshape(-1), -1)
+    # Invalidate out-of-range block-column ids on BOTH sides: the prefetched
+    # ids drive the X BlockSpec DMA, so an id >= nbcols would stream a tile
+    # from past the end of Xp. Map them to the -1 sentinel (masked, DMA
+    # clamped to tile 0) rather than clipping to nbcols-1, which would
+    # silently accumulate the wrong tile.
+    flat = bcols.reshape(-1)
+    flat_bcols = jnp.where(flat >= nbcols, -1, jnp.maximum(flat, -1))
 
     y = pl.pallas_call(
         functools.partial(_kernel, bwidth=bwidth),

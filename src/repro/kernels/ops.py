@@ -141,6 +141,10 @@ def pallas_strategy(A, policy) -> str | None:
         if not _scs_ok(A, policy):
             return None
         return "tiled" if A.plan.ntiles > 1 else "resident"
+    if fmt == "bsr":
+        # single strategy: the scalar-prefetched block grid — bwidth is the
+        # streaming loop, so there is no column-tiled variant to pick
+        return "block"
     return None
 
 
@@ -230,3 +234,13 @@ def bsr_spmm_pallas(A: BSR, X):
 @register_spmv("bsr", "pallas", supports=_precision_ok)
 def bsr_spmv_pallas(A: BSR, x):
     return bsr_spmm_pallas(A, x[:, None])[:, 0]
+
+
+@register_masked_spmv("bsr", "pallas", supports=_precision_ok)
+def bsr_masked_spmv_pallas(A: BSR, x, row_mask):
+    # mask rows on the operand (block-granular predication): zeroed block
+    # rows contribute exactly zero, so the block-grid kernel runs unchanged
+    nbrows, bs = A.bcols.shape[0], A.bs
+    m = jnp.zeros((nbrows * bs,), jnp.bool_).at[: A.shape[0]].set(row_mask)
+    blocks = A.blocks * m.reshape(nbrows, 1, bs, 1).astype(A.blocks.dtype)
+    return bsr_spmv_pallas(BSR(A.bcols, blocks, A.shape), x)

@@ -11,6 +11,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .layers import apply_rope, dense_init, rmsnorm
 
@@ -137,10 +138,13 @@ def chunked_attention(q, k, v, *, causal: bool, q_offset: int = 0,
 
 
 def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
-    """q: (B,1,Hq,hd); caches: (B,Smax,Hkv,hd); pos: scalar current index.
+    """q: (B,1,Hq,hd); k_cache: (B,Smax,Hkv,hd); v_cache: (B,Smax,Hkv,hdv)
+    where hdv may differ from hd (MLA-style asymmetric value heads, matching
+    chunked_attention); pos: scalar current index.
     Attends to cache[0..pos] inclusive (cache already contains this step)."""
     B, _, Hq, hd = q.shape
     Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    hdv = v_cache.shape[-1]
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(B, Hkv, G, hd)
@@ -150,7 +154,7 @@ def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
     s = jnp.where(mask[None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
-    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+    return o.reshape(B, 1, Hq, hdv).astype(q.dtype)
 
 
 class KVCache(NamedTuple):
@@ -208,3 +212,75 @@ def cross_attention_cached(p, x, kv_cache: KVCache, cfg):
     q = (x @ p["wq"].astype(x.dtype)).reshape(B, 1, cfg.n_heads, hd)
     o = decode_attention(q, kv_cache.k, kv_cache.v, kv_cache.k.shape[1] - 1)
     return o.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+
+
+# -------------------------------------------------- block-sparse attention ----
+
+def block_attention_bcols(seq_len: int, block_size: int,
+                          pattern: str = "diag", band: int = 1) -> np.ndarray:
+    """Block-column layout of a block-structured attention mask.
+
+    Returns an ELL-of-blocks ``(nblocks, width)`` int32 array in the exact
+    shape :class:`repro.core.formats.BSR` expects as ``bcols``: row block
+    ``r`` may attend to the listed column blocks, ``-1`` marks pad lanes.
+    ``pattern="diag"`` is local (block-diagonal) attention; ``"banded"``
+    additionally allows ``band`` neighbour blocks on each side (sliding
+    window at block granularity).
+    """
+    if seq_len % block_size:
+        raise ValueError(f"seq_len={seq_len} not divisible by block_size={block_size}")
+    if pattern == "diag":
+        band = 0
+    elif pattern != "banded":
+        raise ValueError(f"unknown pattern {pattern!r}")
+    nb = seq_len // block_size
+    width = 2 * band + 1
+    r = np.arange(nb)[:, None]
+    cols = r - band + np.arange(width)[None, :]
+    return np.where((cols >= 0) & (cols < nb), cols, -1).astype(np.int32)
+
+
+def block_sparse_attention(q, k, v, *, block_size: int, pattern: str = "diag",
+                           band: int = 1, policy=None) -> jnp.ndarray:
+    """Attention under a block-diagonal/banded mask, executed as BSR SpMM.
+
+    q: (B,S,H,hd); k: (B,S,H,hd); v: (B,S,H,hdv). Scores are only computed
+    for the allowed blocks (the mask is the *structure*, not a NEG_INF
+    overlay on an S x S score matrix); the probability matrix is then
+    materialised as ONE batched block-diagonal :class:`BSR` container over
+    all (batch, head) pairs and ``O = P @ V`` runs through the repro.core
+    SpMM dispatch — the same MXU block-tile lane MoE dispatch uses.
+    """
+    from repro.core.formats import BSR
+    from repro.core.operator import SparseOperator
+
+    B, S, H, hd = q.shape
+    hdv = v.shape[-1]
+    bs = block_size
+    bcols = block_attention_bcols(S, bs, pattern, band)   # (nb, W)
+    nb, W = bcols.shape
+    valid = bcols >= 0
+    scale = 1.0 / math.sqrt(hd)
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, nb, bs, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * H, nb, bs, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * H * S, hdv)
+    kg = kh[:, np.where(valid, bcols, 0)]                 # (BH, nb, W, bs, hd)
+    s = jnp.einsum("zrid,zrwjd->zrwij", qh.astype(jnp.float32),
+                   kg.astype(jnp.float32)) * scale
+    s = jnp.where(jnp.asarray(valid)[None, :, :, None, None], s, NEG_INF)
+    # softmax jointly over every key the row may attend to (lanes x lanes'
+    # columns); the diagonal block is always valid, so no row is all -inf
+    sf = s.transpose(0, 1, 3, 2, 4).reshape(B * H, nb, bs, W * bs)
+    prob = jax.nn.softmax(sf, axis=-1)
+    blocks = prob.reshape(B * H, nb, bs, W, bs).transpose(0, 1, 3, 2, 4)
+
+    # one batched container: each (batch, head) occupies its own block-
+    # diagonal stripe, so a single dispatch covers the whole batch
+    z = np.arange(B * H)[:, None, None]
+    gbcols = np.where(valid[None], bcols[None] + z * nb, -1)
+    P = BSR(jnp.asarray(gbcols.reshape(B * H * nb, W), jnp.int32),
+            blocks.reshape(B * H * nb, W, bs, bs),
+            (B * H * S, B * H * S))
+    o = SparseOperator(P, policy) @ vh.astype(jnp.float32)
+    return o.reshape(B, H, S, hdv).transpose(0, 2, 1, 3).astype(q.dtype)

@@ -13,6 +13,9 @@ implementations mirror the paper's versions:
   'coo'    : dispatch/combine routed through repro.core COO SpMM (the
              paper's library doing the work; numerically identical to
              'sort', exercised in tests + MoE benchmarks).
+  'bsr'    : the same products as BSR SpMM — the dispatch matrix laid out
+             as 8x8 blocks straight from the routing indices, so the MXU
+             block-tile lane (kernels/bsr_spmm.py) can run MoE dispatch.
 
 All paths share the same router, capacity, and renormalisation so the
 auto-tuner can switch them per (config, shape) without changing results.
@@ -89,6 +92,8 @@ def moe_ffn(p, x, cfg, mcfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
         y, aux = _moe_onehot(p, x, cfg, mcfg)
     elif impl == "coo":
         y, aux = _moe_coo(p, x, cfg, mcfg)
+    elif impl == "bsr":
+        y, aux = _moe_bsr(p, x, cfg, mcfg)
     elif impl == "grouped":
         y, aux = _moe_grouped(p, x, cfg, mcfg)
     else:
@@ -275,6 +280,65 @@ def _moe_coo(p, x, cfg, mcfg):
     # for the scatter-add plain impl (Algorithm 1 has no order requirement).
     w = jnp.where(keep, w_s, 0.0).astype(h.dtype)
     P_comb = COO(t_s.astype(jnp.int32), slot.astype(jnp.int32), w, (T, E * C + 1))
+    h_pad = jnp.concatenate([h, jnp.zeros((1, D), h.dtype)], axis=0)
+    y = SparseOperator(P_comb) @ h_pad
+    return y.astype(x.dtype), aux
+
+
+# -------------------------------------------------------------- bsr path ----
+
+def _moe_bsr(p, x, cfg, mcfg):
+    """Dispatch/combine as repro.core BSR SpMM — the MXU block-tile lane.
+
+    Same slot assignment as 'sort'/'coo'; the (E*C, T) dispatch and
+    (T, E*C+1) combine matrices are laid out as 8x8 blocks directly from the
+    routing indices (no host-side conversion, trace-safe): slots are unique
+    per kept token, so every entry owns one (block-row, lane) cell and the
+    unused lanes keep the ``bcol = -1`` pad sentinel. Products go through
+    ``SparseOperator`` like the 'coo' lane, so the ambient policy picks the
+    bsr backend (plain gather-einsum or the scalar-prefetched block grid).
+    """
+    from repro.core.formats import BSR
+    from repro.core.operator import SparseOperator
+
+    T, D = x.shape
+    E, K = mcfg.n_experts, mcfg.top_k
+    C = _capacity(T, K, E, mcfg.capacity_factor)
+    topw, tope, aux = _route(p, x, mcfg)
+    slot, t_s, w_s, keep = _dispatch_indices(tope, topw, T, E, K, C)
+    bs = 8  # _capacity rounds C (hence E*C) to a multiple of 8
+
+    # dispatch P: (E*C, T). slot rows are unique, so lane = slot % bs is
+    # collision-free; dropped entries (slot = E*C) land in the extra block
+    # row sliced off below.
+    nbr_d = E * C // bs
+    br, lane = slot // bs, slot % bs
+    bcols_d = jnp.full((nbr_d + 1, bs), -1, jnp.int32).at[br, lane].set(
+        (t_s // bs).astype(jnp.int32))
+    ones = jnp.where(keep, 1.0, 0.0).astype(x.dtype)
+    blocks_d = jnp.zeros((nbr_d + 1, bs, bs, bs), x.dtype).at[
+        br, lane, lane, t_s % bs].set(ones)
+    P_disp = BSR(bcols_d[:nbr_d], blocks_d[:nbr_d], (E * C, T))
+    xe = (SparseOperator(P_disp) @ x).reshape(E, C, D)
+
+    h = _experts_ffn(p["experts"], xe).reshape(E * C, D)
+
+    # combine (P*w)^T: (T, E*C+1). Un-sort slots/weights back to the flat
+    # (token, k) layout, so token t's K entries own K distinct lanes of its
+    # block row; dropped entries keep weight 0 against the overflow column.
+    order = jnp.argsort(tope.reshape(-1), stable=True)
+    slot_o = jnp.zeros((T * K,), jnp.int32).at[order].set(slot.astype(jnp.int32))
+    w_o = jnp.zeros((T * K,), jnp.float32).at[order].set(
+        jnp.where(keep, w_s, 0.0))
+    i = jnp.arange(T * K, dtype=jnp.int32)
+    t, k = i // K, i % K
+    j = (t % bs) * K + k
+    nbr_c = -(-T // bs)
+    bcols_c = jnp.full((nbr_c, bs * K), -1, jnp.int32).at[t // bs, j].set(
+        slot_o // bs)
+    blocks_c = jnp.zeros((nbr_c, bs * K, bs, bs), h.dtype).at[
+        t // bs, j, t % bs, slot_o % bs].set(w_o.astype(h.dtype))
+    P_comb = BSR(bcols_c, blocks_c, (T, E * C + 1))
     h_pad = jnp.concatenate([h, jnp.zeros((1, D), h.dtype)], axis=0)
     y = SparseOperator(P_comb) @ h_pad
     return y.astype(x.dtype), aux

@@ -1,0 +1,107 @@
+"""Attention kernel contracts: asymmetric value heads and the BSR-executed
+block-sparse mask, against dense numpy oracles (fast lane — no model builds).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+def _mla_style_qkv(B=2, Sq=1, Skv=24, Hq=4, Hkv=2, hd=16, hdv=24, seed=0):
+    """Asymmetric value heads (hdv != hd), the MLA-style cache layout both
+    attention paths must support."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, hdv), jnp.float32)
+    return q, k, v
+
+
+def _dense_attention_ref(q, k, v, pos):
+    """Numpy oracle: full softmax over cache[0..pos], GQA head grouping."""
+    B, Sq, Hq, hd = q.shape
+    Hkv, hdv = k.shape[2], v.shape[-1]
+    G = Hq // Hkv
+    qg = np.asarray(q, np.float64).reshape(B, Sq, Hkv, G, hd)
+    s = np.einsum("bqhgd,bshd->bqhgs", qg, np.asarray(k, np.float64))
+    s /= np.sqrt(hd)
+    s[..., pos + 1:] = -np.inf
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bqhgs,bshd->bqhgd", p, np.asarray(v, np.float64))
+    return o.reshape(B, Sq, Hq, hdv)
+
+
+def test_decode_and_chunked_value_head_dim():
+    """decode_attention and chunked_attention agree with the dense oracle —
+    and with each other — when hdv != hd (regression: decode reshaped its
+    output with the *query* head dim, crashing or garbling MLA-style caches
+    whose value heads are wider)."""
+    from repro.models.attention import chunked_attention, decode_attention
+
+    q, k, v = _mla_style_qkv()
+    pos = 17  # decode attends to cache[0..pos]; chunked gets the same slice
+    want = _dense_attention_ref(q, k, v, pos)
+    got_dec = np.asarray(decode_attention(q, k, v, pos))
+    assert got_dec.shape == want.shape  # (B, 1, Hq, hdv), not (..., hd)
+    np.testing.assert_allclose(got_dec, want, rtol=1e-4, atol=1e-5)
+    got_chk = np.asarray(chunked_attention(
+        q, k[:, : pos + 1], v[:, : pos + 1], causal=True, q_offset=pos,
+        q_chunk=8, kv_chunk=8))
+    np.testing.assert_allclose(got_chk, want, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got_dec, got_chk, rtol=1e-4, atol=1e-5)
+
+
+def _dense_block_masked_ref(q, k, v, bcols, bs):
+    """Numpy oracle for block-masked attention: softmax over exactly the
+    keys the block layout admits."""
+    B, S, H, hd = q.shape
+    hdv = v.shape[-1]
+    nb = S // bs
+    allow = np.zeros((S, S), bool)
+    for r in range(nb):
+        for c in bcols[r]:
+            if c >= 0:
+                allow[r * bs:(r + 1) * bs, c * bs:(c + 1) * bs] = True
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q, np.float64),
+                  np.asarray(k, np.float64)) / np.sqrt(hd)
+    s = np.where(allow[None, None], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    o = np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v, np.float64))
+    return o.reshape(B, S, H, hdv)
+
+
+@pytest.mark.parametrize("pattern,band", [("diag", 0), ("banded", 1)])
+def test_block_sparse_attention_matches_dense_mask(pattern, band):
+    """The BSR-executed block mask agrees with the dense masked oracle for
+    both supported patterns."""
+    from repro.models.attention import (block_attention_bcols,
+                                        block_sparse_attention)
+
+    B, S, H, hd, bs = 2, 32, 3, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    bcols = block_attention_bcols(S, bs, pattern=pattern, band=band)
+    want = _dense_block_masked_ref(q, k, v, bcols, bs)
+    got = np.asarray(block_sparse_attention(q, k, v, block_size=bs,
+                                            pattern=pattern, band=band))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_block_attention_bcols_contract():
+    """Layout invariants: diag is width-1, banded clips edges to -1, and
+    non-divisible seq_len is rejected."""
+    from repro.models.attention import block_attention_bcols
+
+    d = block_attention_bcols(32, 8, pattern="diag")
+    np.testing.assert_array_equal(d, np.arange(4)[:, None])
+    b = block_attention_bcols(32, 8, pattern="banded", band=1)
+    assert b.shape == (4, 3)
+    assert b[0, 0] == -1 and b[-1, -1] == -1  # clipped corners
+    np.testing.assert_array_equal(b[1], [0, 1, 2])
+    with pytest.raises(ValueError):
+        block_attention_bcols(30, 8)
+    with pytest.raises(ValueError):
+        block_attention_bcols(32, 8, pattern="checker")

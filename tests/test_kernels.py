@@ -124,6 +124,25 @@ def test_bsr_spmm_matches_dense_oracle(dtype, bs):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+def test_bsr_spmm_out_of_range_bcol_is_masked():
+    """An id >= nbcols must behave exactly like the -1 pad sentinel —
+    masked, contributing nothing — not be clipped to the last valid tile
+    (regression: the old clamp streamed tile nbcols-1 and silently
+    accumulated the wrong X block)."""
+    bs, nbcols, nf = 8, 3, 5
+    rng = np.random.default_rng(13)
+    X = jnp.asarray(rng.standard_normal((nbcols * bs, nf)), jnp.float32)
+    blocks = jnp.asarray(rng.standard_normal((2, 2, bs, bs)), jnp.float32)
+    poisoned = jnp.asarray([[0, nbcols], [nbcols + 7, 2]], jnp.int32)
+    masked = jnp.asarray([[0, -1], [-1, 2]], jnp.int32)
+    got = np.asarray(bsr_spmm(poisoned, blocks, X))
+    want = np.asarray(bsr_spmm(masked, blocks, X))
+    np.testing.assert_array_equal(got, want)
+    # and the masked lanes really contribute nothing
+    ref_rows = np.asarray(ref.bsr_spmm_ref(masked, blocks, X))
+    np.testing.assert_allclose(got, ref_rows, rtol=2e-4, atol=2e-5)
+
+
 def test_kernels_jit_cacheable():
     """Same shapes => no retrace (the ArmPL-handle analogy: compile once)."""
     s = _mat(128, 128, 10, "banded")

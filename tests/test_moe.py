@@ -1,4 +1,4 @@
-"""MoE dispatch: the three implementations (onehot / sort / coo) must agree
+"""MoE dispatch: the implementations (onehot / sort / coo / bsr) must agree
 exactly — the Morpheus claim applied to MoE: switching the sparse
 representation changes performance, never results."""
 import dataclasses
@@ -24,7 +24,7 @@ def _setup(T=64, seed=0, **moe_kw):
     return p, x, mcfg
 
 
-@pytest.mark.parametrize("impl", ["onehot", "coo"])
+@pytest.mark.parametrize("impl", ["onehot", "coo", "bsr"])
 def test_dispatch_impls_match_sort(impl):
     p, x, mcfg = _setup(T=96, capacity_factor=4.0)
     y_sort, aux_sort = moe_mod.moe_ffn(p, x, CFG, dataclasses.replace(mcfg, dispatch_impl="sort"))

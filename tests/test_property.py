@@ -117,6 +117,48 @@ def test_csr_ell_sell_conversion_idempotent(s):
                                   np.asarray(chain.to_dense()))
 
 
+@settings(max_examples=20, deadline=None)
+@given(sparse_matrices(max_n=40), st.sampled_from([8, 16, 32]))
+def test_bsr_matches_scipy_bit_for_bit(s, bs):
+    """``to_bsr`` agrees with scipy's own blocking *bit-for-bit*: every
+    stored (block-row, block-col) pair and every block's values match
+    ``scipy.sparse.bsr_matrix`` of the zero-padded matrix, pad lanes carry
+    the ``bcol = -1`` sentinel with all-zero blocks, and the dense view
+    reconstructs the matrix exactly."""
+    from repro.core.convert import to_bsr
+
+    s = s.copy()
+    # f32-representable data: the container stores f32 (x64 is off), so
+    # pre-quantising makes every comparison below exact, not approximate
+    s.data = s.data.astype(np.float32).astype(np.float64)
+    s.eliminate_zeros()
+    A = to_bsr(s, dtype=jnp.float64, block_size=bs)
+    nbr, nbc = -(-s.shape[0] // bs), -(-s.shape[1] // bs)
+    pad = sp.lil_matrix((nbr * bs, nbc * bs), dtype=np.float64)
+    pad[: s.shape[0], : s.shape[1]] = s
+    spb = pad.tobsr(blocksize=(bs, bs))
+    bcols = np.asarray(A.bcols)
+    blocks = np.asarray(A.blocks, np.float64)
+    assert bcols.shape[0] == nbr
+    for br in range(nbr):
+        want = {int(c): spb.data[j]
+                for j, c in enumerate(spb.indices[spb.indptr[br]:spb.indptr[br + 1]],
+                                      start=int(spb.indptr[br]))}
+        got = {int(c): blocks[br, w]
+               for w, c in enumerate(bcols[br]) if c >= 0}
+        assert set(got) == set(want), (br, sorted(got), sorted(want))
+        for c, blk in want.items():
+            # float64 storage: the scipy round-trip must be lossless
+            np.testing.assert_array_equal(got[c], blk)
+        for w, c in enumerate(bcols[br]):
+            if c < 0:
+                assert c == -1  # the one pad sentinel, nothing else
+                assert not blocks[br, w].any()
+    np.testing.assert_array_equal(
+        np.asarray(A.to_dense(), np.float64)[: s.shape[0], : s.shape[1]],
+        s.toarray())
+
+
 # --------------------------------------------------------- MatrixMarket ----
 
 
@@ -210,8 +252,9 @@ def test_features_identical_across_containers(s):
     s = s.copy()
     s.eliminate_zeros()
     ref = extract_features(s)
-    for fmt in ["coo", "csr", "dia", "ell", "sell"]:
+    for fmt in ["coo", "csr", "dia", "ell", "sell", "bsr"]:
         # float64 containers: conversion is exact, so logical nonzeros match
+        # (incl. block_density32 — BSR zero-padded tiles must be undone)
         f = extract_features(from_dense(s, fmt, dtype=jnp.float64))
         assert f == ref, (fmt, f, ref)
 

@@ -357,6 +357,38 @@ def test_tiny_vmem_policy_changes_strategy_costs():
         assert est_tiled >= est_res, (fmt, est_tiled, est_res)
 
 
+def test_predict_selects_bsr_on_block_matrix():
+    """A scattered 32-aligned block matrix defeats DIA (hundreds of occupied
+    diagonals) and pads ELL badly; the block-density-aware cost row must put
+    BSR on top, and predict-mode must retarget to a working BSR operator —
+    the acceptance criterion that ``tune(mode="predict")`` can select the
+    block lane."""
+    s = M.block_random(512, bs=32, block_density=0.05, seed=8)
+    pred = predict_format(extract_features(s))
+    assert pred.key.format == "bsr"
+    tuned = as_operator(s, "csr").tune(mode="predict")
+    assert tuned.format == "bsr"
+    x = np.ones(512, np.float32)
+    np.testing.assert_allclose(np.asarray(tuned @ x), s @ x,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bsr_block_fill_guard_mirrors_selector():
+    """The BSR block-fill guard agrees bit-for-bit between the run-first
+    tuner (``structural_skip``) and the zero-run selector (``infeasible``)
+    — verdict AND reason string — on both sides of the threshold."""
+    from repro.core import select, structural_skip
+
+    dense_blocks = M.block_random(96, bs=32, block_density=0.3, seed=8)
+    banded = M.banded(96, 4, seed=0)  # fill ~0.11 < 0.125: refused
+    for s, feasible in ((dense_blocks, True), (banded, False)):
+        f = extract_features(s)
+        skip, infeas = structural_skip(s, "bsr"), select.infeasible(f, "bsr")
+        assert skip == infeas, (skip, infeas)
+        assert (skip is None) == feasible
+    assert structural_skip(banded, "bsr").startswith("block_fill=")
+
+
 def test_hpcg_predict_fast_path(kernel_dispatch_counter):
     """apps/hpcg.py tune_mode="predict": phase-3 setup executes no kernels
     until the solves start, and the pipeline still validates."""
